@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks (interpret-mode wall times are NOT TPU times —
+the derived column reports the roofline-bound TPU v5e time instead)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+PEAK = 197e12
+
+
+def _time(fn, n=3):
+    fn()  # warm/compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn()
+    jnp = out.block_until_ready() if hasattr(out, "block_until_ready") else out
+    return (time.time() - t0) / n
+
+
+def run():
+    print("\n== kernel benches (CPU interpret; derived = TPU roofline bound) ==")
+    rng = np.random.default_rng(0)
+    rows = []
+
+    m = n = k = 512
+    a = jnp.asarray(rng.integers(-127, 127, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 127, (n, k)), jnp.int8)
+    dt = _time(lambda: ops.int8_gemm(a, b))
+    flops = 2 * m * n * k
+    rows.append(("int8_gemm_512", dt * 1e6, f"tpu_bound_us={flops/ (2*PEAK) * 1e6:.2f}"))
+
+    x = jnp.asarray(rng.standard_normal((256, 512)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((256, 512)) * 0.1, jnp.float32)
+    bb = jnp.zeros((256,), jnp.float32)
+    dt = _time(lambda: ops.af_linear(x, w, bb))
+    flops = 2 * 256 * 256 * 512
+    rows.append(("af_gemm_256x512", dt * 1e6, f"tpu_bound_us={flops/PEAK*1e6:.2f}"))
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 512, 64)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    dt = _time(lambda: ops.flash_attention(q, kk, v))
+    flops = 4 * 1 * 4 * 512 * 512 * 64 * 0.5
+    rows.append(("flash_attn_512", dt * 1e6, f"tpu_bound_us={flops/PEAK*1e6:.2f}"))
+
+    for name, us, derived in rows:
+        print(f"{name:20s} {us:10.0f} us/call   {derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

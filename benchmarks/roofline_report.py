@@ -1,0 +1,32 @@
+"""Roofline summary from the dry-run sweep artifacts (§Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.models.config import SHAPES
+from repro.roofline.analysis import roofline_report, roofline_terms
+
+
+def run():
+    path = os.path.join(os.path.dirname(__file__), "..", "dryrun_singlepod.json")
+    if not os.path.exists(path):
+        print("\n(no dryrun_singlepod.json — run `python -m repro.launch.dryrun --all` first)")
+        return []
+    cells = json.load(open(path))
+    print("\n== Roofline (single-pod 16x16, from the dry-run) ==")
+    print(roofline_report(cells))
+    rows = []
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        t = roofline_terms(c, get_config(c["arch"]), SHAPES[c["shape"]])
+        rows.append((f"roofline_{c['arch']}_{c['shape']}",
+                     t["roofline_bound_s"] * 1e6,
+                     f"dominant={t['dominant']},mfu_bound={t['mfu_bound']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

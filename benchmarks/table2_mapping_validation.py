@@ -1,0 +1,30 @@
+"""Table 2 analogue: simulation-based validation of IR-accelerator mappings.
+
+Relative Frobenius error over N random inputs per (accelerator, operation).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core.validate import validate_mappings
+
+N = int(os.environ.get("REPRO_TABLE2_N", "25"))   # paper used 100
+
+
+def run():
+    print(f"\n== Table 2: mapping validation ({N} random inputs each) ==")
+    print(f"{'Accelerator':12s} {'Operation':14s} {'Avg. Err.':>10s} {'Std. Dev.':>10s}")
+    t0 = time.time()
+    rows = validate_mappings(n_inputs=N)
+    dt = time.time() - t0
+    out = []
+    for r in rows:
+        print(f"{r.accelerator:12s} {r.operation:14s} {r.avg_err:10.2%} {r.std_err:10.2%}")
+        out.append((f"table2_{r.accelerator}_{r.operation}",
+                    dt * 1e6 / len(rows) / N, f"avg_err={r.avg_err:.4f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Table 3 analogue: formal verification of the FlexASR MaxPool mapping.
+
+No SMT solver is available offline (DESIGN.md §3), so instead of BMC/CHC we
+run a *complete finite-domain* equivalence check: enumerate every assignment
+of a small value lattice to the fragment inputs (decidable and exhaustive
+over that domain), plus a randomized check for larger shapes. Reported like
+the paper: verification time vs matrix dimension.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import ir, validate
+
+
+def _case(rows, cols):
+    T = ir.Var("T", (rows, cols))
+    return validate.VT2Case(
+        f"maxpool-{rows}x{cols}",
+        ir.call("reduce_max", ir.call("windows", T, wh=2, ww=1, sh=2, sw=1), axis=(2, 3)),
+        ir.call("fasr_load", ir.call("fasr_maxpool", ir.call("fasr_store", T))),
+        {"T": (rows, cols)},
+    )
+
+
+def run():
+    print("\n== Table 3: formal verification of the FlexASR MaxPool mapping ==")
+    print(f"{'Matrix dim.':12s} {'method':26s} {'time (s)':>9s} {'result':>8s}")
+    out = []
+    # exhaustive (complete over the lattice) for small dims
+    for rows, cols, lattice in ((2, 2, (-1.0, 0.0, 1.0)),
+                                (2, 4, (-1.0, 1.0)),
+                                (4, 2, (-1.0, 1.0))):
+        case = _case(rows, cols)
+        t0 = time.time()
+        ok, n = validate.vt2_exhaustive(case, lattice)
+        dt = time.time() - t0
+        print(f"{rows}x{cols:<10d} exhaustive({len(lattice)}^{rows*cols})"
+              f"{'':6s} {dt:9.2f} {str(ok):>8s}")
+        out.append((f"table3_exh_{rows}x{cols}", dt * 1e6 / n, f"assignments={n}"))
+    # randomized for the paper's larger dims
+    for rows, cols in ((2, 16), (4, 16), (4, 32), (8, 64), (16, 64)):
+        case = _case(rows, cols)
+        t0 = time.time()
+        ok = validate.vt2_check(case, n=200)
+        dt = time.time() - t0
+        print(f"{rows}x{cols:<10d} randomized(200)          {dt:9.2f} {str(ok):>8s}")
+        out.append((f"table3_rand_{rows}x{cols}", dt * 1e6 / 200, "n=200"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Serving example: prefill a prompt, then batched autoregressive decode
+with the KV cache, on a reduced tinyllama config.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import api
+
+cfg = get_smoke_config("tinyllama-1.1b")
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+
+B, PROMPT, GEN = 4, 16, 24
+rng = np.random.default_rng(0)
+prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, PROMPT)), jnp.int32)
+
+cache = api.init_cache(cfg, B, PROMPT + GEN)
+t0 = time.time()
+logits, cache = api.prefill(cfg, params, prompt, cache)
+print(f"prefill {PROMPT} tokens x{B}: {time.time()-t0:.2f}s")
+
+decode = jax.jit(lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos),
+                 static_argnums=())
+tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+out_tokens = [tok]
+t0 = time.time()
+for i in range(GEN - 1):
+    logits, cache = api.decode_step(cfg, params, cache, tok, PROMPT + i)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out_tokens.append(tok)
+dt = time.time() - t0
+gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+print(f"decoded {GEN-1} steps x{B} seqs in {dt:.2f}s ({dt/(GEN-1)*1e3:.0f} ms/step)")
+print("generations:\n", gen)
+print("OK")

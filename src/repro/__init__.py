@@ -1,0 +1,4 @@
+"""D2A-JAX: formal software/hardware interface (ILA) framework for
+accelerator-backed LM systems. See README.md / DESIGN.md."""
+
+__version__ = "0.1.0"

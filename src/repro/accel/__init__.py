@@ -1,0 +1,1 @@
+"""Accelerator ILA models (FlexASR / HLSCNN / VTA) + custom numerics."""

@@ -1,0 +1,534 @@
+"""FlexASR accelerator ILA (Tambe et al., ISSCC'21) — JAX model.
+
+FlexASR is a speech/NLP accelerator with coarse-grained operations (linear
+layer, LSTM, temporal max/mean pooling, layer norm, attention) computing in
+the **AdaptivFloat** custom numeric. Its software/hardware interface is MMIO:
+the driver writes 128-bit words to configure, load data, and trigger
+functions (Figure 1 of the paper). The ILA lifts each MMIO command to an
+instruction over architectural state (Figure 6).
+
+Architectural state (sizes are the model's parameters, like the real device's
+SRAM sizing):
+
+  gb_large   (GB_ROWS, V)  global buffer, V=16 lanes (128b words of fp8 AF)
+  pe_w       (MAX_OUT, MAX_IN)   PE weight memory        (linear / LSTM Wi)
+  pe_wh      (MAX_4H, MAX_H)     recurrent weight memory (LSTM Wh)
+  pe_b       (MAX_OUT,)          bias memory
+  h_state/c_state (MAX_H,)       LSTM hidden/cell state
+  + configuration registers (dims, base addresses, activation mode,
+    AdaptivFloat exponent biases, function select)
+
+Instruction set (opcode == decoded MMIO address range):
+
+  WRITE_V      store one V-lane row into gb_large[addr]
+  WRITE_W      store one V-lane row slice into pe_w
+  WRITE_WH     store one V-lane row slice into pe_wh
+  WRITE_B      store one V-lane slice into pe_b
+  PE_CFG_RNN_LAYER_SIZING   num_in / num_out
+  PE_CFG_MNGR               is_bias, base addresses
+  PE_CFG_ACT_MNGR           activation function select
+  GB_CFG_MMNGR              gb base_in / base_out
+  GB_CFG_GB_CONTROL         mode (linear/lstm/maxpool/meanpool/layernorm/attn),
+                            num_timestep
+  CFG_NUMERICS              AdaptivFloat exponent biases (wgt/act/out)
+  FN_START                  trigger the configured function
+  (read-out is host-side: slice gb_large from final state, like MMIO reads)
+
+Semantics of FN_START in AdaptivFloat: operands are quantized to the AF
+lattice with the configured exponent biases, MACs accumulate in fp32 (the
+PEs accumulate wide), and results are re-quantized to AF before being stored
+back to the global buffer — matching the real datapath closely enough that
+operation-level relative errors reproduce Table 2's magnitudes.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ila import ILA, Command, Fragment, IRAccelMapping, REGISTRY
+from . import numerics
+from .numerics import AdaptivFloatSpec
+
+V = 16            # interface lanes (128-bit MMIO word of 8-bit AF values)
+GB_ROWS = 4096    # global buffer rows
+MAX_IN = 128
+MAX_OUT = 256     # also holds LSTM's 4H gate rows
+MAX_H = 64
+MAX_TS = 128
+AF = AdaptivFloatSpec(n_bits=8, n_exp=3)
+
+# opcodes (the "MMIO address map")
+WRITE_V = 0x10
+WRITE_W = 0x11
+WRITE_WH = 0x12
+WRITE_B = 0x13
+PE_CFG_RNN_LAYER_SIZING = 0x20
+PE_CFG_MNGR = 0x21
+PE_CFG_ACT_MNGR = 0x22
+GB_CFG_MMNGR = 0x23
+GB_CFG_GB_CONTROL = 0x24
+CFG_NUMERICS = 0x25
+FN_START = 0x30
+
+MODE_LINEAR = 1
+MODE_LSTM = 2
+MODE_MAXPOOL = 3
+MODE_MEANPOOL = 4
+MODE_LAYERNORM = 5
+MODE_ATTENTION = 6
+
+ACT_NONE = 0
+ACT_RELU = 1
+ACT_SIGMOID = 2
+ACT_TANH = 3
+
+flexasr = ILA("flexasr", vwidth=V)
+
+flexasr.state("gb_large", lambda: jnp.zeros((GB_ROWS + MAX_TS * (MAX_IN // V), V), jnp.float32))
+flexasr.state("pe_w", lambda: jnp.zeros((MAX_OUT, MAX_IN), jnp.float32))
+flexasr.state("pe_wh", lambda: jnp.zeros((MAX_OUT, MAX_H), jnp.float32))
+flexasr.state("pe_b", lambda: jnp.zeros((MAX_OUT,), jnp.float32))
+flexasr.state("h_state", lambda: jnp.zeros((MAX_H,), jnp.float32))
+flexasr.state("c_state", lambda: jnp.zeros((MAX_H,), jnp.float32))
+for reg in (
+    "num_in", "num_out", "num_ts", "is_bias", "act_mode", "base_in",
+    "base_out", "base_aux", "mode", "exp_bias_w", "exp_bias_a", "exp_bias_o",
+    "num_aux",
+):
+    flexasr.state(reg, (lambda: jnp.zeros((), jnp.float32)))
+
+
+def _set_row(buf, addr, data):
+    return jax.lax.dynamic_update_slice(buf, data[None, :], (addr, 0))
+
+
+@flexasr.instruction("write_v", WRITE_V, "store one V-lane row into gb_large")
+def _write_v(st, addr, data):
+    st = dict(st)
+    st["gb_large"] = _set_row(st["gb_large"], addr, data)
+    return st
+
+
+@flexasr.instruction("write_w", WRITE_W, "store one V-lane slice into pe weight row")
+def _write_w(st, addr, data):
+    # addr encodes row * (MAX_IN//V) + col_block
+    st = dict(st)
+    row = addr // (MAX_IN // V)
+    col = (addr % (MAX_IN // V)) * V
+    st["pe_w"] = jax.lax.dynamic_update_slice(st["pe_w"], data[None, :], (row, col))
+    return st
+
+
+@flexasr.instruction("write_wh", WRITE_WH, "store one V-lane slice into recurrent weight row")
+def _write_wh(st, addr, data):
+    st = dict(st)
+    row = addr // (MAX_H // V)
+    col = (addr % (MAX_H // V)) * V
+    st["pe_wh"] = jax.lax.dynamic_update_slice(st["pe_wh"], data[None, :], (row, col))
+    return st
+
+
+@flexasr.instruction("write_b", WRITE_B, "store one V-lane slice of bias")
+def _write_b(st, addr, data):
+    st = dict(st)
+    st["pe_b"] = jax.lax.dynamic_update_slice(st["pe_b"], data, (addr * V,))
+    return st
+
+
+def _cfg(names):
+    def update(st, addr, data):
+        st = dict(st)
+        for i, n in enumerate(names):
+            st[n] = data[i]
+        return st
+
+    return update
+
+
+flexasr.instruction("pe_cfg_rnn_layer_sizing", PE_CFG_RNN_LAYER_SIZING)(
+    _cfg(["num_in", "num_out"])
+)
+flexasr.instruction("pe_cfg_mngr", PE_CFG_MNGR)(_cfg(["is_bias"]))
+flexasr.instruction("pe_cfg_act_mngr", PE_CFG_ACT_MNGR)(_cfg(["act_mode"]))
+flexasr.instruction("gb_cfg_mmngr", GB_CFG_MMNGR)(_cfg(["base_in", "base_out", "base_aux", "num_aux"]))
+flexasr.instruction("gb_cfg_gb_control", GB_CFG_GB_CONTROL)(_cfg(["mode", "num_ts"]))
+flexasr.instruction("cfg_numerics", CFG_NUMERICS)(
+    _cfg(["exp_bias_w", "exp_bias_a", "exp_bias_o"])
+)
+
+
+# -- FN_START: the coarse compute, in AdaptivFloat ---------------------------
+
+
+def _afq(x, bias):
+    return numerics.af_quantize(x, AF, exp_bias=bias)
+
+
+def _gb_read(st, base, rows):
+    """Read ``rows`` consecutive V-rows from gb_large starting at ``base``
+    (static row count, dynamic base)."""
+    return jax.lax.dynamic_slice(st["gb_large"], (base.astype(jnp.int32), 0), (rows, V))
+
+
+def _gb_matrix(st, base, n_vec_rows):
+    """View a (MAX_TS, MAX_IN) tensor stored as MAX_TS*(MAX_IN//V) rows."""
+    rows = _gb_read(st, base, MAX_TS * (MAX_IN // V))
+    return rows.reshape(MAX_TS, MAX_IN)
+
+
+def _act(y, mode):
+    return jax.lax.switch(
+        mode.astype(jnp.int32),
+        [
+            lambda v: v,
+            lambda v: jnp.maximum(v, 0.0),
+            lambda v: 1.0 / (1.0 + jnp.exp(-v)),
+            lambda v: jnp.tanh(v),
+        ],
+        y,
+    )
+
+
+def _mask1(n, size):
+    return (jnp.arange(size) < n.astype(jnp.int32)).astype(jnp.float32)
+
+
+def _fn_linear(st):
+    X = _gb_matrix(st, st["base_in"], None)                     # (MAX_TS, MAX_IN)
+    m_in = _mask1(st["num_in"], MAX_IN)
+    m_out = _mask1(st["num_out"], MAX_OUT)
+    m_ts = _mask1(st["num_ts"], MAX_TS)
+    Wq = _afq(st["pe_w"], st["exp_bias_w"]) * m_out[:, None] * m_in[None, :]
+    Xq = _afq(X, st["exp_bias_a"]) * m_ts[:, None] * m_in[None, :]
+    b = st["pe_b"][:MAX_OUT] * m_out * st["is_bias"]
+    Y = Xq @ Wq.T + b[None, :]
+    Y = _act(Y, st["act_mode"])
+    Y = _afq(Y, st["exp_bias_o"]) * m_ts[:, None] * m_out[None, :]
+    # store back to gb at base_out, MAX_IN-wide rows (num_out <= MAX_IN lanes used)
+    out_rows = Y[:, :MAX_IN].reshape(MAX_TS * (MAX_IN // V), V)
+    st = dict(st)
+    st["gb_large"] = jax.lax.dynamic_update_slice(
+        st["gb_large"], out_rows, (st["base_out"].astype(jnp.int32), 0)
+    )
+    return st
+
+
+def _fn_lstm(st):
+    X = _gb_matrix(st, st["base_in"], None)                     # (MAX_TS, MAX_IN)
+    m_in = _mask1(st["num_in"], MAX_IN)
+    H = MAX_H
+    m_h = _mask1(st["num_out"], H)
+    Wi = _afq(st["pe_w"], st["exp_bias_w"]) * m_in[None, :]     # (4H, MAX_IN)
+    Wh = _afq(st["pe_wh"], st["exp_bias_w"]) * m_h[None, :]     # (4H, H)
+    b = st["pe_b"] * st["is_bias"]
+
+    def cell(carry, x_t):
+        h, c = carry
+        xq = _afq(x_t, st["exp_bias_a"]) * m_in
+        gates = Wi[: 4 * H] @ xq + Wh[: 4 * H] @ h + b[: 4 * H]
+        i = jax.nn.sigmoid(gates[0 * H : 1 * H])
+        f = jax.nn.sigmoid(gates[1 * H : 2 * H])
+        g = jnp.tanh(gates[2 * H : 3 * H])
+        o = jax.nn.sigmoid(gates[3 * H : 4 * H])
+        c2 = _afq(f * c + i * g, st["exp_bias_o"]) * m_h
+        h2 = _afq(o * jnp.tanh(c2), st["exp_bias_o"]) * m_h
+        return (h2, c2), h2
+
+    (h_f, c_f), hs = jax.lax.scan(cell, (st["h_state"], st["c_state"]), X)
+    m_ts = _mask1(st["num_ts"], MAX_TS)
+    hs = hs * m_ts[:, None]
+    out = jnp.zeros((MAX_TS, MAX_IN), jnp.float32).at[:, :H].set(hs)
+    out_rows = out.reshape(MAX_TS * (MAX_IN // V), V)
+    st = dict(st)
+    st["h_state"], st["c_state"] = h_f, c_f
+    st["gb_large"] = jax.lax.dynamic_update_slice(
+        st["gb_large"], out_rows, (st["base_out"].astype(jnp.int32), 0)
+    )
+    return st
+
+
+def _fn_pool(st, kind):
+    X = _gb_matrix(st, st["base_in"], None)            # (MAX_TS, MAX_IN) rows = timesteps
+    # temporal pooling: pairwise over timestep axis (window (2,1) stride (2,1))
+    pairs = X.reshape(MAX_TS // 2, 2, MAX_IN)
+    Y = jnp.max(pairs, axis=1) if kind == "max" else jnp.mean(pairs, axis=1)
+    Y = _afq(Y, st["exp_bias_o"])
+    m_ts = _mask1(jnp.ceil(st["num_ts"] / 2), MAX_TS // 2)
+    m_in = _mask1(st["num_in"], MAX_IN)
+    Y = Y * m_ts[:, None] * m_in[None, :]
+    out = jnp.zeros((MAX_TS, MAX_IN), jnp.float32).at[: MAX_TS // 2].set(Y)
+    out_rows = out.reshape(MAX_TS * (MAX_IN // V), V)
+    st = dict(st)
+    st["gb_large"] = jax.lax.dynamic_update_slice(
+        st["gb_large"], out_rows, (st["base_out"].astype(jnp.int32), 0)
+    )
+    return st
+
+
+def _fn_layernorm(st):
+    X = _gb_matrix(st, st["base_in"], None)
+    m_in = _mask1(st["num_in"], MAX_IN)
+    n = st["num_in"]
+    Xq = _afq(X, st["exp_bias_a"]) * m_in[None, :]
+    mu = jnp.sum(Xq, axis=-1, keepdims=True) / n
+    var = jnp.sum(((Xq - mu) * m_in[None, :]) ** 2, axis=-1, keepdims=True) / n
+    gamma = st["pe_w"][0, :MAX_IN]
+    beta = st["pe_b"][:MAX_IN]
+    Y = ((Xq - mu) / jnp.sqrt(var + 1e-5) * gamma[None, :] + beta[None, :]) * m_in[None, :]
+    Y = _afq(Y, st["exp_bias_o"]) * m_in[None, :]
+    m_ts = _mask1(st["num_ts"], MAX_TS)
+    Y = Y * m_ts[:, None]
+    out_rows = Y.reshape(MAX_TS * (MAX_IN // V), V)
+    st = dict(st)
+    st["gb_large"] = jax.lax.dynamic_update_slice(
+        st["gb_large"], out_rows, (st["base_out"].astype(jnp.int32), 0)
+    )
+    return st
+
+
+def _fn_attention(st):
+    # Q at base_in (num_ts rows), K at base_aux, V at base_aux + MAX block
+    Q = _gb_matrix(st, st["base_in"], None)            # (MAX_TS, MAX_IN)
+    K = _gb_matrix(st, st["base_aux"], None)
+    Vv = _gb_matrix(st, st["base_aux"] + MAX_TS * (MAX_IN // V), None)
+    m_in = _mask1(st["num_in"], MAX_IN)
+    m_q = _mask1(st["num_ts"], MAX_TS)
+    m_k = _mask1(st["num_aux"], MAX_TS)
+    Qq = _afq(Q, st["exp_bias_a"]) * m_q[:, None] * m_in[None, :]
+    Kq = _afq(K, st["exp_bias_a"]) * m_k[:, None] * m_in[None, :]
+    Vq = _afq(Vv, st["exp_bias_a"]) * m_k[:, None] * m_in[None, :]
+    scores = (Qq @ Kq.T) / jnp.sqrt(st["num_in"])
+    scores = jnp.where(m_k[None, :] > 0, scores, -jnp.inf)
+    # softmax in the PE's fp accumulation, then AF re-quantized
+    p = jax.nn.softmax(scores, axis=-1)
+    p = _afq(p, jnp.zeros(()) - (2 ** AF.n_exp - 1))   # probs in [0,1]: bias pins max exp at 0
+    Y = (p @ Vq) * m_q[:, None] * m_in[None, :]
+    Y = _afq(Y, st["exp_bias_o"]) * m_q[:, None] * m_in[None, :]
+    out_rows = Y.reshape(MAX_TS * (MAX_IN // V), V)
+    st = dict(st)
+    st["gb_large"] = jax.lax.dynamic_update_slice(
+        st["gb_large"], out_rows, (st["base_out"].astype(jnp.int32), 0)
+    )
+    return st
+
+
+@flexasr.instruction("fn_start", FN_START, "trigger the configured function")
+def _fn_start(st, addr, data):
+    mode = st["mode"].astype(jnp.int32)
+    return jax.lax.switch(
+        jnp.clip(mode - 1, 0, 5),
+        [
+            _fn_linear,
+            _fn_lstm,
+            lambda s: _fn_pool(s, "max"),
+            lambda s: _fn_pool(s, "mean"),
+            _fn_layernorm,
+            _fn_attention,
+        ],
+        dict(st),
+    )
+
+
+# --------------------------------------------------------------------------
+# Driver-side fragment builders (the IR-accelerator mappings, Figure 5)
+# --------------------------------------------------------------------------
+
+
+def _rows_of(x: np.ndarray) -> np.ndarray:
+    """Marshal a (T, D) tensor into V-lane rows padded to (MAX_TS, MAX_IN)."""
+    T, D = x.shape
+    buf = np.zeros((MAX_TS, MAX_IN), np.float32)
+    buf[:T, :D] = np.asarray(x, np.float32)
+    return buf.reshape(MAX_TS * (MAX_IN // V), V)
+
+
+def _write_matrix_cmds(base: int, x: np.ndarray) -> List[Command]:
+    rows = _rows_of(x)
+    return [
+        Command(WRITE_V, base + i, tuple(rows[i])) for i in range(rows.shape[0])
+        if np.any(rows[i]) or i < (x.shape[0] * (MAX_IN // V))
+    ]
+
+
+def _write_weight_cmds(w: np.ndarray) -> List[Command]:
+    O, I = w.shape
+    cmds = []
+    for r in range(O):
+        for cb in range((I + V - 1) // V):
+            seg = np.zeros((V,), np.float32)
+            seg[: min(V, I - cb * V)] = w[r, cb * V : cb * V + min(V, I - cb * V)]
+            cmds.append(Command(WRITE_W, r * (MAX_IN // V) + cb, tuple(seg)))
+    return cmds
+
+
+def _write_wh_cmds(w: np.ndarray) -> List[Command]:
+    O, H = w.shape
+    cmds = []
+    for r in range(O):
+        for cb in range((H + V - 1) // V):
+            seg = np.zeros((V,), np.float32)
+            seg[: min(V, H - cb * V)] = w[r, cb * V : cb * V + min(V, H - cb * V)]
+            cmds.append(Command(WRITE_WH, r * (MAX_H // V) + cb, tuple(seg)))
+    return cmds
+
+
+def _write_bias_cmds(b: np.ndarray) -> List[Command]:
+    n = len(b)
+    cmds = []
+    for blk in range((n + V - 1) // V):
+        seg = np.zeros((V,), np.float32)
+        seg[: min(V, n - blk * V)] = b[blk * V : blk * V + min(V, n - blk * V)]
+        cmds.append(Command(WRITE_B, blk, tuple(seg)))
+    return cmds
+
+
+def _exp_biases(*tensors):
+    return [float(numerics.af_exp_bias(jnp.asarray(t), AF)) for t in tensors]
+
+
+def _read_matrix(st, base: int, T: int, D: int) -> jnp.ndarray:
+    rows = jax.lax.dynamic_slice(
+        st["gb_large"], (base, 0), (MAX_TS * (MAX_IN // V), V)
+    ).reshape(MAX_TS, MAX_IN)
+    return rows[:T, :D]
+
+
+BASE_IN = 0
+BASE_OUT = MAX_TS * (MAX_IN // V)
+BASE_AUX = 2 * MAX_TS * (MAX_IN // V)
+
+
+def build_linear_fragment(x, w, b, act: int = ACT_NONE):
+    """nn.dense + bias_add -> FlexASR LinearLayer fragment (Figure 5)."""
+    x, w, b = np.asarray(x), np.asarray(w), np.asarray(b)
+    T, I = x.shape
+    O = w.shape[0]
+    assert T <= MAX_TS and I <= MAX_IN and O <= MAX_OUT and O <= MAX_IN
+    bw, ba = _exp_biases(w, x)
+    ideal = x.astype(np.float32) @ w.astype(np.float32).T + b
+    (bo,) = _exp_biases(ideal)
+    cmds: List[Command] = []
+    cmds += _write_weight_cmds(w)
+    cmds += _write_bias_cmds(b)
+    cmds += _write_matrix_cmds(BASE_IN, x)
+    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (I, O)))
+    cmds.append(Command(PE_CFG_MNGR, 0, (1.0,)))
+    cmds.append(Command(PE_CFG_ACT_MNGR, 0, (float(act),)))
+    cmds.append(Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, 0, 0)))
+    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (MODE_LINEAR, T)))
+    cmds.append(Command(CFG_NUMERICS, 0, (bw, ba, bo)))
+    cmds.append(Command(FN_START))
+    return cmds, lambda st: _read_matrix(st, BASE_OUT, T, O)
+
+
+def build_lstm_fragment(x, wi, wh, b):
+    """Unrolled-LSTM IR fragment -> ONE FlexASR LSTM invocation (the
+    paper's 566-ops-to-1-instruction granularity bridge)."""
+    x, wi, wh, b = map(np.asarray, (x, wi, wh, b))
+    T, I = x.shape
+    H = wh.shape[1]
+    assert T <= MAX_TS and I <= MAX_IN and 4 * H <= MAX_OUT and H <= MAX_H
+    bw, ba = _exp_biases(np.concatenate([wi.ravel(), wh.ravel()]), x)
+    bo = 0.0 - (2 ** AF.n_exp - 1)  # h,c in (-1,1): top exponent 0
+    # PE gate memory layout: gate g occupies rows [g*MAX_H, g*MAX_H + H)
+    wi_p = np.zeros((4 * MAX_H, wi.shape[1]), np.float32)
+    wh_p = np.zeros((4 * MAX_H, wh.shape[1]), np.float32)
+    b_p = np.zeros((4 * MAX_H,), np.float32)
+    for g in range(4):
+        wi_p[g * MAX_H : g * MAX_H + H] = wi[g * H : (g + 1) * H]
+        wh_p[g * MAX_H : g * MAX_H + H] = wh[g * H : (g + 1) * H]
+        b_p[g * MAX_H : g * MAX_H + H] = b[g * H : (g + 1) * H]
+    cmds: List[Command] = []
+    cmds += _write_weight_cmds(wi_p)
+    cmds += _write_wh_cmds(wh_p)
+    cmds += _write_bias_cmds(b_p)
+    cmds += _write_matrix_cmds(BASE_IN, x)
+    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (I, H)))
+    cmds.append(Command(PE_CFG_MNGR, 0, (1.0,)))
+    cmds.append(Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, 0, 0)))
+    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (MODE_LSTM, T)))
+    cmds.append(Command(CFG_NUMERICS, 0, (bw, ba, bo)))
+    cmds.append(Command(FN_START))
+    return cmds, lambda st: _read_matrix(st, BASE_OUT, T, H)
+
+
+def build_pool_fragment(x, kind="max"):
+    x = np.asarray(x)
+    T, D = x.shape
+    assert T <= MAX_TS and D <= MAX_IN
+    (bo,) = _exp_biases(x)
+    mode = MODE_MAXPOOL if kind == "max" else MODE_MEANPOOL
+    cmds: List[Command] = []
+    cmds += _write_matrix_cmds(BASE_IN, x)
+    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (D, D)))
+    cmds.append(Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, 0, 0)))
+    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (mode, T)))
+    cmds.append(Command(CFG_NUMERICS, 0, (0.0, 0.0, bo)))
+    cmds.append(Command(FN_START))
+    return cmds, lambda st: _read_matrix(st, BASE_OUT, T // 2, D)
+
+
+def build_layernorm_fragment(x, gamma, beta):
+    x, gamma, beta = map(np.asarray, (x, gamma, beta))
+    T, D = x.shape
+    assert T <= MAX_TS and D <= MAX_IN
+    ba = _exp_biases(x)[0]
+    # the driver sizes the output exponent window from the ideal result
+    mu = x.mean(-1, keepdims=True)
+    va = x.var(-1, keepdims=True)
+    ideal = (x - mu) / np.sqrt(va + 1e-5) * gamma + beta
+    bo = _exp_biases(ideal)[0]
+    cmds: List[Command] = []
+    cmds += _write_weight_cmds(gamma[None, :])
+    cmds += _write_bias_cmds(beta)
+    cmds += _write_matrix_cmds(BASE_IN, x)
+    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (D, D)))
+    cmds.append(Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, 0, 0)))
+    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (MODE_LAYERNORM, T)))
+    cmds.append(Command(CFG_NUMERICS, 0, (0.0, ba, bo)))
+    cmds.append(Command(FN_START))
+    return cmds, lambda st: _read_matrix(st, BASE_OUT, T, D)
+
+
+def build_attention_fragment(q, k, v):
+    q, k, v = map(np.asarray, (q, k, v))
+    Tq, D = q.shape
+    Tk = k.shape[0]
+    assert Tq <= MAX_TS and Tk <= MAX_TS and D <= MAX_IN
+    ba = _exp_biases(np.concatenate([q.ravel(), k.ravel(), v.ravel()]))[0]
+    s = (q @ k.T) / np.sqrt(q.shape[1])
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    bo = _exp_biases(p @ v)[0]
+    cmds: List[Command] = []
+    cmds += _write_matrix_cmds(BASE_IN, q)
+    cmds += _write_matrix_cmds(BASE_AUX, k)
+    cmds += _write_matrix_cmds(BASE_AUX + MAX_TS * (MAX_IN // V), v)
+    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (D, D)))
+    cmds.append(
+        Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, BASE_AUX, Tk))
+    )
+    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (MODE_ATTENTION, Tq)))
+    cmds.append(Command(CFG_NUMERICS, 0, (0.0, ba, bo)))
+    cmds.append(Command(FN_START))
+    return cmds, lambda st: _read_matrix(st, BASE_OUT, Tq, D)
+
+
+# Register the IR-accelerator mappings
+REGISTRY.register(IRAccelMapping("fasr-linear", "flexasr", "fasr_linear", build_linear_fragment,
+                                 "bias_add(dense(x,w),b) -> FlexASR LinearLayer"))
+REGISTRY.register(IRAccelMapping("fasr-lstm", "flexasr", "fasr_lstm", build_lstm_fragment,
+                                 "unrolled LSTM -> one FlexASR LSTM instruction"))
+REGISTRY.register(IRAccelMapping("fasr-maxpool", "flexasr", "fasr_maxpool",
+                                 lambda x: build_pool_fragment(x, "max"),
+                                 "temporal max pooling"))
+REGISTRY.register(IRAccelMapping("fasr-meanpool", "flexasr", "fasr_meanpool",
+                                 lambda x: build_pool_fragment(x, "mean"),
+                                 "temporal mean pooling"))
+REGISTRY.register(IRAccelMapping("fasr-layernorm", "flexasr", "fasr_layernorm",
+                                 build_layernorm_fragment, "layer normalization"))
+REGISTRY.register(IRAccelMapping("fasr-attention", "flexasr", "fasr_attention",
+                                 build_attention_fragment, "scaled dot-product attention"))

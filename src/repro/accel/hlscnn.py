@@ -1,0 +1,193 @@
+"""HLSCNN accelerator ILA (Whatmough et al., VLSI'19) — JAX model.
+
+HLSCNN is a coarse-grained 2D-convolution accelerator operating on 8/16-bit
+**fixed point** data in NHWC layout. Its single supported operation in the
+paper's prototype is a non-grouped conv2d; padding is done on the host before
+invocation (Appendix A).
+
+The paper's key application-level finding (Table 4) lives here: the original
+design quantized conv *weights* to 8-bit fixed point, collapsing ResNet-20
+accuracy 91.55% -> 29.15%; the developers' update widened weights to 16 bits,
+recovering 91.85%. The ILA exposes the weight datatype as a configuration so
+the co-simulation can reproduce both designs.
+
+Architectural state:
+
+  act_mem   (ACT_WORDS, V)  activation SRAM (fixed-point values)
+  wgt_mem   (WGT_WORDS, V)  weight SRAM
+  out_mem   (OUT_WORDS, V)  output SRAM
+  + conv geometry registers + datatype select
+
+Instructions: WR_ACT / WR_WGT (one V-lane word per command), CFG_CONV
+(geometry), CFG_DTYPE (weight width 8/16), CONV_START.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ila import ILA, Command, IRAccelMapping, REGISTRY
+from . import numerics
+from .numerics import FixedPointSpec
+
+V = 16
+ACT_WORDS = 8192
+WGT_WORDS = 8192
+OUT_WORDS = 8192
+
+MAX_H = 16
+MAX_W = 16
+MAX_C = 32
+MAX_K = 32
+MAX_KH = 5
+MAX_KW = 5
+
+WR_ACT = 0x10
+WR_WGT = 0x11
+CFG_CONV = 0x20
+CFG_DTYPE = 0x21
+CONV_START = 0x30
+
+hlscnn = ILA("hlscnn", vwidth=V)
+hlscnn.state("act_mem", lambda: jnp.zeros((ACT_WORDS, V), jnp.float32))
+hlscnn.state("wgt_mem", lambda: jnp.zeros((WGT_WORDS, V), jnp.float32))
+hlscnn.state("out_mem", lambda: jnp.zeros((OUT_WORDS, V), jnp.float32))
+for reg in ("in_h", "in_w", "in_c", "out_k", "k_h", "k_w", "s_h", "s_w", "wgt_bits"):
+    hlscnn.state(reg, (lambda: jnp.zeros((), jnp.float32)))
+
+
+def _wr(buf_name):
+    def update(st, addr, data):
+        st = dict(st)
+        st[buf_name] = jax.lax.dynamic_update_slice(st[buf_name], data[None, :], (addr, 0))
+        return st
+
+    return update
+
+
+hlscnn.instruction("wr_act", WR_ACT)(_wr("act_mem"))
+hlscnn.instruction("wr_wgt", WR_WGT)(_wr("wgt_mem"))
+
+
+def _cfg(names):
+    def update(st, addr, data):
+        st = dict(st)
+        for i, n in enumerate(names):
+            st[n] = data[i]
+        return st
+
+    return update
+
+
+hlscnn.instruction("cfg_conv", CFG_CONV)(
+    _cfg(["in_h", "in_w", "in_c", "out_k", "k_h", "k_w", "s_h", "s_w"])
+)
+hlscnn.instruction("cfg_dtype", CFG_DTYPE)(_cfg(["wgt_bits"]))
+
+
+ACT_SPEC = numerics.HLSCNN_ACT
+W8 = numerics.HLSCNN_WEIGHT_ORIGINAL
+W16 = numerics.HLSCNN_WEIGHT_UPDATED
+
+
+@hlscnn.instruction("conv_start", CONV_START, "run the configured fixed-point conv2d")
+def _conv_start(st, addr, data):
+    # unpack SRAMs into dense max-size tensors (masked by config regs)
+    act = st["act_mem"].reshape(-1)[: MAX_H * MAX_W * MAX_C].reshape(1, MAX_H, MAX_W, MAX_C)
+    wgt = st["wgt_mem"].reshape(-1)[: MAX_KH * MAX_KW * MAX_C * MAX_K].reshape(
+        MAX_KH, MAX_KW, MAX_C, MAX_K
+    )
+    mh = (jnp.arange(MAX_H) < st["in_h"]).astype(jnp.float32)
+    mw = (jnp.arange(MAX_W) < st["in_w"]).astype(jnp.float32)
+    mc = (jnp.arange(MAX_C) < st["in_c"]).astype(jnp.float32)
+    mk = (jnp.arange(MAX_K) < st["out_k"]).astype(jnp.float32)
+    mkh = (jnp.arange(MAX_KH) < st["k_h"]).astype(jnp.float32)
+    mkw = (jnp.arange(MAX_KW) < st["k_w"]).astype(jnp.float32)
+
+    # quantize: activations 16-bit fixed; weights 8 or 16 per CFG_DTYPE
+    act_q = numerics.fx_quantize(act, ACT_SPEC)
+    w_q8 = numerics.fx_quantize(wgt, W8)
+    w_q16 = numerics.fx_quantize(wgt, W16)
+    wgt_q = jnp.where(st["wgt_bits"] >= 16, w_q16, w_q8)
+
+    act_q = act_q * mh[None, :, None, None] * mw[None, None, :, None] * mc[None, None, None, :]
+    wgt_q = (
+        wgt_q
+        * mkh[:, None, None, None]
+        * mkw[None, :, None, None]
+        * mc[None, None, :, None]
+        * mk[None, None, None, :]
+    )
+
+    # full-size stride-1 conv; stride/geometry masking applied on readout.
+    y = jax.lax.conv_general_dilated(
+        act_q, wgt_q, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (1, MAX_H-MAX_KH+1, MAX_W-MAX_KW+1, MAX_K)
+    # accumulators are wide (int32); output re-quantized to 16-bit fixed
+    y = numerics.fx_quantize(y, ACT_SPEC)
+    oh, ow = y.shape[1], y.shape[2]
+    flat = jnp.zeros((OUT_WORDS * V,), jnp.float32)
+    flat = flat.at[: oh * ow * MAX_K].set(y.reshape(-1))
+    st = dict(st)
+    st["out_mem"] = flat.reshape(OUT_WORDS, V)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Driver-side fragment builder
+# ---------------------------------------------------------------------------
+
+
+def _write_words(opcode: int, vec: np.ndarray) -> List[Command]:
+    vec = np.asarray(vec, np.float32).reshape(-1)
+    n_words = (len(vec) + V - 1) // V
+    cmds = []
+    for i in range(n_words):
+        seg = np.zeros((V,), np.float32)
+        chunk = vec[i * V : (i + 1) * V]
+        seg[: len(chunk)] = chunk
+        cmds.append(Command(opcode, i, tuple(seg)))
+    return cmds
+
+
+def build_conv2d_fragment(x, w, strides=(1, 1), padding=(0, 0), wgt_bits: int = 8):
+    """conv2d (NHWC x HWIO) -> HLSCNN fragment. Host-side padding per the
+    paper; ``wgt_bits`` selects original (8) vs updated (16) design."""
+    x, w = np.asarray(x, np.float32), np.asarray(w, np.float32)
+    if padding != (0, 0):
+        x = np.pad(x, ((0, 0), (padding[0], padding[0]), (padding[1], padding[1]), (0, 0)))
+    n, h, wd, c = x.shape
+    kh, kw, ci, k = w.shape
+    assert n == 1 and h <= MAX_H and wd <= MAX_W and c <= MAX_C and k <= MAX_K
+    assert kh <= MAX_KH and kw <= MAX_KW
+    xp = np.zeros((1, MAX_H, MAX_W, MAX_C), np.float32)
+    xp[:, :h, :wd, :c] = x
+    wp = np.zeros((MAX_KH, MAX_KW, MAX_C, MAX_K), np.float32)
+    wp[:kh, :kw, :c, :k] = w
+    sh, sw = strides
+    cmds: List[Command] = []
+    cmds += _write_words(WR_ACT, xp)
+    cmds += _write_words(WR_WGT, wp)
+    cmds.append(Command(CFG_CONV, 0, (h, wd, c, k, kh, kw, sh, sw)))
+    cmds.append(Command(CFG_DTYPE, 0, (float(wgt_bits),)))
+    cmds.append(Command(CONV_START))
+    oh, ow = (h - kh) // sh + 1, (wd - kw) // sw + 1
+    foh, fow = MAX_H - MAX_KH + 1, MAX_W - MAX_KW + 1
+
+    def read_out(st):
+        y = st["out_mem"].reshape(-1)[: foh * fow * MAX_K].reshape(1, foh, fow, MAX_K)
+        return y[:, : oh * sh : sh, : ow * sw : sw, :k]
+
+    return cmds, read_out
+
+
+REGISTRY.register(
+    IRAccelMapping(
+        "hlscnn-conv2d", "hlscnn", "hlscnn_conv2d", build_conv2d_fragment,
+        "non-grouped 2D convolution in 8/16-bit fixed point",
+    )
+)

@@ -1,0 +1,282 @@
+"""VTA accelerator ILA (Moreau et al., IEEE Micro'19) — JAX model.
+
+Unlike FlexASR/HLSCNN, VTA is a *fine-grained programmable* accelerator with
+an actual ISA: a processor-like design around a 16x16 int8 GEMM core with an
+int32 accumulator register file, plus a vector ALU. "Operators" are sequences
+of VTA instructions (Appendix A). We model the compute-relevant subset:
+
+  LOAD_INP  dram -> inp SRAM   (int8 tile, 16x16)
+  LOAD_WGT  dram -> wgt SRAM   (int8 tile, 16x16)
+  LOAD_ACC  dram -> acc RF     (int32 tile — bias preload)
+  GEMM      acc[d] += inp[i] @ wgt[w]^T   (int8 x int8 -> int32)
+  ALU       acc[d] = op(acc[d], acc[s] | imm)   op in {add, max, shr, min}
+  STORE     acc RF -> out dram (int8 narrowing with shift-based requant)
+
+The ILA's "DRAM" is a host-visible array in the architectural state (the
+paper models DMA through the accelerator interface the same way). GEMM
+matches the real device: int8 operands, int32 accumulate, requantization via
+arithmetic shift in the ALU — which makes the GEMM mapping *exact* for
+integer inputs (Table 2 row 1: 0.00% error).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ila import ILA, Command, IRAccelMapping, REGISTRY
+from . import numerics
+
+T = 16               # tile side (the 16x16 GEMM core)
+N_INP = 64           # inp SRAM tiles
+N_WGT = 64
+N_ACC = 64
+DRAM_TILES = 256     # host-visible scratch
+
+LOAD_INP = 0x10
+LOAD_WGT = 0x11
+LOAD_ACC = 0x12
+GEMM = 0x20
+ALU = 0x21
+STORE = 0x30
+WR_DRAM = 0x40       # host writes a 16-value row into DRAM scratch
+
+ALU_ADD = 0
+ALU_MAX = 1
+ALU_SHR = 2
+ALU_MIN = 3
+
+vta = ILA("vta", vwidth=T)
+vta.state("dram", lambda: jnp.zeros((DRAM_TILES * T, T), jnp.float32))
+vta.state("inp_sram", lambda: jnp.zeros((N_INP, T, T), jnp.float32))
+vta.state("wgt_sram", lambda: jnp.zeros((N_WGT, T, T), jnp.float32))
+vta.state("acc_rf", lambda: jnp.zeros((N_ACC, T, T), jnp.float32))
+
+
+def _rd_tile(dram, tile_idx):
+    return jax.lax.dynamic_slice(dram, (tile_idx * T, 0), (T, T))
+
+
+@vta.instruction("wr_dram", WR_DRAM)
+def _wr_dram(st, addr, data):
+    st = dict(st)
+    st["dram"] = jax.lax.dynamic_update_slice(st["dram"], data[None, :], (addr, 0))
+    return st
+
+
+def _load(buf):
+    def update(st, addr, data):
+        # data = (sram_idx, dram_tile)
+        st = dict(st)
+        sram_idx = data[0].astype(jnp.int32)
+        tile = _rd_tile(st["dram"], data[1].astype(jnp.int32))
+        if buf != "acc_rf":
+            tile = jnp.clip(jnp.round(tile), -128, 127)  # int8 semantics
+        st[buf] = jax.lax.dynamic_update_slice(st[buf], tile[None], (sram_idx, 0, 0))
+        return st
+
+    return update
+
+
+vta.instruction("load_inp", LOAD_INP)(_load("inp_sram"))
+vta.instruction("load_wgt", LOAD_WGT)(_load("wgt_sram"))
+vta.instruction("load_acc", LOAD_ACC)(_load("acc_rf"))
+
+
+@vta.instruction("gemm", GEMM, "acc[d] += inp[i] @ wgt[w]^T (int8 -> int32)")
+def _gemm(st, addr, data):
+    st = dict(st)
+    d = data[0].astype(jnp.int32)
+    i = data[1].astype(jnp.int32)
+    w = data[2].astype(jnp.int32)
+    inp = jax.lax.dynamic_slice(st["inp_sram"], (i, 0, 0), (1, T, T))[0]
+    wgt = jax.lax.dynamic_slice(st["wgt_sram"], (w, 0, 0), (1, T, T))[0]
+    acc = jax.lax.dynamic_slice(st["acc_rf"], (d, 0, 0), (1, T, T))[0]
+    # int8 x int8 -> int32 exact in fp32 (|acc| < 2^24 for our tile counts)
+    acc = acc + inp @ wgt.T
+    st["acc_rf"] = jax.lax.dynamic_update_slice(st["acc_rf"], acc[None], (d, 0, 0))
+    return st
+
+
+@vta.instruction("alu", ALU, "acc[d] = op(acc[d], acc[s] or imm)")
+def _alu(st, addr, data):
+    st = dict(st)
+    op = data[0].astype(jnp.int32)
+    d = data[1].astype(jnp.int32)
+    s = data[2].astype(jnp.int32)
+    use_imm = data[3]
+    imm = data[4]
+    a = jax.lax.dynamic_slice(st["acc_rf"], (d, 0, 0), (1, T, T))[0]
+    b_t = jax.lax.dynamic_slice(st["acc_rf"], (s, 0, 0), (1, T, T))[0]
+    b = jnp.where(use_imm > 0, imm, b_t)
+    out = jax.lax.switch(
+        jnp.clip(op, 0, 3),
+        [
+            lambda ab: ab[0] + ab[1],
+            lambda ab: jnp.maximum(ab[0], ab[1]),
+            lambda ab: jnp.floor(ab[0] / jnp.exp2(ab[1])),   # arithmetic >>
+            lambda ab: jnp.minimum(ab[0], ab[1]),
+        ],
+        (a, b),
+    )
+    st["acc_rf"] = jax.lax.dynamic_update_slice(st["acc_rf"], out[None], (d, 0, 0))
+    return st
+
+
+@vta.instruction("store", STORE, "acc[s] -> dram tile (optional int8 narrowing)")
+def _store(st, addr, data):
+    st = dict(st)
+    s = data[0].astype(jnp.int32)
+    dram_tile = data[1].astype(jnp.int32)
+    narrow = data[2]
+    acc = jax.lax.dynamic_slice(st["acc_rf"], (s, 0, 0), (1, T, T))[0]
+    out = jnp.where(narrow > 0, jnp.clip(acc, -128, 127), acc)
+    st["dram"] = jax.lax.dynamic_update_slice(st["dram"], out, (dram_tile * T, 0))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Driver-side fragment builders — "operators are sequences of instructions"
+# ---------------------------------------------------------------------------
+
+
+def _tiles(m: np.ndarray) -> Tuple[np.ndarray, int, int]:
+    """Pad (R, C) to tile multiples; return (tiles[rt, ct, T, T], rt, ct)."""
+    r, c = m.shape
+    rt, ct = (r + T - 1) // T, (c + T - 1) // T
+    p = np.zeros((rt * T, ct * T), np.float32)
+    p[:r, :c] = m
+    return p.reshape(rt, T, ct, T).transpose(0, 2, 1, 3), rt, ct
+
+
+def _write_dram_tile(cmds, tile_idx: int, tile: np.ndarray):
+    for r in range(T):
+        cmds.append(Command(WR_DRAM, tile_idx * T + r, tuple(tile[r])))
+
+
+def build_gemm_fragment(a_int8: np.ndarray, b_int8: np.ndarray, requant_shift: int = 0):
+    """dense(a, b) (int8) -> VTA instruction sequence.
+
+    a:(M,K) b:(N,K); returns int32 accum (or int8 after shift/narrow if
+    requant_shift > 0). Tiled over the 16x16 GEMM core.
+    """
+    a_t, mt, kt = _tiles(np.asarray(a_int8, np.float32))
+    b_t, nt, kt2 = _tiles(np.asarray(b_int8, np.float32))
+    assert kt == kt2
+    assert mt * kt <= N_INP and nt * kt <= N_WGT and mt * nt <= N_ACC
+    cmds: List[Command] = []
+    # DMA in: inp tiles then wgt tiles
+    dram_idx = 0
+    for i in range(mt):
+        for k in range(kt):
+            _write_dram_tile(cmds, dram_idx, a_t[i, k])
+            cmds.append(Command(LOAD_INP, 0, (i * kt + k, dram_idx)))
+            dram_idx += 1
+    for n in range(nt):
+        for k in range(kt):
+            _write_dram_tile(cmds, dram_idx, b_t[n, k])
+            cmds.append(Command(LOAD_WGT, 0, (n * kt + k, dram_idx)))
+            dram_idx += 1
+    # zero accumulators via imm min/max trick: load from an always-zero tile
+    zero_tile = dram_idx
+    _write_dram_tile(cmds, zero_tile, np.zeros((T, T), np.float32))
+    dram_idx += 1
+    for m in range(mt):
+        for n in range(nt):
+            cmds.append(Command(LOAD_ACC, 0, (m * nt + n, zero_tile)))
+    # GEMM micro-ops
+    for m in range(mt):
+        for n in range(nt):
+            for k in range(kt):
+                cmds.append(Command(GEMM, 0, (m * nt + n, m * kt + k, n * kt + k)))
+    if requant_shift > 0:
+        for m in range(mt):
+            for n in range(nt):
+                cmds.append(Command(ALU, 0, (ALU_SHR, m * nt + n, 0, 1.0, float(requant_shift))))
+    out_base = dram_idx
+    narrow = 1.0 if requant_shift > 0 else 0.0
+    for m in range(mt):
+        for n in range(nt):
+            cmds.append(Command(STORE, 0, (m * nt + n, out_base + m * nt + n, narrow)))
+    M, K = np.asarray(a_int8).shape
+    N = np.asarray(b_int8).shape[0]
+
+    def read_out(st):
+        tiles = []
+        for m in range(mt):
+            row = []
+            for n in range(nt):
+                row.append(st["dram"][(out_base + m * nt + n) * T : (out_base + m * nt + n + 1) * T])
+            tiles.append(jnp.concatenate(row, axis=1))
+        full = jnp.concatenate(tiles, axis=0)
+        return full[:M, :N]
+
+    return cmds, read_out
+
+
+def build_add_fragment(a_int: np.ndarray, b_int: np.ndarray):
+    """elementwise add on the vector ALU (acc RF resident)."""
+    a_t, rt, ct = _tiles(np.asarray(a_int, np.float32))
+    b_t, _, _ = _tiles(np.asarray(b_int, np.float32))
+    assert 2 * rt * ct <= N_ACC
+    cmds: List[Command] = []
+    dram_idx = 0
+    for r in range(rt):
+        for c in range(ct):
+            _write_dram_tile(cmds, dram_idx, a_t[r, c])
+            cmds.append(Command(LOAD_ACC, 0, (r * ct + c, dram_idx)))
+            dram_idx += 1
+            _write_dram_tile(cmds, dram_idx, b_t[r, c])
+            cmds.append(Command(LOAD_ACC, 0, (rt * ct + r * ct + c, dram_idx)))
+            dram_idx += 1
+    for i in range(rt * ct):
+        cmds.append(Command(ALU, 0, (ALU_ADD, i, rt * ct + i, 0.0, 0.0)))
+    out_base = dram_idx
+    for i in range(rt * ct):
+        cmds.append(Command(STORE, 0, (i, out_base + i)))
+    R, C = np.asarray(a_int).shape
+
+    def read_out(st):
+        tiles = []
+        for r in range(rt):
+            row = [st["dram"][(out_base + r * ct + c) * T : (out_base + r * ct + c + 1) * T] for c in range(ct)]
+            tiles.append(jnp.concatenate(row, axis=1))
+        return jnp.concatenate(tiles, axis=0)[:R, :C]
+
+    return cmds, read_out
+
+
+def build_relu_fragment(a_int: np.ndarray):
+    a_t, rt, ct = _tiles(np.asarray(a_int, np.float32))
+    cmds: List[Command] = []
+    dram_idx = 0
+    for r in range(rt):
+        for c in range(ct):
+            _write_dram_tile(cmds, dram_idx, a_t[r, c])
+            cmds.append(Command(LOAD_ACC, 0, (r * ct + c, dram_idx)))
+            dram_idx += 1
+    for i in range(rt * ct):
+        cmds.append(Command(ALU, 0, (ALU_MAX, i, 0, 1.0, 0.0)))
+    out_base = dram_idx
+    for i in range(rt * ct):
+        cmds.append(Command(STORE, 0, (i, out_base + i)))
+    R, C = np.asarray(a_int).shape
+
+    def read_out(st):
+        tiles = []
+        for r in range(rt):
+            row = [st["dram"][(out_base + r * ct + c) * T : (out_base + r * ct + c + 1) * T] for c in range(ct)]
+            tiles.append(jnp.concatenate(row, axis=1))
+        return jnp.concatenate(tiles, axis=0)[:R, :C]
+
+    return cmds, read_out
+
+
+REGISTRY.register(IRAccelMapping("vta-gemm", "vta", "vta_gemm", build_gemm_fragment,
+                                 "tiled int8 GEMM on the 16x16 core"))
+REGISTRY.register(IRAccelMapping("vta-add", "vta", "vta_add", build_add_fragment,
+                                 "vector ALU elementwise add"))
+REGISTRY.register(IRAccelMapping("vta-relu", "vta", "vta_relu", build_relu_fragment,
+                                 "vector ALU relu (max with 0)"))

@@ -1,0 +1,170 @@
+"""Sharded, atomic, elastic checkpointing.
+
+Design (scaled for this container; production deltas documented inline):
+
+* Each checkpoint is a directory ``step_<k>/`` holding one ``.npy`` per
+  pytree leaf plus ``manifest.json`` (treedef, shapes, dtypes, step, data
+  state). A checkpoint only "exists" once ``manifest.json`` is renamed into
+  place (atomic-commit: torn writes are never visible).
+* ``save_async`` snapshots to host memory synchronously (so training can
+  donate buffers) and writes on a background thread — the standard
+  overlap-checkpoint-with-compute trick.
+* **Elastic restore**: leaves are stored as *global* arrays, so a restore
+  may target any mesh/sharding (``device_put`` with the new NamedSharding).
+  At >10k-chip scale you store per-shard files keyed by (leaf, shard index)
+  and re-stripe on restore; the manifest format already carries the
+  shape/dtype metadata needed for that (see EXPERIMENTS.md §Dry-run notes).
+* ``keep`` rotates old checkpoints; the latest complete one wins on restore
+  (a crashed save leaves no manifest and is garbage-collected).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, params, opt_state, extra: Optional[Dict] = None):
+        self.wait()
+        self._save_sync(step, self._snapshot(params), self._snapshot(opt_state), extra or {})
+
+    def save_async(self, step: int, params, opt_state, extra: Optional[Dict] = None):
+        """Snapshot to host now; write in the background."""
+        self.wait()
+        p_host = self._snapshot(params)
+        o_host = self._snapshot(opt_state)
+        self._thread = threading.Thread(
+            target=self._save_sync, args=(step, p_host, o_host, extra or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _snapshot(self, tree):
+        return jax.tree_util.tree_map(lambda a: np.asarray(a), tree)
+
+    def _save_sync(self, step, params, opt_state, extra):
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "leaves": {}, "time": time.time()}
+        for name, tree in (("params", params), ("opt", opt_state)):
+            flat, treedef = _flatten_with_paths(tree)
+            manifest[f"{name}_treedef"] = str(treedef)
+            for key, leaf in flat:
+                fn = f"{name}__{key.replace('/', '__')}.npy"
+                arr = np.asarray(leaf)
+                orig_dtype = str(arr.dtype)
+                if arr.dtype.kind not in "fiub" or orig_dtype == "bfloat16":
+                    # numpy can't serialize ml_dtypes (bf16/fp8): upcast to
+                    # f32 on disk, restore casts back (dtype recorded)
+                    arr = arr.astype(np.float32)
+                np.save(os.path.join(tmp, fn), arr)
+                manifest["leaves"][f"{name}/{key}"] = {
+                    "file": fn,
+                    "shape": list(np.shape(leaf)),
+                    "dtype": orig_dtype,
+                }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic commit
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                os.path.join(self.dir, d, "manifest.json")
+            ):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        params_like,
+        opt_like,
+        step: Optional[int] = None,
+        shardings: Optional[Tuple[Any, Any]] = None,
+    ):
+        """Restore onto pytrees shaped like (params_like, opt_like).
+
+        ``shardings``: optional (param_shardings, opt_shardings) — enables
+        **elastic** restore onto a different mesh than the one that saved.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        def load_tree(name, like, shard_tree):
+            flat, treedef = _flatten_with_paths(like)
+            leaves = []
+            shard_flat = None
+            if shard_tree is not None:
+                flat_sh, _ = _flatten_with_paths(shard_tree)
+                shard_flat = [s for _, s in flat_sh]
+            for i, (key, leaf) in enumerate(flat):
+                meta = manifest["leaves"][f"{name}/{key}"]
+                arr = np.load(os.path.join(d, meta["file"]))
+                if list(arr.shape) != list(np.shape(leaf)):
+                    raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+                if str(arr.dtype) != meta["dtype"]:
+                    import ml_dtypes  # ships with jax
+
+                    arr = arr.astype(np.dtype(meta["dtype"]))
+                if shard_flat is not None:
+                    arr = jax.device_put(arr, shard_flat[i])
+                leaves.append(arr)
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(like), leaves
+            )
+
+        p_sh = shardings[0] if shardings else None
+        o_sh = shardings[1] if shardings else None
+        params = load_tree("params", params_like, p_sh)
+        opt = load_tree("opt", opt_like, o_sh)
+        return params, opt, step, manifest.get("extra", {})

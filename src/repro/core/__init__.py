@@ -1,0 +1,2 @@
+"""D2A core: compiler IR, e-graph flexible matching, ILA formalism,
+code generation, and compilation-results validation."""

@@ -1,0 +1,300 @@
+"""Code generation + execution for matched programs.
+
+After flexible matching extracts a program containing accelerator intrinsics,
+this module plays the role of the paper's BYOC code generator + runtime: each
+accelerator op is lowered to an ILA command stream (the "MMIO writes" of
+Figure 5d) and either
+
+* ``mode="ila"``     — executed on the ILA simulator, bit-accurate in the
+  accelerator's custom numerics (the application-level co-simulation path,
+  Section 2.3.2), or
+* ``mode="kernel"``  — executed on the TPU-native Pallas fast path with the
+  same numeric semantics (deployment path), or
+* ``mode="ideal"``   — fp32 reference (the IR interpreter; oracle).
+
+The driver layer tiles tensors that exceed device SRAM (row-chunking for
+FlexASR, 16x16 tiling for VTA is inside its fragment builder) — the same
+job a real device driver does.
+
+Per-invocation statistics (op, rel-error vs ideal, value ranges) are
+collected — the "handy debugging information" the paper's authors gave the
+accelerator developers to diagnose the HLSCNN weight-quantization bug.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ir
+from ..accel import flexasr as fa
+from ..accel import hlscnn as hc
+from ..accel import vta as vt
+from ..accel import numerics
+from ..kernels import ops as kops
+
+
+@dataclasses.dataclass
+class InvocationStat:
+    op: str
+    backend: str
+    rel_err: float
+    out_min: float
+    out_max: float
+    n_commands: int
+
+
+class Executor:
+    """Executes an extracted IR program, offloading accelerator intrinsics."""
+
+    def __init__(
+        self,
+        mode: str = "ila",
+        hlscnn_wgt_bits: int = 8,
+        collect_stats: bool = True,
+        jit_sim: bool = True,
+    ):
+        assert mode in ("ila", "kernel", "ideal")
+        self.mode = mode
+        self.hlscnn_wgt_bits = hlscnn_wgt_bits
+        self.collect_stats = collect_stats
+        self.jit_sim = jit_sim
+        self.stats: List[InvocationStat] = []
+
+    def _sim(self, ila, cmds):
+        return ila.simulate_jit(cmds) if self.jit_sim else ila.simulate(cmds)
+
+    # ------------------------------------------------------------------
+    def run(self, e: ir.Expr, env: Dict[str, Any]):
+        memo: Dict[ir.Expr, Any] = {}
+
+        def rec(x: ir.Expr):
+            if x in memo:
+                return memo[x]
+            if isinstance(x, ir.Call) and x.op in ir.ACCEL_OPS:
+                args = [np.asarray(rec(a)) for a in x.args]
+                v = self._exec_accel(x, args)
+            else:
+                v = ir._eval(x, rec, env)
+            memo[x] = v
+            return v
+
+        return rec(e)
+
+    # ------------------------------------------------------------------
+    def _record(self, op, backend, out, ideal, ncmds):
+        if not self.collect_stats:
+            return
+        out = np.asarray(out, np.float64)
+        ideal = np.asarray(ideal, np.float64)
+        denom = np.linalg.norm(ideal)
+        err = float(np.linalg.norm(ideal - out) / denom) if denom > 0 else 0.0
+        self.stats.append(
+            InvocationStat(op, backend, err, float(out.min()), float(out.max()), ncmds)
+        )
+
+    def _exec_accel(self, x: ir.Call, args: List[np.ndarray]):
+        op = x.op
+        if self.mode == "ideal":
+            return self._ideal(x, args)
+        if op in ("fasr_store", "fasr_load"):
+            return args[0]
+        fn = {
+            "fasr_linear": self._fasr_linear,
+            "fasr_lstm": self._fasr_lstm,
+            "fasr_maxpool": lambda x_, a: self._fasr_pool(x_, a, "max"),
+            "fasr_meanpool": lambda x_, a: self._fasr_pool(x_, a, "mean"),
+            "fasr_layernorm": self._fasr_layernorm,
+            "fasr_attention": self._fasr_attention,
+            "hlscnn_conv2d": self._hlscnn_conv2d,
+            "vta_gemm": self._vta_gemm,
+            "vta_add": self._vta_add,
+            "vta_relu": self._vta_relu,
+        }[op]
+        return fn(x, args)
+
+    def _ideal(self, x: ir.Call, args):
+        vs = [ir.Var(f"_{i}", np.shape(a)) for i, a in enumerate(args)]
+        env = {f"_{i}": a for i, a in enumerate(args)}
+        return ir.interpret(ir.Call(x.op, tuple(vs), x.attrs), env)
+
+    # -- FlexASR ---------------------------------------------------------
+    def _run_fasr(self, builder, *tensors, ideal, opname):
+        cmds, rd = builder(*tensors)
+        st = self._sim(fa.flexasr, cmds)
+        out = np.asarray(rd(st))
+        self._record(opname, "flexasr", out, ideal, len(cmds))
+        return out
+
+    def _chunk_rows(self, x, max_rows):
+        return [x[i : i + max_rows] for i in range(0, x.shape[0], max_rows)]
+
+    def _fasr_linear(self, x: ir.Call, args):
+        a, w, b = args
+        orig_shape = a.shape
+        a2 = a.reshape(-1, a.shape[-1])
+        ideal_full = a2 @ w.T + b
+        if self.mode == "kernel":
+            out = np.asarray(kops.af_linear(jnp.asarray(a2), jnp.asarray(w), jnp.asarray(b)))
+            self._record("fasr_linear", "flexasr-kernel", out, ideal_full, 0)
+        else:
+            outs = []
+            for chunk in self._chunk_rows(a2, fa.MAX_TS):
+                cmds, rd = fa.build_linear_fragment(chunk, w, b)
+                st = self._sim(fa.flexasr, cmds)
+                outs.append(np.asarray(rd(st)))
+            out = np.concatenate(outs, axis=0)
+            self._record("fasr_linear", "flexasr", out, ideal_full, 0)
+        return out.reshape(orig_shape[:-1] + (w.shape[0],))
+
+    def _fasr_lstm(self, x: ir.Call, args):
+        xs, wi, wh, b = args
+        T, B, I = xs.shape
+        ideal = np.asarray(ir._lstm(jnp.asarray(xs), jnp.asarray(wi), jnp.asarray(wh), jnp.asarray(b)))
+        outs = []
+        for bi in range(B):
+            cmds, rd = fa.build_lstm_fragment(xs[:, bi], wi, wh, b)
+            st = self._sim(fa.flexasr, cmds)
+            outs.append(np.asarray(rd(st)))
+        out = np.stack(outs, axis=1)
+        self._record("fasr_lstm", "flexasr", out, ideal, 0)
+        return out
+
+    def _fasr_pool(self, x: ir.Call, args, kind):
+        (a,) = args
+        T = a.shape[0]
+        pairs = a[: T - T % 2].reshape(T // 2, 2, *a.shape[1:])
+        ideal = pairs.max(1) if kind == "max" else pairs.mean(1)
+        outs = []
+        for chunk in self._chunk_rows(a, fa.MAX_TS):
+            # pooling is elementwise across features: chunk wide matrices
+            # column-wise to fit the device's MAX_IN lanes
+            col_outs = []
+            for c0 in range(0, chunk.shape[1], fa.MAX_IN):
+                cmds, rd = fa.build_pool_fragment(chunk[:, c0 : c0 + fa.MAX_IN], kind)
+                st = self._sim(fa.flexasr, cmds)
+                col_outs.append(np.asarray(rd(st)))
+            outs.append(np.concatenate(col_outs, axis=1))
+        out = np.concatenate(outs, axis=0)
+        self._record(f"fasr_{kind}pool", "flexasr", out, ideal, 0)
+        return out
+
+    def _fasr_layernorm(self, x: ir.Call, args):
+        a, g, b = args
+        orig = a.shape
+        a2 = a.reshape(-1, a.shape[-1])
+        mu = a2.mean(-1, keepdims=True)
+        va = a2.var(-1, keepdims=True)
+        ideal = (a2 - mu) / np.sqrt(va + 1e-5) * g + b
+        outs = []
+        for chunk in self._chunk_rows(a2, fa.MAX_TS):
+            cmds, rd = fa.build_layernorm_fragment(chunk, g, b)
+            st = self._sim(fa.flexasr, cmds)
+            outs.append(np.asarray(rd(st)))
+        out = np.concatenate(outs, axis=0).reshape(orig)
+        self._record("fasr_layernorm", "flexasr", out, ideal, 0)
+        return out
+
+    def _fasr_attention(self, x: ir.Call, args):
+        q, k, v = args
+        ideal = np.asarray(ir._attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)))
+        if q.ndim == 2:
+            cmds, rd = fa.build_attention_fragment(q, k, v)
+            out = np.asarray(rd(self._sim(fa.flexasr, cmds)))
+        else:
+            # batch of heads: one invocation per (batch) slice
+            outs = []
+            q2 = q.reshape(-1, q.shape[-2], q.shape[-1])
+            k2 = k.reshape(-1, k.shape[-2], k.shape[-1])
+            v2 = v.reshape(-1, v.shape[-2], v.shape[-1])
+            for i in range(q2.shape[0]):
+                cmds, rd = fa.build_attention_fragment(q2[i], k2[i], v2[i])
+                outs.append(np.asarray(rd(self._sim(fa.flexasr, cmds))))
+            out = np.stack(outs).reshape(q.shape[:-1] + (v.shape[-1],))
+        self._record("fasr_attention", "flexasr", out, ideal, 0)
+        return out
+
+    # -- HLSCNN -----------------------------------------------------------
+    def _hlscnn_conv2d(self, x: ir.Call, args):
+        a, w = args
+        strides = x.attr("strides")
+        padding = x.attr("padding")
+        ideal = np.asarray(ir._conv2d(jnp.asarray(a), jnp.asarray(w), strides, padding))
+        outs = []
+        for ni in range(a.shape[0]):
+            cmds, rd = hc.build_conv2d_fragment(
+                a[ni : ni + 1], w, strides, padding, wgt_bits=self.hlscnn_wgt_bits
+            )
+            st = self._sim(hc.hlscnn, cmds)
+            outs.append(np.asarray(rd(st)))
+        out = np.concatenate(outs, axis=0)
+        self._record("hlscnn_conv2d", "hlscnn", out, ideal, 0)
+        return out
+
+    # -- VTA ---------------------------------------------------------------
+    def _vta_gemm(self, x: ir.Call, args):
+        a, b = args
+        ideal = a @ b.T
+        sa = np.abs(a).max() / 127.0 if np.abs(a).max() > 0 else 1.0
+        sb = np.abs(b).max() / 127.0 if np.abs(b).max() > 0 else 1.0
+        a8 = np.clip(np.round(a / sa), -127, 127)
+        b8 = np.clip(np.round(b / sb), -127, 127)
+        if self.mode == "kernel":
+            out32 = np.asarray(
+                kops.int8_gemm(jnp.asarray(a8, jnp.int8), jnp.asarray(b8, jnp.int8))
+            ).astype(np.float64)
+        else:
+            # tile rows so SRAM limits hold: mt*kt <= N_INP etc.
+            kt = (a8.shape[1] + vt.T - 1) // vt.T
+            max_m = max(1, (vt.N_INP // kt)) * vt.T
+            max_n = max(1, (vt.N_WGT // kt)) * vt.T
+            outs = []
+            for mi in range(0, a8.shape[0], max_m):
+                rows = []
+                for nj in range(0, b8.shape[0], max_n):
+                    cmds, rd = vt.build_gemm_fragment(a8[mi : mi + max_m], b8[nj : nj + max_n])
+                    st = self._sim(vt.vta, cmds)
+                    rows.append(np.asarray(rd(st)))
+                outs.append(np.concatenate(rows, axis=1))
+            out32 = np.concatenate(outs, axis=0).astype(np.float64)
+        out = out32 * sa * sb
+        self._record("vta_gemm", "vta", out, ideal, 0)
+        return out.astype(np.float32)
+
+    def _vta_add(self, x: ir.Call, args):
+        a, b = args
+        # elementwise adds stay in the accumulator's wide fixed point; the
+        # driver scales both operands onto a shared int grid
+        s = max(np.abs(a).max(), np.abs(b).max(), 1e-9) / (2 ** 20)
+        ai = np.round(np.broadcast_to(a, np.broadcast_shapes(a.shape, b.shape)) / s)
+        bi = np.round(np.broadcast_to(b, ai.shape) / s)
+        a2 = ai.reshape(-1, ai.shape[-1]) if ai.ndim > 1 else ai.reshape(1, -1)
+        b2 = bi.reshape(a2.shape)
+        ct = (a2.shape[1] + vt.T - 1) // vt.T
+        max_r = max(1, (vt.N_ACC // 2) // ct) * vt.T
+        outs = []
+        for ri in range(0, a2.shape[0], max_r):
+            cmds, rd = vt.build_add_fragment(a2[ri : ri + max_r], b2[ri : ri + max_r])
+            st = self._sim(vt.vta, cmds)
+            outs.append(np.asarray(rd(st)))
+        out = (np.concatenate(outs, axis=0) * s).reshape(ai.shape).astype(np.float32)
+        self._record("vta_add", "vta", out, np.asarray(a) + np.asarray(b), 0)
+        return out
+
+    def _vta_relu(self, x: ir.Call, args):
+        (a,) = args
+        s = max(np.abs(a).max(), 1e-9) / (2 ** 20)
+        ai = np.round(a / s)
+        a2 = ai.reshape(-1, ai.shape[-1]) if ai.ndim > 1 else ai.reshape(1, -1)
+        ct = (a2.shape[1] + vt.T - 1) // vt.T
+        max_r = max(1, (vt.N_ACC // 2) // ct) * vt.T
+        outs = []
+        for ri in range(0, a2.shape[0], max_r):
+            cmds, rd = vt.build_relu_fragment(a2[ri : ri + max_r])
+            st = self._sim(vt.vta, cmds)
+            outs.append(np.asarray(rd(st)))
+        out = (np.concatenate(outs, axis=0) * s).reshape(a.shape).astype(np.float32)
+        self._record("vta_relu", "vta", out, np.maximum(a, 0), 0)
+        return out

@@ -1,0 +1,45 @@
+"""The D2A compilation flow driver (Figure 2 / Figure 4).
+
+DSL program (an IR expression from ``repro.core.apps`` or a model importer)
+-> e-graph -> equality saturation over compiler-IR + IR-accelerator rewrites
+-> cost-based extraction -> an executable program with accelerator
+intrinsics, runnable through ``codegen.Executor``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from . import ir
+from .egraph import EGraph, extract, run_rewrites, default_cost
+from . import rules as R
+
+
+@dataclasses.dataclass
+class CompileResult:
+    program: ir.Expr
+    stats: Dict[str, Any]
+    accelerator_calls: Dict[str, int]
+    n_relay_ops: int
+
+
+def compile_program(
+    e: ir.Expr,
+    targets: Sequence[str] = ("flexasr", "hlscnn", "vta"),
+    flexible: bool = True,
+    iters: int = 12,
+    node_limit: int = 40_000,
+    cost_fn=default_cost,
+) -> CompileResult:
+    """Run flexible (or exact) matching and extract the best program."""
+    eg = EGraph()
+    root = eg.add_expr(e)
+    stats = run_rewrites(eg, R.all_rewrites(targets, flexible), iters, node_limit)
+    best = extract(eg, root, cost_fn)
+    stats["n_nodes"] = eg.n_nodes
+    return CompileResult(
+        program=best,
+        stats=stats,
+        accelerator_calls=ir.accelerator_calls(best),
+        n_relay_ops=ir.count_ops(e),
+    )

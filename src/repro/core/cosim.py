@@ -1,0 +1,189 @@
+"""Application-level co-simulation (Section 2.3.2 / Table 4).
+
+Trains the Section-4.2 applications on deterministic synthetic tasks (no
+WikiText-2 / CIFAR-10 offline — DESIGN.md §7), then evaluates the *compiled*
+program three ways:
+
+  reference  — fp32 on the host (the IR interpreter), Table 4 column 3
+  original   — ILA co-simulation with the original numerics
+               (HLSCNN 8-bit weights), column 4
+  updated    — ILA co-simulation with the developers' fix
+               (HLSCNN 16-bit weights), column 5
+
+reproducing the paper's phenomenon: per-op errors of a few percent are fine
+for FlexASR apps, but HLSCNN's 8-bit weight quantization collapses conv-net
+accuracy, and the 16-bit update recovers it. Per-invocation statistics
+(Executor.stats) provide the debugging data of the case study.
+
+The IR interpreter is JAX-traceable, so training differentiates straight
+through the *same* program that is later co-simulated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import apps, ir
+from .codegen import Executor
+from .compile import compile_program
+
+
+# ---------------------------------------------------------------------------
+# tiny Adam (training substrate for the co-sim apps)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# synthetic tasks
+# ---------------------------------------------------------------------------
+
+
+def make_teacher_task(builder, input_shape, n=512, seed=7, teacher_seed=99, temp=0.5):
+    """Teacher-student labels: a same-architecture random teacher guarantees
+    the task is representable by the student (deterministic, no datasets)."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n,) + tuple(input_shape)).astype(np.float32)
+    t_expr, t_params = builder(seed=teacher_seed)
+    tp = {k: jnp.asarray(v) for k, v in t_params.items()}
+
+    def fwd(x):
+        env = dict(tp)
+        env["x"] = x
+        return ir.interpret(t_expr, env).reshape(-1)
+
+    logits = np.asarray(jax.vmap(fwd)(jnp.asarray(X)))
+    # center per class over the dataset so the argmax labels are balanced
+    # (a raw random teacher lets one class's bias dominate)
+    logits = (logits - logits.mean(0)) / (logits.std(0) + 1e-6)
+    y = np.argmax(logits / temp, axis=1)
+    return X, y
+
+
+def make_char_task(vocab=32, T=16, n=256, seed=7, order=1):
+    """Deterministic-ish Markov text: learnable next-token prediction."""
+    rng = np.random.default_rng(seed)
+    trans = rng.dirichlet(np.full(vocab, 0.05), size=vocab)
+    seqs = np.zeros((n, T + 1), np.int64)
+    for i in range(n):
+        s = rng.integers(vocab)
+        for t in range(T + 1):
+            seqs[i, t] = s
+            s = rng.choice(vocab, p=trans[s])
+    return seqs[:, :-1], seqs[:, 1:], trans
+
+
+# ---------------------------------------------------------------------------
+# training via the IR interpreter
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[..., None], axis=-1).mean()
+
+
+def train_app(expr, params, X, y, steps=300, bs=32, lr=2e-3, seed=0, embed=None):
+    """Train by differentiating through the IR interpreter."""
+    keys = sorted(params)
+    rng = np.random.default_rng(seed)
+
+    def fwd(p, x):
+        env = dict(p)
+        env["x"] = x
+        return ir.interpret(expr, env)
+
+    def loss(p, xb, yb):
+        if embed is not None:
+            emb = p["_embed"]
+            xe = emb[xb]                                 # (bs, T, E)
+            logits = jax.vmap(lambda s: fwd(p, s[:, None, :]))(xe)
+            return _xent(logits, yb)
+        logits = jax.vmap(lambda s: fwd(p, s))(xb)
+        return _xent(logits.reshape(xb.shape[0], -1), yb)
+
+    p = {k: jnp.asarray(v) for k, v in params.items()}
+    if embed is not None:
+        p["_embed"] = jnp.asarray(
+            rng.standard_normal((embed[0], embed[1])).astype(np.float32) * 0.3
+        )
+    st = adam_init(p)
+    step = jax.jit(
+        lambda p_, st_, xb, yb: (lambda g: adam_update(p_, g, st_, lr=lr))(
+            jax.grad(loss)(p_, xb, yb)
+        )
+    )
+    n = len(X)
+    for i in range(steps):
+        idx = rng.integers(0, n, bs)
+        p, st = step(p, st, jnp.asarray(X[idx]), jnp.asarray(y[idx]))
+    return {k: np.asarray(v) for k, v in p.items()}
+
+
+# ---------------------------------------------------------------------------
+# co-simulation evaluation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CosimResult:
+    application: str
+    platform: str
+    reference: float
+    original: float
+    updated: Optional[float]
+    metric: str
+    n_eval: int
+    sim_seconds_per_point: float
+    invocation_stats: Dict[str, float]
+
+
+def eval_classification(program, params, X, y, executor: Executor, n_eval=100):
+    correct = 0
+    t0 = time.time()
+    for i in range(n_eval):
+        env = dict(params)
+        env["x"] = X[i]
+        logits = np.asarray(executor.run(program, env)).reshape(-1)
+        correct += int(np.argmax(logits) == y[i])
+    dt = (time.time() - t0) / n_eval
+    return correct / n_eval, dt
+
+
+def eval_perplexity(program, params, Xtok, Ytok, executor: Executor, n_eval=50):
+    emb = params["_embed"]
+    nll, count = 0.0, 0
+    t0 = time.time()
+    model_params = {k: v for k, v in params.items() if k != "_embed"}
+    for i in range(n_eval):
+        xe = emb[Xtok[i]][:, None, :]
+        env = dict(model_params)
+        env["x"] = xe
+        logits = np.asarray(executor.run(program, env))
+        logp = logits - logits.max(-1, keepdims=True)
+        logp = logp - np.log(np.exp(logp).sum(-1, keepdims=True))
+        nll += -logp[np.arange(len(Ytok[i])), Ytok[i]].sum()
+        count += len(Ytok[i])
+    dt = (time.time() - t0) / n_eval
+    return float(np.exp(nll / count)), dt

@@ -1,0 +1,457 @@
+"""E-graph + equality saturation (egg-style) for flexible matching.
+
+The paper's prototype uses Glenside + egg for equality-saturation-based
+instruction selection ("flexible matching", Section 2.2). We re-implement the
+needed core natively: hash-consed e-nodes, union-find e-classes, congruence
+closure via rebuild, pattern-based rewriting to fixpoint (with node limits),
+and cost-based extraction.
+
+An e-node is ``ENode(head, children)`` where ``head`` identifies the operator
+plus its static attributes, and ``children`` are e-class ids. Leaves (vars /
+constants) have empty children and carry their identity in ``head``.
+
+A *shape analysis* is maintained per e-class (like egg's e-class analyses):
+all members of a class must agree on shape, which shape-conditioned rewrites
+(linear-layer reshape, maxpool decomposition, im2col) rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import ir
+
+
+# --------------------------------------------------------------------------
+# E-nodes
+# --------------------------------------------------------------------------
+
+Head = Tuple  # ("op", op_name, attrs) | ("var", name, shape, dtype) | ("const", v)
+
+
+@dataclasses.dataclass(frozen=True)
+class ENode:
+    head: Head
+    children: Tuple[int, ...] = ()
+
+    def map_children(self, f):
+        return ENode(self.head, tuple(f(c) for c in self.children))
+
+
+def op_head(op: str, attrs: Tuple[Tuple[str, Any], ...] = ()) -> Head:
+    return ("op", op, tuple(attrs))
+
+
+# --------------------------------------------------------------------------
+# Patterns
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PatVar:
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PatNode:
+    op: str
+    args: Tuple[Any, ...] = ()
+    attrs: Tuple[Tuple[str, Any], ...] = ()   # exact attrs to require (subset match)
+    attr_binds: Tuple[str, ...] = ()           # attr names to capture into subst
+
+
+def P(op: str, *args, attrs=(), attr_binds=()) -> PatNode:
+    return PatNode(op, tuple(args), tuple(attrs), tuple(attr_binds))
+
+
+def V(name: str) -> PatVar:
+    return PatVar(name)
+
+
+# --------------------------------------------------------------------------
+# E-graph
+# --------------------------------------------------------------------------
+
+
+class EGraph:
+    def __init__(self):
+        self.parent: List[int] = []
+        self.classes: Dict[int, List[ENode]] = {}
+        self.hashcons: Dict[ENode, int] = {}
+        self.shape: Dict[int, Tuple[int, ...]] = {}
+        self.worklist: List[int] = []
+        self.n_nodes = 0
+
+    # -- union-find ---------------------------------------------------------
+    def find(self, a: int) -> int:
+        while self.parent[a] != a:
+            self.parent[a] = self.parent[self.parent[a]]
+            a = self.parent[a]
+        return a
+
+    def canon(self, n: ENode) -> ENode:
+        return n.map_children(self.find)
+
+    # -- adding -------------------------------------------------------------
+    def _new_class(self, n: ENode, shape) -> int:
+        cid = len(self.parent)
+        self.parent.append(cid)
+        self.classes[cid] = [n]
+        self.hashcons[n] = cid
+        self.shape[cid] = shape
+        self.n_nodes += 1
+        return cid
+
+    def add(self, n: ENode) -> int:
+        n = self.canon(n)
+        if n in self.hashcons:
+            return self.find(self.hashcons[n])
+        return self._new_class(n, self._node_shape(n))
+
+    def _node_shape(self, n: ENode):
+        kind = n.head[0]
+        if kind == "var":
+            return tuple(n.head[2])
+        if kind == "const":
+            return ()
+        op, attrs = n.head[1], dict(n.head[2])
+        child_shapes = [self.shape[self.find(c)] for c in n.children]
+        return _op_shape(op, attrs, child_shapes)
+
+    def add_expr(self, e: ir.Expr) -> int:
+        memo: Dict[int, int] = {}
+
+        def rec(x: ir.Expr) -> int:
+            if id(x) in memo:
+                return memo[id(x)]
+            if isinstance(x, ir.Var):
+                cid = self.add(ENode(("var", x.name, tuple(x.shape), x.dtype)))
+            elif isinstance(x, ir.Const):
+                cid = self.add(ENode(("const", x.value)))
+            else:
+                assert isinstance(x, ir.Call)
+                kids = tuple(rec(a) for a in x.args)
+                cid = self.add(ENode(op_head(x.op, x.attrs), kids))
+            memo[id(x)] = cid
+            return cid
+
+        return rec(e)
+
+    # -- merging ------------------------------------------------------------
+    def merge(self, a: int, b: int) -> int:
+        a, b = self.find(a), self.find(b)
+        if a == b:
+            return a
+        # keep the smaller id as root (stable)
+        if len(self.classes[a]) < len(self.classes[b]):
+            a, b = b, a
+        self.parent[b] = a
+        self.classes[a].extend(self.classes[b])
+        del self.classes[b]
+        sa, sb = self.shape.get(a), self.shape.pop(b, None)
+        if sa is None:
+            self.shape[a] = sb
+        self.worklist.append(a)
+        return a
+
+    def rebuild(self):
+        """Restore congruence closure.
+
+        Full-rehash fixpoint: re-canonicalize every node, merge congruent
+        duplicates, repeat until stable. O(N) per pass; our graphs are small
+        (<= ~40k nodes, <= ~12 saturation iterations) so this sound-and-simple
+        strategy is preferred over egg's incremental parents-worklist repair.
+        """
+        self.worklist.clear()
+        changed = True
+        while changed:
+            changed = False
+            new_hashcons: Dict[ENode, int] = {}
+            pending_merges: List[Tuple[int, int]] = []
+            for cid in list(self.classes.keys()):
+                root = self.find(cid)
+                if root != cid or root not in self.classes:
+                    continue
+                for n in self.classes[root]:
+                    cn = self.canon(n)
+                    other = new_hashcons.get(cn)
+                    if other is None:
+                        new_hashcons[cn] = root
+                    elif self.find(other) != root:
+                        pending_merges.append((other, root))
+            for a, b in pending_merges:
+                if self.find(a) != self.find(b):
+                    self.merge(a, b)
+                    changed = True
+            self.worklist.clear()
+            if not changed:
+                # final: dedupe class node lists & rewrite hashcons
+                self.hashcons = {}
+                for cid in list(self.classes.keys()):
+                    root = self.find(cid)
+                    seen = set()
+                    uniq = []
+                    for n in self.classes[root]:
+                        cn = self.canon(n)
+                        if cn not in seen:
+                            seen.add(cn)
+                            uniq.append(cn)
+                        self.hashcons[cn] = root
+                    self.classes[root] = uniq
+
+    # -- e-matching ----------------------------------------------------------
+    def ematch(self, pat, cid: int, subst: Dict[str, Any]):
+        """Yield extended substitutions matching ``pat`` against e-class cid."""
+        cid = self.find(cid)
+        if isinstance(pat, PatVar):
+            bound = subst.get(pat.name)
+            if bound is None:
+                s2 = dict(subst)
+                s2[pat.name] = cid
+                yield s2
+            elif self.find(bound) == cid:
+                yield subst
+            return
+        assert isinstance(pat, PatNode)
+        for n in list(self.classes.get(cid, ())):
+            if n.head[0] != "op" or n.head[1] != pat.op:
+                continue
+            attrs = dict(n.head[2])
+            if any(attrs.get(k) != v for k, v in pat.attrs):
+                continue
+            if len(n.children) != len(pat.args):
+                continue
+            s0 = dict(subst)
+            ok = True
+            for k in pat.attr_binds:
+                if k in s0 and s0[k] != attrs.get(k):
+                    ok = False
+                    break
+                s0[k] = attrs.get(k)
+            if not ok:
+                continue
+            stack = [s0]
+            for sub_pat, child in zip(pat.args, n.children):
+                nxt = []
+                for s in stack:
+                    nxt.extend(self.ematch(sub_pat, child, s))
+                stack = nxt
+                if not stack:
+                    break
+            yield from stack
+
+    def search(self, pat):
+        """All (eclass, subst) matches of ``pat`` anywhere in the graph."""
+        out = []
+        for cid in list(self.classes.keys()):
+            for s in self.ematch(pat, cid, {}):
+                out.append((self.find(cid), s))
+        return out
+
+    # -- instantiation --------------------------------------------------------
+    def instantiate(self, template, subst: Dict[str, Any]) -> int:
+        if isinstance(template, PatVar):
+            return self.find(subst[template.name])
+        if isinstance(template, ir.Const):
+            return self.add(ENode(("const", template.value)))
+        assert isinstance(template, PatNode)
+        kids = tuple(self.instantiate(a, subst) for a in template.args)
+        attrs = []
+        for k, v in template.attrs:
+            attrs.append((k, v))
+        for k in template.attr_binds:
+            attrs.append((k, subst[k]))
+        return self.add(ENode(op_head(template.op, tuple(sorted(attrs))), kids))
+
+
+def _op_shape(op, attrs, child_shapes):
+    """Shape semantics mirrored from ir._infer but over raw shapes."""
+    cs = child_shapes
+    if op in ("add", "sub", "mul", "maximum", "vta_add"):
+        return tuple(np.broadcast_shapes(cs[0], cs[1]))
+    if op in ("relu", "sigmoid", "tanh", "negative", "softmax", "vta_relu",
+              "bias_add", "layer_norm", "fasr_layernorm",
+              "fasr_store", "fasr_load", "vta_store", "vta_load"):
+        return cs[0]
+    if op in ("dense", "vta_gemm"):
+        return cs[0][:-1] + (cs[1][0],)
+    if op in ("fasr_linear",):
+        return cs[0][:-1] + (cs[1][0],)
+    if op == "reshape":
+        return tuple(attrs["shape"])
+    if op == "transpose":
+        return tuple(cs[0][a] for a in attrs["axes"])
+    if op in ("conv2d", "hlscnn_conv2d"):
+        n, h, w, c = cs[0]
+        kh, kw, ci, co = cs[1]
+        (sh, sw), (ph, pw) = attrs["strides"], attrs["padding"]
+        return (n, (h + 2 * ph - kh) // sh + 1, (w + 2 * pw - kw) // sw + 1, co)
+    if op == "pad2d":
+        n, h, w, c = cs[0]
+        ph, pw = attrs["pad"]
+        return (n, h + 2 * ph, w + 2 * pw, c)
+    if op == "dw_conv2d":
+        n, h, w, c = cs[0]
+        kh, kw = cs[1][0], cs[1][1]
+        (sh, sw), (ph, pw) = attrs["strides"], attrs["padding"]
+        return (n, (h + 2 * ph - kh) // sh + 1, (w + 2 * pw - kw) // sw + 1, c)
+    if op == "im2col":
+        n, h, w, c = cs[0]
+        kh, kw, sh, sw = attrs["kh"], attrs["kw"], attrs["sh"], attrs["sw"]
+        return (n * ((h - kh) // sh + 1) * ((w - kw) // sw + 1), kh * kw * c)
+    if op == "windows":
+        h, w = cs[0]
+        wh, ww, sh, sw = attrs["wh"], attrs["ww"], attrs["sh"], attrs["sw"]
+        return ((h - wh) // sh + 1, (w - ww) // sw + 1, wh, ww)
+    if op == "flatten_window":
+        oh, ow, wh, ww = cs[0]
+        return (oh * ow, wh * ww)
+    if op in ("reduce_max", "reduce_mean", "reduce_sum"):
+        ax = attrs["axis"]
+        axes = (ax,) if isinstance(ax, int) else tuple(ax)
+        axes = tuple(a % len(cs[0]) for a in axes)
+        return tuple(s for i, s in enumerate(cs[0]) if i not in axes)
+    if op in ("zeros", "ones"):
+        return tuple(attrs["shape"])
+    if op == "concat":
+        ax = attrs["axis"]
+        out = list(cs[0])
+        out[ax] = sum(s[ax] for s in cs)
+        return tuple(out)
+    if op in ("lstm", "fasr_lstm"):
+        return (cs[0][0], cs[0][1], cs[2][1])
+    if op == "lstm_cell":
+        return cs[1]
+    if op in ("attention", "fasr_attention"):
+        return cs[0][:-1] + (cs[2][-1],)
+    if op in ("fasr_maxpool", "fasr_meanpool"):
+        return (cs[0][0] // 2,) + tuple(cs[0][1:])
+    return None
+
+
+# --------------------------------------------------------------------------
+# Rewrites and the saturation loop
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Rewrite:
+    name: str
+    lhs: Any                              # pattern
+    rhs: Any = None                       # template, or None if applier used
+    applier: Optional[Callable] = None    # fn(egraph, cid, subst) -> new cid | None
+    guard: Optional[Callable] = None      # fn(egraph, cid, subst) -> bool
+
+
+def run_rewrites(
+    eg: EGraph,
+    rules: Sequence[Rewrite],
+    iters: int = 12,
+    node_limit: int = 40_000,
+) -> Dict[str, Any]:
+    """Equality saturation: apply rules to fixpoint / limits. Returns stats."""
+    stats = {"iterations": 0, "applications": 0, "saturated": False}
+    for it in range(iters):
+        matches = []
+        for r in rules:
+            for cid, subst in eg.search(r.lhs):
+                matches.append((r, cid, subst))
+        changed = False
+        for r, cid, subst in matches:
+            if eg.n_nodes > node_limit:
+                break
+            cid = eg.find(cid)
+            if r.guard is not None and not r.guard(eg, cid, subst):
+                continue
+            if r.applier is not None:
+                new = r.applier(eg, cid, subst)
+            else:
+                new = eg.instantiate(r.rhs, subst)
+            if new is None:
+                continue
+            if eg.find(new) != eg.find(cid):
+                eg.merge(cid, new)
+                changed = True
+                stats["applications"] += 1
+        eg.rebuild()
+        stats["iterations"] = it + 1
+        if not changed:
+            stats["saturated"] = True
+            break
+        if eg.n_nodes > node_limit:
+            break
+    return stats
+
+
+# --------------------------------------------------------------------------
+# Extraction
+# --------------------------------------------------------------------------
+
+
+def default_cost(head: Head, child_costs: Sequence[float]) -> float:
+    """Paper's proof-of-concept cost: maximize #accelerator ops == make
+    accelerator ops cheap and plain IR compute expensive."""
+    base = sum(child_costs)
+    if head[0] != "op":
+        return base + 0.01
+    op = head[1]
+    if op in ir.ACCEL_OPS:
+        return base + 1.0           # accelerator invocation: cheap
+    if op in ("dense", "conv2d", "lstm", "attention", "lstm_cell"):
+        return base + 1000.0        # heavy compute left on host: expensive
+    if op in ("layer_norm", "softmax", "reduce_max", "reduce_mean", "reduce_sum"):
+        return base + 100.0
+    return base + 2.0               # cheap glue
+
+
+def extract(eg: EGraph, root: int, cost_fn=default_cost) -> ir.Expr:
+    """Bottom-up DP extraction of the min-cost expression for ``root``."""
+    root = eg.find(root)
+    best: Dict[int, Tuple[float, ENode]] = {}
+    changed = True
+    guard = 0
+    while changed:
+        changed = False
+        guard += 1
+        if guard > 10_000:
+            raise RuntimeError("extract: no fixpoint")
+        for cid, nodes in eg.classes.items():
+            for n in nodes:
+                cc = []
+                ok = True
+                for ch in n.children:
+                    ch = eg.find(ch)
+                    if ch not in best:
+                        ok = False
+                        break
+                    cc.append(best[ch][0])
+                if not ok:
+                    continue
+                c = cost_fn(n.head, cc)
+                if cid not in best or c < best[cid][0]:
+                    best[cid] = (c, n)
+                    changed = True
+    if root not in best:
+        raise RuntimeError("extract: root has no finite-cost expression")
+
+    memo: Dict[int, ir.Expr] = {}
+
+    def build(cid: int) -> ir.Expr:
+        cid = eg.find(cid)
+        if cid in memo:
+            return memo[cid]
+        _, n = best[cid]
+        if n.head[0] == "var":
+            e = ir.Var(n.head[1], tuple(n.head[2]), n.head[3])
+        elif n.head[0] == "const":
+            e = ir.Const(n.head[1])
+        else:
+            args = tuple(build(c) for c in n.children)
+            e = ir.Call(n.head[1], args, tuple(n.head[2]))
+        memo[cid] = e
+        return e
+
+    return build(root)

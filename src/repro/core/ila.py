@@ -1,0 +1,206 @@
+"""Instruction-Level Abstraction (ILA) formalism in JAX.
+
+Mirrors ILAng's model (Huang et al., TODAES'18; Figure 6 of the paper):
+
+* an ILA has **architectural state** — named buffers/registers, here a dict
+  of arrays (a pytree);
+* each **instruction** corresponds to one command at the accelerator's
+  interface (an MMIO write in the paper) and is given by a **decode**
+  predicate over the command plus a **state-update function**;
+* a **program fragment** is a sequence of commands; simulation folds the
+  update functions over the fragment — exactly ILAng's auto-generated
+  software simulator, but jit-able (``lax.scan`` + ``lax.switch``).
+
+Commands are uniform records so fragments can be stacked into arrays:
+
+    Command(opcode: int, addr: int, data: float32[V])
+
+``V`` is the interface vector width (16 lanes for FlexASR, like the real
+128-bit MMIO payload of Figure 1). Wide tensors are moved one V-lane row per
+command — faithfully reproducing the granularity mismatch between IR tensors
+and accelerator interface commands that D2A is designed to bridge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+State = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Command:
+    opcode: int
+    addr: int = 0
+    data: Tuple[float, ...] = ()
+
+    def as_arrays(self, vwidth: int):
+        d = np.zeros((vwidth,), np.float32)
+        d[: len(self.data)] = self.data
+        return np.int32(self.opcode), np.int32(self.addr), d
+
+
+@dataclasses.dataclass(frozen=True)
+class Instruction:
+    """One ILA instruction: name + opcode + state-update semantics.
+
+    ``update(state, addr, data) -> state`` must be pure & jit-able.
+    ``decode`` defaults to opcode equality (address-map dispatch, like the
+    MMIO address decode in Figure 6's ``SetDecode``).
+    """
+
+    name: str
+    opcode: int
+    update: Callable[[State, jnp.ndarray, jnp.ndarray], State]
+    doc: str = ""
+
+
+class ILA:
+    """An accelerator (or compiler-IR) ILA model."""
+
+    def __init__(self, name: str, vwidth: int = 16):
+        self.name = name
+        self.vwidth = vwidth
+        self.instructions: List[Instruction] = []
+        self._by_opcode: Dict[int, Instruction] = {}
+        self._state_init: Dict[str, Callable[[], jnp.ndarray]] = {}
+
+    # -- model construction ---------------------------------------------
+    def state(self, name: str, init: Callable[[], jnp.ndarray]):
+        self._state_init[name] = init
+
+    def instruction(self, name: str, opcode: int, doc: str = ""):
+        def deco(fn):
+            ins = Instruction(name, opcode, fn, doc)
+            self.instructions.append(ins)
+            self._by_opcode[opcode] = ins
+            return fn
+
+        return deco
+
+    def init_state(self) -> State:
+        return {k: f() for k, f in self._state_init.items()}
+
+    # -- simulation --------------------------------------------------------
+    def simulate(self, commands: Sequence[Command], state: Optional[State] = None) -> State:
+        """Reference (eager, per-command) simulation — the analogue of the
+        ILAng-generated sequential C++ simulator."""
+        st = dict(state) if state is not None else self.init_state()
+        for cmd in commands:
+            ins = self._by_opcode.get(cmd.opcode)
+            if ins is None:
+                raise KeyError(f"{self.name}: no instruction decodes opcode {cmd.opcode}")
+            _, addr, data = cmd.as_arrays(self.vwidth)
+            st = ins.update(st, jnp.asarray(addr), jnp.asarray(data))
+        return st
+
+    def pack_program(self, commands: Sequence[Command]):
+        ops = np.array([c.opcode for c in commands], np.int32)
+        addrs = np.array([c.addr for c in commands], np.int32)
+        data = np.zeros((len(commands), self.vwidth), np.float32)
+        for i, c in enumerate(commands):
+            data[i, : len(c.data)] = c.data
+        return jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(data)
+
+    def make_jit_simulator(self):
+        """Build a jit-compiled fragment simulator: lax.scan over the packed
+        command stream with lax.switch dispatch on opcode.
+
+        All instruction updates must preserve state shapes/dtypes (they do:
+        ILA state is fixed architectural state, like hardware registers).
+        """
+        instrs = sorted(self.instructions, key=lambda i: i.opcode)
+        opcode_to_branch = {ins.opcode: b for b, ins in enumerate(instrs)}
+        # dense opcode -> branch lookup table
+        max_op = max(opcode_to_branch) + 1
+        lut = np.zeros((max_op,), np.int32)
+        for op, b in opcode_to_branch.items():
+            lut[op] = b
+        lut = jnp.asarray(lut)
+
+        branches = []
+        for ins in instrs:
+            def mk(u):
+                def br(operand):
+                    st, addr, data = operand
+                    return u(st, addr, data)
+
+                return br
+
+            branches.append(mk(ins.update))
+
+        def step(st, cmd):
+            op, addr, data = cmd
+            st2 = jax.lax.switch(lut[op], branches, (st, addr, data))
+            return st2, ()
+
+        @jax.jit
+        def run(state, ops, addrs, data):
+            final, _ = jax.lax.scan(step, state, (ops, addrs, data))
+            return final
+
+        return run
+
+    def simulate_jit(self, commands: Sequence[Command], state: Optional[State] = None) -> State:
+        """Jit-compiled simulation; the compiled scan is cached (jax.jit
+        retraces only per distinct command-stream length)."""
+        st = state if state is not None else self.init_state()
+        if not hasattr(self, "_jit_run"):
+            self._jit_run = self.make_jit_simulator()
+        return self._jit_run(st, *self.pack_program(commands))
+
+
+# --------------------------------------------------------------------------
+# Fragments & mappings (Section 2.1.3)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Fragment:
+    """A program fragment: a sequence of ILA commands for one accelerator
+    operation, plus how tensors marshal in/out of architectural state."""
+
+    ila: ILA
+    commands: List[Command]
+
+    def __len__(self):
+        return len(self.commands)
+
+
+@dataclasses.dataclass
+class IRAccelMapping:
+    """An IR-accelerator mapping (Figure 3): the compiler-IR pattern (as an
+    IR op name + arity) on one side, and a fragment *builder* on the other.
+
+    ``build_fragment(inputs...) -> (commands, read_out)`` assembles the
+    command stream for concrete operand values and returns a function
+    extracting the result from final architectural state.
+    """
+
+    name: str
+    accelerator: str
+    ir_op: str
+    build_fragment: Callable[..., Tuple[List[Command], Callable[[State], jnp.ndarray]]]
+    doc: str = ""
+
+
+class MappingRegistry:
+    def __init__(self):
+        self._maps: Dict[str, IRAccelMapping] = {}
+
+    def register(self, m: IRAccelMapping):
+        self._maps[m.ir_op] = m
+
+    def get(self, ir_op: str) -> Optional[IRAccelMapping]:
+        return self._maps.get(ir_op)
+
+    def all(self):
+        return list(self._maps.values())
+
+
+REGISTRY = MappingRegistry()

@@ -1,0 +1,345 @@
+"""Rewrite rules for flexible matching (Section 2.2 + Section 5.1 + Fig. 7).
+
+Two families, exactly as in the paper:
+
+* **Compiler-IR rewrites** — accelerator-independent equivalences that expose
+  more match sites: linear-layer canonicalization, add commutativity,
+  dense -> dense+0 bias introduction, conv2d -> im2col -> GEMM (the paper's
+  "emergent effect" that lets VTA run convolutions), and the 2D-maxpool
+  decomposition into FlexASR temporal (2,1)/(2,1) poolings of Figure 7.
+
+* **IR-accelerator rewrites** — derived from the IR-accelerator mappings:
+  each replaces a compiler-IR pattern by the corresponding accelerator
+  intrinsic (which codegen later lowers to an ILA command stream).
+
+* **Data-transfer cancellation** — (fasr_store (fasr_load ?x)) -> ?x of
+  Section 5.1, removing redundant HBM<->accelerator round trips.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import numpy as np
+
+from . import ir
+from .egraph import EGraph, ENode, P, PatVar, Rewrite, V, op_head
+
+
+# --------------------------------------------------------------------------
+# helpers for appliers
+# --------------------------------------------------------------------------
+
+
+def _shape(eg: EGraph, cid: int):
+    return eg.shape[eg.find(cid)]
+
+
+def _add_op(eg: EGraph, op: str, children, **attrs) -> int:
+    return eg.add(ENode(op_head(op, tuple(sorted(attrs.items()))), tuple(children)))
+
+
+# --------------------------------------------------------------------------
+# Compiler-IR rewrites
+# --------------------------------------------------------------------------
+
+
+def _linear_reshape_guard(eg, cid, s):
+    """(add (reshape (dense a b) s) c): c must be a vector broadcastable over
+    the reshaped dense output (the condition "when %c is a vector, for
+    certain shapes %s" of Section 2.2.2)."""
+    a = _shape(eg, s["a"])
+    b = _shape(eg, s["b"])
+    d = a[:-1] + (b[0],)
+    c = _shape(eg, s["c"])
+    tgt = tuple(s["shape"])
+    if len(c) != 1 or c[0] != d[-1]:
+        return False
+    return tgt[-1] == d[-1] and int(np.prod(tgt)) == int(np.prod(d))
+
+
+def _linear_reshape_applier(eg, cid, s):
+    # -> (reshape (bias_add (dense a b) c) s)
+    d = _add_op(eg, "dense", [s["a"], s["b"]])
+    ba = _add_op(eg, "bias_add", [d, s["c"]])
+    return _add_op(eg, "reshape", [ba], shape=tuple(s["shape"]))
+
+
+def _dense_zero_applier(eg, cid, s):
+    dshape = _shape(eg, cid)
+    z = _add_op(eg, "zeros", [], shape=(dshape[-1],))
+    d = _add_op(eg, "dense", [s["a"], s["b"]])
+    return _add_op(eg, "bias_add", [d, z])
+
+
+def _im2col_guard(eg, cid, s):
+    return tuple(s["padding"]) == (0, 0)
+
+
+def _hoist_pad_applier(eg, cid, s):
+    padded = _add_op(eg, "pad2d", [s["x"]], pad=tuple(s["padding"]))
+    return _add_op(
+        eg, "conv2d", [padded, s["w"]], strides=tuple(s["strides"]), padding=(0, 0)
+    )
+
+
+def _im2col_applier(eg, cid, s):
+    """conv2d(x, w) -> reshape(dense(im2col(x), wmat), out_shape).
+
+    w is HWIO; wmat = reshape(transpose(w, OHWI), (CO, KH*KW*CI)).
+    """
+    xs = _shape(eg, s["x"])
+    ws = _shape(eg, s["w"])
+    n, h, wdim, c = xs
+    kh, kw, ci, co = ws
+    sh, sw = s["strides"]
+    oh, ow = (h - kh) // sh + 1, (wdim - kw) // sw + 1
+    patches = _add_op(eg, "im2col", [s["x"]], kh=kh, kw=kw, sh=sh, sw=sw)
+    wt = _add_op(eg, "transpose", [s["w"]], axes=(3, 0, 1, 2))
+    wmat = _add_op(eg, "reshape", [wt], shape=(co, kh * kw * ci))
+    d = _add_op(eg, "dense", [patches, wmat])
+    return _add_op(eg, "reshape", [d], shape=(n, oh, ow, co))
+
+
+def _maxpool_decomp_guard(eg, cid, s):
+    wh, ww = s["wh"], s["ww"]
+    k = wh * ww
+    # decomposable when the window has a power-of-two element count > 1
+    return k > 1 and (k & (k - 1)) == 0
+
+
+def _pool_decomp_applier(kind):
+    """Figure 7: 2D pooling (wh,ww)/(sh,sw) == reshape of log2(wh*ww)
+    pairwise-row poolings of the transposed flattened window matrix."""
+
+    red = "reduce_max" if kind == "max" else "reduce_mean"
+
+    def applier(eg, cid, s):
+        wh, ww, sh, sw = s["wh"], s["ww"], s["sh"], s["sw"]
+        tsh = _shape(eg, s["T"])
+        hh, wwdim = tsh
+        oh, ow = (hh - wh) // sh + 1, (wwdim - ww) // sw + 1
+        k = int(math.log2(wh * ww))
+        wins = _add_op(eg, "windows", [s["T"]], wh=wh, ww=ww, sh=sh, sw=sw)
+        flat = _add_op(eg, "flatten_window", [wins])          # (OH*OW, WH*WW)
+        cur = _add_op(eg, "transpose", [flat], axes=(1, 0))   # (WH*WW, OH*OW)
+        for _ in range(k):
+            w2 = _add_op(eg, "windows", [cur], wh=2, ww=1, sh=2, sw=1)
+            cur = _add_op(eg, red, [w2], axis=(2, 3))
+        return _add_op(eg, "reshape", [cur], shape=(oh, ow))
+
+    return applier
+
+
+def compiler_ir_rewrites() -> List[Rewrite]:
+    return [
+        Rewrite(
+            "add-comm",
+            P("add", V("a"), V("b")),
+            P("add", V("b"), V("a")),
+        ),
+        Rewrite(
+            "linear-reshape",
+            P("add", P("reshape", P("dense", V("a"), V("b")), attr_binds=("shape",)), V("c")),
+            guard=_linear_reshape_guard,
+            applier=_linear_reshape_applier,
+        ),
+        Rewrite(
+            "dense-zero-bias",
+            P("dense", V("a"), V("b")),
+            applier=_dense_zero_applier,
+        ),
+        Rewrite(
+            # host-side padding (Appendix A: "our implementation pads on the
+            # host before invoking the accelerator")
+            "conv2d-hoist-pad",
+            P("conv2d", V("x"), V("w"), attr_binds=("strides", "padding")),
+            guard=lambda eg, cid, s: tuple(s["padding"]) != (0, 0),
+            applier=_hoist_pad_applier,
+        ),
+        Rewrite(
+            "conv2d-im2col",
+            P(
+                "conv2d",
+                V("x"),
+                V("w"),
+                attr_binds=("strides", "padding"),
+            ),
+            guard=_im2col_guard,
+            applier=_im2col_applier,
+        ),
+        Rewrite(
+            "maxpool-decompose",
+            P(
+                "reduce_max",
+                P("windows", V("T"), attr_binds=("wh", "ww", "sh", "sw")),
+                attrs=(("axis", (2, 3)),),
+            ),
+            guard=_maxpool_decomp_guard,
+            applier=_pool_decomp_applier("max"),
+        ),
+        # reshape(x, shape(x)) -> x
+        Rewrite(
+            "reshape-noop",
+            P("reshape", V("x"), attr_binds=("shape",)),
+            guard=lambda eg, cid, s: tuple(s["shape"]) == _shape(eg, s["x"]),
+            applier=lambda eg, cid, s: eg.find(s["x"]),
+        ),
+    ]
+
+
+# --------------------------------------------------------------------------
+# IR-accelerator rewrites
+# --------------------------------------------------------------------------
+
+
+def _conv_to_hlscnn_applier(eg, cid, s):
+    return _add_op(
+        eg,
+        "hlscnn_conv2d",
+        [s["x"], s["w"]],
+        strides=tuple(s["strides"]),
+        padding=tuple(s["padding"]),
+    )
+
+
+def _ln_to_fasr_applier(eg, cid, s):
+    return _add_op(eg, "fasr_layernorm", [s["x"], s["g"], s["b"]], eps=s["eps"])
+
+
+# Device capacity limits (instruction-selection legality): a mapping only
+# applies when operands fit the accelerator's architectural state. Row
+# dimensions are driver-chunkable (codegen tiles them), so only feature
+# dims are constrained.
+FASR_MAX_D = 128   # flexasr.MAX_IN
+FASR_MAX_T = 128   # flexasr.MAX_TS (attention KV length; not chunkable)
+FASR_MAX_H = 64    # flexasr.MAX_H
+HLSCNN_MAX_HW = 16
+HLSCNN_MAX_C = 32
+HLSCNN_MAX_K = 32
+HLSCNN_MAX_KHW = 5
+
+
+def _fasr_linear_guard(eg, cid, s):
+    b = _shape(eg, s["b"])
+    return len(_shape(eg, s["c"])) == 1 and b[1] <= FASR_MAX_D and b[0] <= FASR_MAX_D
+
+
+def _fasr_lstm_guard(eg, cid, s):
+    wi = _shape(eg, s["wi"])
+    wh = _shape(eg, s["wh"])
+    return wi[1] <= FASR_MAX_D and wh[1] <= FASR_MAX_H
+
+
+def _fasr_attn_guard(eg, cid, s):
+    q = _shape(eg, s["q"])
+    k = _shape(eg, s["k"])
+    return q[-1] <= FASR_MAX_D and q[-2] <= FASR_MAX_T and k[-2] <= FASR_MAX_T
+
+
+def flexasr_rewrites() -> List[Rewrite]:
+    return [
+        Rewrite(
+            "fasr-linear",
+            P("bias_add", P("dense", V("a"), V("b")), V("c")),
+            P("fasr_linear", V("a"), V("b"), V("c")),
+            guard=_fasr_linear_guard,
+        ),
+        Rewrite(
+            "fasr-lstm",
+            P("lstm", V("x"), V("wi"), V("wh"), V("b")),
+            P("fasr_lstm", V("x"), V("wi"), V("wh"), V("b")),
+            guard=_fasr_lstm_guard,
+        ),
+        Rewrite(
+            "fasr-attention",
+            P("attention", V("q"), V("k"), V("v")),
+            P("fasr_attention", V("q"), V("k"), V("v")),
+            guard=_fasr_attn_guard,
+        ),
+        Rewrite(
+            "fasr-layernorm",
+            P("layer_norm", V("x"), V("g"), V("b"), attr_binds=("eps",)),
+            guard=lambda eg, cid, s: _shape(eg, s["x"])[-1] <= FASR_MAX_D,
+            applier=_ln_to_fasr_applier,
+        ),
+        Rewrite(
+            "fasr-maxpool",
+            P(
+                "reduce_max",
+                P("windows", V("T"), attrs=(("wh", 2), ("ww", 1), ("sh", 2), ("sw", 1))),
+                attrs=(("axis", (2, 3)),),
+            ),
+            # no width guard: pooling is elementwise across features, so the
+            # driver chunks wide matrices column-wise (codegen._fasr_pool)
+            P("fasr_load", P("fasr_maxpool", P("fasr_store", V("T")))),
+        ),
+        Rewrite(
+            "fasr-meanpool",
+            P(
+                "reduce_mean",
+                P("windows", V("T"), attrs=(("wh", 2), ("ww", 1), ("sh", 2), ("sw", 1))),
+                attrs=(("axis", (2, 3)),),
+            ),
+            P("fasr_load", P("fasr_meanpool", P("fasr_store", V("T")))),
+        ),
+        # Section 5.1: cancel redundant accelerator<->host round trips
+        Rewrite(
+            "fasr-store-load-cancel",
+            P("fasr_store", P("fasr_load", V("x"))),
+            V("x"),
+        ),
+    ]
+
+
+def _hlscnn_guard(eg, cid, s):
+    n, h, w, c = _shape(eg, s["x"])
+    kh, kw, ci, k = _shape(eg, s["w"])
+    ph, pw = s["padding"]
+    return (
+        h + 2 * ph <= HLSCNN_MAX_HW
+        and w + 2 * pw <= HLSCNN_MAX_HW
+        and c <= HLSCNN_MAX_C
+        and k <= HLSCNN_MAX_K
+        and kh <= HLSCNN_MAX_KHW
+        and kw <= HLSCNN_MAX_KHW
+    )
+
+
+def hlscnn_rewrites() -> List[Rewrite]:
+    return [
+        Rewrite(
+            "hlscnn-conv2d",
+            P("conv2d", V("x"), V("w"), attr_binds=("strides", "padding")),
+            guard=_hlscnn_guard,
+            applier=_conv_to_hlscnn_applier,
+        ),
+    ]
+
+
+def vta_rewrites() -> List[Rewrite]:
+    return [
+        Rewrite("vta-gemm", P("dense", V("a"), V("b")), P("vta_gemm", V("a"), V("b"))),
+        Rewrite("vta-add", P("add", V("a"), V("b")), P("vta_add", V("a"), V("b"))),
+        Rewrite("vta-relu", P("relu", V("x")), P("vta_relu", V("x"))),
+    ]
+
+
+def accelerator_rewrites(targets=("flexasr", "hlscnn", "vta")) -> List[Rewrite]:
+    out: List[Rewrite] = []
+    if "flexasr" in targets:
+        out += flexasr_rewrites()
+    if "hlscnn" in targets:
+        out += hlscnn_rewrites()
+    if "vta" in targets:
+        out += vta_rewrites()
+    return out
+
+
+def all_rewrites(targets=("flexasr", "hlscnn", "vta"), flexible=True) -> List[Rewrite]:
+    """flexible=False == the paper's *exact matching* baseline (only the
+    IR-accelerator rewrites); flexible=True adds the compiler-IR rewrites."""
+    out = accelerator_rewrites(targets)
+    if flexible:
+        out = compiler_ir_rewrites() + out
+    return out

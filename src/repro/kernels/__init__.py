@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (+ ops.py jit wrappers, ref.py oracles).
+
+int8_gemm  — VTA's int8 GEMM core on the MXU
+af_gemm    — FlexASR's AdaptivFloat linear layer (quantize-on-load fused)
+flash_attention — online-softmax attention with GQA (serving/training hotspot)
+"""

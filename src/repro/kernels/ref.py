@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the bit-accurate semantic reference its kernel must match
+(``assert_allclose`` in tests across shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..accel import numerics
+from ..accel.numerics import AdaptivFloatSpec
+
+
+def int8_gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a:(M,K) int8, b:(N,K) int8 -> (M,N) int32 (exact integer GEMM)."""
+    return jnp.dot(
+        a.astype(jnp.int32), b.astype(jnp.int32).T, preferred_element_type=jnp.int32
+    )
+
+
+def af_gemm_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    exp_bias_w: float,
+    exp_bias_x: float,
+    exp_bias_o: float,
+    spec: AdaptivFloatSpec = AdaptivFloatSpec(8, 3),
+) -> jnp.ndarray:
+    """FlexASR LinearLayer semantics: AFq(AFq(x) @ AFq(w)^T + b).
+
+    Matches ``flexasr._fn_linear`` (fp32 accumulation, AF re-quantized out).
+    """
+    xq = numerics.af_quantize(x, spec, exp_bias=exp_bias_x)
+    wq = numerics.af_quantize(w, spec, exp_bias=exp_bias_w)
+    y = xq @ wq.T + b[None, :]
+    return numerics.af_quantize(y, spec, exp_bias=exp_bias_o)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True
+) -> jnp.ndarray:
+    """q,k,v: (B, H, S, D) -> (B, H, S, D), fp32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / jnp.sqrt(float(d))
+    if causal:
+        S, Sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((S, Sk), bool), k=Sk - S)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,176 @@
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell, lower + compile the
+appropriate step (train_step / prefill / decode serve_step) against
+ShapeDtypeStruct inputs — no allocation — and record:
+
+  * memory_analysis()  — bytes per device (fits / doesn't fit v5e HBM)
+  * cost_analysis()    — HLO FLOPs & bytes (roofline compute/memory terms)
+  * collective bytes   — parsed from the optimized HLO text (roofline
+    collective term): all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute operand sizes
+
+Results land in a JSON file consumed by the roofline report + EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+# The VERY FIRST lines must configure the fake device count, before ANY
+# other import that could initialize jax.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, DASHED, get_config
+from ..models import api
+from ..models.config import SHAPES
+from ..roofline.analysis import collective_bytes_from_hlo, roofline_report
+from . import steps as st
+from .mesh import make_production_mesh
+
+
+def shape_kind_step(cfg, shape, mesh):
+    if shape.kind == "train":
+        return st.make_train_step(cfg, shape, mesh), "train_step"
+    if shape.kind == "prefill":
+        return st.make_serve_step(cfg, shape, mesh, "prefill"), "prefill_step"
+    return st.make_serve_step(cfg, shape, mesh, "decode"), "serve_step"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             capture_hlo: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = api.cell_is_supported(cfg, shape)
+    cell = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "skipped" if not ok else None, "reason": why or None,
+    }
+    if not ok:
+        return cell
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        bundle, step_name = shape_kind_step(cfg, shape, mesh)
+        with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else mesh:
+            jitted = jax.jit(
+                bundle.fn,
+                in_shardings=bundle.in_shardings,
+                out_shardings=bundle.out_shardings,
+                donate_argnums=bundle.donate_argnums,
+            )
+            lowered = jitted.lower(*bundle.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            # accounting pass: re-lower (never compile) with model scans
+            # fully unrolled -> trip-count-correct flops/bytes. NB: must use
+            # a FRESH jit wrapper — the original one has a cached trace that
+            # would ignore the unroll contextvar.
+            acct = {}
+            try:
+                from ..models import layers as mlayers
+
+                fresh = jax.jit(
+                    lambda *a: bundle.fn(*a),
+                    in_shardings=bundle.in_shardings,
+                    out_shardings=bundle.out_shardings,
+                )
+                with mlayers.accounting_unroll():
+                    acct_lowered = fresh.lower(*bundle.abstract_args)
+                aca = acct_lowered.cost_analysis() or {}
+                # lowered.cost_analysis is GLOBAL (pre-partitioning);
+                # normalize to per-device to match compiled.cost_analysis
+                n_dev_ = int(np.prod(mesh.devices.shape))
+                acct = {
+                    "acct_flops": float(aca.get("flops", 0.0)) / n_dev_,
+                    "acct_bytes": float(aca.get("bytes accessed", 0.0)) / n_dev_,
+                    "acct_flops_global": float(aca.get("flops", 0.0)),
+                }
+            except Exception as e:
+                acct = {"acct_error": f"{type(e).__name__}: {e}"}
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        coll = {}
+        if capture_hlo:
+            try:
+                hlo = compiled.as_text()
+            except Exception:
+                hlo = lowered.as_text()
+            coll = collective_bytes_from_hlo(hlo)
+        n_dev = int(np.prod(mesh.devices.shape))
+        cell.update({
+            "status": "ok",
+            "step": step_name,
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "arg_bytes_per_dev": int(ma.argument_size_in_bytes),
+            "out_bytes_per_dev": int(ma.output_size_in_bytes),
+            "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
+            "peak_bytes_per_dev": int(
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes
+            ),
+            "hlo_flops": float(ca.get("flops", 0.0)),
+            "hlo_bytes": float(ca.get("bytes accessed", 0.0)),
+            **acct,
+            "collectives": coll,
+            "model_params": cfg.n_params(),
+            "model_active_params": cfg.n_active_params(),
+        })
+    except Exception as e:  # a failing cell is a bug in the system
+        cell.update({"status": "failed", "error": f"{type(e).__name__}: {e}",
+                     "traceback": traceback.format_exc()[-2000:]})
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--no-hlo", action="store_true", help="skip collective parsing (faster)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [DASHED.get(args.arch, args.arch)]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                print(f"=== {arch} x {shape} x {'2x16x16' if mp else '16x16'} ===", flush=True)
+                r = run_cell(arch, shape, multi_pod=mp, capture_hlo=not args.no_hlo)
+                print(json.dumps({k: v for k, v in r.items() if k != "traceback"}), flush=True)
+                results.append(r)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_fail = sum(1 for r in results if r["status"] == "failed")
+    print(f"DONE: {n_ok} ok, {n_skip} skipped, {n_fail} failed -> {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Sharding rules: map every parameter / optimizer / batch / cache leaf to a
+PartitionSpec for the production mesh.
+
+Strategy (DESIGN.md §5):
+  * TP over 'model': attention heads, FFN hidden, vocab, MoE experts (EP),
+    Mamba inner channels.
+  * FSDP over 'data' (+'pod'): the remaining large axis of every weight.
+  * DP over 'pod'+'data' for the batch.
+  * decode caches: batch over 'data' when batch >= mesh data size, else
+    sequence over 'data' (long_500k SP); kv-heads/inner dim over 'model'.
+
+Rules are path-regex -> spec-template, resolved against the actual pytree, so
+new parameters fail loudly rather than silently replicating.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig, ShapeConfig
+
+
+def _dp(mesh) -> Any:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+# (regex over "/"-joined path, spec builder given (ndim, dp))
+# Specs are written for the *unstacked* leaf; a leading layer axis (detected
+# by ndim mismatch) gets None prepended automatically.
+_RULES = [
+    # embeddings / heads
+    (r"(^|/)embed$", lambda dp: P("model", dp)),
+    (r"(^|/)tok_embed$", lambda dp: P("model", dp)),
+    (r"(^|/)lm_head$", lambda dp: P(dp, "model")),
+    # attention (GQA)
+    (r"/attn/q$|/self_attn/q$|/cross_attn/q$", lambda dp: P(dp, "model")),
+    (r"/attn/k$|/self_attn/k$|/cross_attn/k$", lambda dp: P(dp, "model")),
+    (r"/attn/v$|/self_attn/v$|/cross_attn/v$", lambda dp: P(dp, "model")),
+    (r"/attn/o$|/self_attn/o$|/cross_attn/o$", lambda dp: P("model", dp)),
+    # attention (MLA)
+    (r"/attn/q_down$", lambda dp: P(dp, "model")),
+    (r"/attn/q_up$", lambda dp: P(dp, "model")),
+    (r"/attn/kv_down$", lambda dp: P(dp, None)),
+    (r"/attn/kv_up$", lambda dp: P(dp, "model")),
+    (r"/attn/q_norm$|/attn/kv_norm$", lambda dp: P(None)),
+    # MLPs
+    (r"/mlp/w_gate$|/mlp/w_up$", lambda dp: P(dp, "model")),
+    (r"/mlp/w_down$", lambda dp: P("model", dp)),
+    # MoE
+    (r"/moe/router$", lambda dp: P(dp, None)),
+    (r"/moe/w_gate$|/moe/w_up$", lambda dp: P("model", dp, None)),
+    (r"/moe/w_down$", lambda dp: P("model", None, dp)),
+    (r"/moe/shared/w_gate$|/moe/shared/w_up$", lambda dp: P(dp, "model")),
+    (r"/moe/shared/w_down$", lambda dp: P("model", dp)),
+    # Mamba
+    (r"/ssm/in_proj$", lambda dp: P(dp, "model")),
+    (r"/ssm/conv_w$", lambda dp: P(None, "model")),
+    (r"/ssm/conv_b$", lambda dp: P("model")),
+    (r"/ssm/x_proj$", lambda dp: P("model", None)),
+    (r"/ssm/dt_proj$", lambda dp: P(None, "model")),
+    # per-channel scalars (A_log, dt_bias, D) are tiny: replicate — their
+    # stacked ranks differ between mamba1/mamba2 so axis-mapping is ambiguous
+    (r"/ssm/dt_bias$|/ssm/A_log$|/ssm/D$", lambda dp: P(None)),
+    (r"/ssm/norm_g$", lambda dp: P("model")),
+    (r"/ssm/out_proj$", lambda dp: P("model", dp)),
+    # MTP
+    (r"/mtp/proj$", lambda dp: P(dp, "model")),
+    # norms & everything 1-D per-feature
+    (r"ln|norm", lambda dp: P(None)),
+]
+
+
+def _spec_for(path: str, ndim: int, shape, dp) -> P:
+    for pat, builder in _RULES:
+        if re.search(pat, path):
+            spec = builder(dp)
+            # mamba2 A_log/dt_bias/D are (H,) not (di,N): adjust rank
+            parts = list(spec)
+            if len(parts) > ndim:
+                parts = parts[:ndim] if ndim > 0 else []
+            while len(parts) < ndim:
+                parts.insert(0, None)      # stacked layer axis etc.
+            # drop 'model' on axes not divisible by mesh model size later
+            return P(*parts)
+    # default: replicate small leaves, FSDP-shard big ones on last axis
+    if ndim == 0:
+        return P()
+    return P(*([None] * ndim))
+
+
+def param_specs(params, mesh) -> Any:
+    dp = _dp(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_spec(path, leaf):
+        p = "/".join(str(k.key) if hasattr(k, "key") else str(k) for k in path)
+        spec = _spec_for(p, leaf.ndim, leaf.shape, dp)
+        # sanity: drop mesh axes that don't divide the dim (uneven sharding is
+        # legal but wasteful; padding distorts the roofline numbers)
+        parts = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                parts.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            parts.append(ax if dim % total == 0 else None)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_specs(cfg: ArchConfig, mesh) -> Dict[str, P]:
+    dp = _dp(mesh)
+    out = {"tokens": P(dp, None)}
+    if cfg.family == "audio":
+        out["frames"] = P(dp, None, None)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes, mesh, batch: int) -> Any:
+    """cache_shapes: pytree of ShapeDtypeStructs from api.init_cache."""
+    dp = _dp(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    dp_total = int(np.prod([sizes[a] for a in dp_axes]))
+    batch_sharded = batch % dp_total == 0
+
+    def leaf_spec(path, leaf):
+        p = "/".join(str(k.key) if hasattr(k, "key") else str(k) for k in path)
+        nd = len(leaf.shape)
+        if "attn_k" in p or "attn_v" in p or p in ("k", "v") or p.endswith("/k") or p.endswith("/v") or "xk" in p or "xv" in p:
+            # (L_or_ng, B, S, KV, hd)
+            parts = [None] * nd
+            if batch_sharded:
+                parts[-4] = dp
+            else:
+                parts[-3] = dp         # SP: shard the sequence (long_500k)
+            if leaf.shape[-2] % sizes["model"] == 0:
+                parts[-2] = "model"
+            elif leaf.shape[-1] % sizes["model"] == 0:
+                parts[-1] = "model"
+            return P(*parts)
+        if "c_kv" in p or "k_rope" in p:
+            # (L, B, S, r)
+            parts = [None] * nd
+            if batch_sharded:
+                parts[1] = dp
+            else:
+                parts[2] = dp
+            if leaf.shape[-1] % sizes["model"] == 0:
+                parts[-1] = "model"
+            return P(*parts)
+        if "/conv" in p or p.endswith("conv"):
+            # (L, B, K-1, ch)
+            parts = [None] * nd
+            if batch_sharded:
+                parts[1] = dp
+            if leaf.shape[-1] % sizes["model"] == 0:
+                parts[-1] = "model"
+            return P(*parts)
+        if p.endswith("/h") or p == "h":
+            # mamba1 (L,B,di,N) / mamba2 (L,B,H,P,N)
+            parts = [None] * nd
+            if batch_sharded:
+                parts[1] = dp
+            if leaf.shape[2] % sizes["model"] == 0:
+                parts[2] = "model"
+            return P(*parts)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

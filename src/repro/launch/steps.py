@@ -1,0 +1,218 @@
+"""Jitted train / serve steps with explicit in/out shardings.
+
+``make_train_step``/``make_serve_step`` return (fn, in_shardings,
+out_shardings, abstract inputs) ready for ``jax.jit(...).lower().compile()``
+— used by both the real launcher and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import api
+from ..models import layers as mlayers
+from ..models.config import ArchConfig, ShapeConfig
+from .. import optim
+from . import sharding as shd
+
+
+def pick_optimizer(cfg: ArchConfig) -> str:
+    """671B-class models can't hold fp32 Adam state on one pod: use the
+    factored optimizer (DESIGN.md §5)."""
+    return "adafactor" if cfg.n_params() > 100e9 else "adamw"
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any                      # python callable (params/opt/batch...) -> ...
+    in_shardings: Any
+    out_shardings: Any
+    abstract_args: Tuple         # ShapeDtypeStructs matching fn's signature
+    donate_argnums: Tuple = ()
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def default_microbatches(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Gradient-accumulation factor: large-activation cells (MoE / huge
+    models at 1M-token batches) scan microbatches so per-layer residuals fit
+    HBM (§Perf iteration: deepseek train 255GB -> per-microbatch slices)."""
+    tokens = shape.global_batch * shape.seq_len
+    if cfg.n_params() > 100e9 or (cfg.n_experts and tokens > 262_144):
+        return min(16, max(1, shape.global_batch // 16))
+    return 1
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh,
+    optimizer: Optional[str] = None,
+    grad_compress_pod: bool = False,
+    lr: float = 3e-4,
+    warmup: int = 2000,
+    total_steps: int = 100_000,
+    microbatches: Optional[int] = None,
+) -> StepBundle:
+    opt_name = optimizer or pick_optimizer(cfg)
+    opt = optim.make_optimizer(opt_name)
+    mb = microbatches if microbatches is not None else default_microbatches(cfg, shape)
+
+    params_abs = abstract_params(cfg)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    pspecs = shd.param_specs(params_abs, mesh)
+    ospecs = jax.eval_shape(opt.init, pspecs) if False else _opt_specs(opt_abs, pspecs)
+    bspecs = shd.batch_specs(cfg, mesh)
+
+    batch_abs = api.train_input_specs(cfg, shape)
+    # loss_fn expects tokens (B, S+1): train_input_specs provides that.
+
+    def train_step(params, opt_state, batch, step):
+        with mlayers.mesh_hints(mesh):
+            if mb > 1:
+                # gradient accumulation: scan microbatches; grads in f32
+                micro = {k: v.reshape((mb, v.shape[0] // mb) + v.shape[1:])
+                         for k, v in batch.items()}
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def acc(carry, mbatch):
+                    gsum, lsum = carry
+                    lv, g = jax.value_and_grad(
+                        lambda p: api.loss_fn(cfg, p, mbatch))(params)
+                    gsum = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                    return (gsum, lsum + lv), ()
+
+                (gsum, lsum), _ = jax.lax.scan(
+                    acc, (g0, 0.0), micro, unroll=mlayers.scan_unroll())
+                grads = jax.tree_util.tree_map(lambda g: g / mb, gsum)
+                lvalue = lsum / mb
+            else:
+                lvalue, grads = jax.value_and_grad(
+                    lambda p: api.loss_fn(cfg, p, batch))(params)
+        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+        lr_t = optim.cosine_schedule(step, lr, warmup, total_steps)
+        new_params, new_opt = opt.update(params, grads, opt_state, lr_t)
+        metrics = {"loss": lvalue, "grad_norm": gnorm, "lr": lr_t}
+        return new_params, new_opt, metrics
+
+    in_shardings = (
+        shd.to_shardings(pspecs, mesh),
+        shd.to_shardings(ospecs, mesh),
+        shd.to_shardings(_dict_specs(batch_abs, bspecs), mesh),
+        NamedSharding(mesh, P()),
+    )
+    out_shardings = (
+        shd.to_shardings(pspecs, mesh),
+        shd.to_shardings(ospecs, mesh),
+        NamedSharding(mesh, P()),
+    )
+    step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    return StepBundle(
+        fn=train_step,
+        in_shardings=in_shardings,
+        out_shardings=out_shardings,
+        abstract_args=(params_abs, opt_abs, batch_abs, step_abs),
+        donate_argnums=(0, 1),
+    )
+
+
+def _dict_specs(batch_abs, bspecs):
+    return {k: bspecs.get(k, P(*([None] * len(v.shape)))) for k, v in batch_abs.items()}
+
+
+def _opt_specs(opt_abs, pspecs):
+    """Optimizer state sharding: `m` mirrors params (ZeRO); `v` mirrors
+    params for AdamW, or is replicated for Adafactor's factored row/col
+    stats (O(m+n) per matrix — cheap; co-sharding them is a perf-pass
+    refinement tracked in EXPERIMENTS.md §Perf)."""
+    import jax.tree_util as jtu
+
+    out = {}
+    for k, sub in opt_abs.items():
+        if k == "step":
+            out[k] = P()
+            continue
+        same = jtu.tree_structure(sub) == jtu.tree_structure(pspecs)
+        if same:
+            out[k] = pspecs
+        else:
+            out[k] = jtu.tree_map(lambda l: P(*([None] * len(l.shape))), sub)
+    return out
+
+
+def make_serve_step(cfg: ArchConfig, shape: ShapeConfig, mesh, kind: str) -> StepBundle:
+    """kind: 'decode' (one token vs deep cache) or 'prefill'."""
+    params_abs = abstract_params(cfg)
+    pspecs = shd.param_specs(params_abs, mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    if kind == "decode":
+        cache_abs = jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+        cspecs = shd.cache_specs(cfg, cache_abs, mesh, B)
+        tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, tokens, pos):
+            with mlayers.mesh_hints(mesh):
+                logits, new_cache = api.decode_step(cfg, params, cache, tokens, pos)
+            return logits, new_cache
+
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp_total = int(np.prod([sizes[a] for a in dp]))
+        tok_spec = P(dp if len(dp) > 1 else dp[0], None) if B % dp_total == 0 else P(None, None)
+        in_shardings = (
+            shd.to_shardings(pspecs, mesh),
+            shd.to_shardings(cspecs, mesh),
+            NamedSharding(mesh, tok_spec),
+            NamedSharding(mesh, P()),
+        )
+        vocab_ax = "model" if cfg.vocab % sizes["model"] == 0 else None
+        out_shardings = (
+            NamedSharding(mesh, P(tok_spec[0], None, vocab_ax)),
+            shd.to_shardings(cspecs, mesh),
+        )
+        return StepBundle(serve_step, in_shardings, out_shardings,
+                          (params_abs, cache_abs, tok_abs, pos_abs), donate_argnums=(1,))
+
+    # prefill
+    inp_abs = api.prefill_input_specs(cfg, shape)
+    cache_abs = jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+    cspecs = shd.cache_specs(cfg, cache_abs, mesh, B)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = int(np.prod([sizes[a] for a in dp]))
+    bspec = P(dp_ax, None) if B % dp_total == 0 else P(None, dp_ax)
+
+    def prefill_step(params, inputs, cache):
+        arg = inputs.get("tokens", inputs.get("frames"))
+        with mlayers.mesh_hints(mesh):
+            logits, new_cache = api.prefill(cfg, params, arg, cache)
+        return logits, new_cache
+
+    inp_specs = {}
+    for k, v in inp_abs.items():
+        inp_specs[k] = bspec if k == "tokens" else P(bspec[0], None, None)
+    in_shardings = (
+        shd.to_shardings(pspecs, mesh),
+        shd.to_shardings(inp_specs, mesh),
+        shd.to_shardings(cspecs, mesh),
+    )
+    vocab_ax = "model" if cfg.vocab % sizes["model"] == 0 else None
+    out_shardings = (
+        NamedSharding(mesh, P(None if B % dp_total else dp_ax, None, vocab_ax)),
+        shd.to_shardings(cspecs, mesh),
+    )
+    return StepBundle(prefill_step, in_shardings, out_shardings,
+                      (params_abs, inp_abs, cache_abs), donate_argnums=(2,))

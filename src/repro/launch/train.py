@@ -1,0 +1,60 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch smollm-360m --steps 200 \
+        [--smoke] [--ckpt-dir DIR] [--batch 8] [--seq 64]
+
+``--smoke`` selects the reduced same-family config (CPU-runnable); without
+it the full published config is used (real hardware). The mesh is the
+production mesh when >1 device is visible, else the single-device mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+
+from ..configs import get_config, get_smoke_config
+from ..data.pipeline import ShardInfo, SyntheticLM
+from ..models.config import ShapeConfig
+from ..runtime.trainer import Trainer, TrainerConfig
+from .mesh import make_production_mesh, make_smoke_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if len(jax.devices()) >= 256:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = make_smoke_mesh()
+    shape = ShapeConfig("train", seq_len=args.seq, global_batch=args.batch, kind="train")
+    data = SyntheticLM(cfg.vocab, args.batch, args.seq, seed=0)
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    trainer = Trainer(
+        cfg, shape, mesh, data,
+        TrainerConfig(ckpt_dir=ckpt, ckpt_every=args.ckpt_every,
+                      max_steps=args.steps, lr=args.lr, warmup=args.warmup),
+    )
+    print(f"training {cfg.name} on mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"ckpt={ckpt}")
+    trainer.run()
+    losses = [m["loss"] for m in trainer.metrics if "loss" in m]
+    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f} over {len(losses)} steps; "
+          f"checkpoints {trainer.ckpt.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

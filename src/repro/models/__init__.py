@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures behind a single functional API
+(repro.models.api)."""

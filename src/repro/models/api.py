@@ -1,0 +1,102 @@
+"""Model facade: family dispatch + input specs for every (arch x shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (no allocation) for the
+dry-run; ``make_batch`` materializes small real batches for smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig, ShapeConfig, SHAPES
+from . import lm, whisper
+
+AUDIO_ENC_FRAMES = 1500   # whisper 30s @ 50Hz (backbone-level stub length)
+
+
+def init_params(cfg: ArchConfig, rng, dtype=jnp.bfloat16):
+    if cfg.family == "audio":
+        return whisper.init_params(cfg, rng, dtype)
+    return lm.init_params(cfg, rng, dtype)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, remat=True):
+    if cfg.family == "audio":
+        return whisper.loss_fn(cfg, params, batch, remat)
+    return lm.loss_fn(cfg, params, batch, remat)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family == "audio":
+        return whisper.init_cache(cfg, batch, max_len, AUDIO_ENC_FRAMES, dtype)
+    return lm.init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    if cfg.family == "audio":
+        return whisper.decode_step(cfg, params, cache, tokens, pos)
+    return lm.decode_step(cfg, params, cache, tokens, pos)
+
+
+def prefill(cfg: ArchConfig, params, tokens_or_frames, cache):
+    if cfg.family == "audio":
+        return whisper.prefill(cfg, params, tokens_or_frames, cache)
+    return lm.prefill(cfg, params, tokens_or_frames, cache)
+
+
+def forward(cfg: ArchConfig, params, tokens, **kw):
+    if cfg.family == "audio":
+        raise ValueError("audio family uses loss_fn/encode/decode_train")
+    return lm.forward(cfg, params, tokens, **kw)
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins) and smoke batches
+# ---------------------------------------------------------------------------
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, AUDIO_ENC_FRAMES, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Specs for serve_step: one new token against a seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    specs["cache"] = cache
+    return specs
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct((B, AUDIO_ENC_FRAMES, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def make_train_batch(cfg: ArchConfig, batch: int, seq: int, rng: np.random.Generator):
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq + 1)), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, 16, cfg.d_model)), jnp.bfloat16)
+    return out
+
+
+def cell_is_supported(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Which (arch x shape) cells run (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "long_500k skipped: full-attention arch (O(S) KV cache / quadratic prefill); run for SSM/hybrid only"
+    return True, ""

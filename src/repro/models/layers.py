@@ -1,0 +1,445 @@
+"""Shared model layers: norms, rotary, GQA/MLA attention, GLU MLPs, MoE.
+
+Conventions:
+  activations x: (B, S, D); weights are per-layer dicts (stacked over layers
+  by the model builders and consumed through lax.scan).
+  dtype: bf16 activations/params, fp32 norms/softmax/router.
+
+Attention uses a chunked online-softmax formulation (lazy softmax) when the
+KV length exceeds ``CHUNK_THRESHOLD`` so the lowered HLO never materializes
+the full (S, S) score matrix — the same memory shape a fused flash kernel
+gives, expressed portably for GSPMD (the Pallas flash kernel in
+``repro.kernels`` is the TPU fast path validated against the same math).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+
+CHUNK_THRESHOLD = 2048   # KV lengths above this use the chunked path
+ATTN_CHUNK = 1024
+
+# ---------------------------------------------------------------------------
+# activation-sharding hints
+#
+# GSPMD propagates most shardings from the parameter/batch specs, but a few
+# places need explicit constraints or it picks contraction-sharded layouts
+# that replicate activations (e.g. the LM head matmul whose contraction dim
+# is FSDP-sharded on the weight side). The launcher/dry-run enables hints
+# with ``mesh_hints(mesh)``; without it (CPU smoke tests) hints are no-ops.
+# ---------------------------------------------------------------------------
+
+import contextlib
+import contextvars
+
+from jax.sharding import PartitionSpec as _P
+
+_MESH_HINTS: contextvars.ContextVar = contextvars.ContextVar("mesh_hints", default=None)
+
+DP = ("pod", "data")   # data-parallel axes (filtered to those present)
+
+
+@contextlib.contextmanager
+def mesh_hints(mesh):
+    sizes = {a: s for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+    token = _MESH_HINTS.set((mesh, sizes))
+    try:
+        yield
+    finally:
+        _MESH_HINTS.reset(token)
+
+
+# XLA's HloCostAnalysis counts while-loop bodies ONCE (ignoring trip count),
+# so a scan-over-layers model under-reports FLOPs by ~L x. The roofline
+# accounting pass re-lowers with every model scan fully unrolled (lowering
+# only — never compiled) to get trip-count-correct flops/bytes.
+_UNROLL: contextvars.ContextVar = contextvars.ContextVar("acct_unroll", default=False)
+
+
+@contextlib.contextmanager
+def accounting_unroll():
+    token = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def scan_unroll():
+    """unroll= argument for model-level lax.scans."""
+    return True if _UNROLL.get() else 1
+
+
+def hint(x, *spec):
+    """with_sharding_constraint that silently drops axes which are absent
+    from the mesh or do not divide the dimension. Uses a concrete
+    NamedSharding (no ambient-mesh requirement at trace time)."""
+    hints = _MESH_HINTS.get()
+    if hints is None:
+        return x
+    mesh, sizes = hints
+    parts = []
+    for dim, ax in zip(x.shape, tuple(spec) + (None,) * x.ndim):
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,)) if a in sizes)
+        if not axes:
+            parts.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        parts.append((axes if len(axes) > 1 else axes[0]) if dim % total == 0 else None)
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, _P(*parts)))
+
+
+def hint_heads(x):
+    """(B, S, H, hd): shard H over 'model' when divisible; otherwise fall
+    back to sharding the *sequence* over 'model' (attention is per-query-row
+    parallel, so SP is the clean fallback for e.g. smollm's 15 heads on a
+    16-way mesh)."""
+    hints = _MESH_HINTS.get()
+    if hints is None or "model" not in hints[1]:
+        return x
+    sizes = hints[1]
+    if x.shape[2] % sizes["model"] == 0:
+        return hint(x, DP, None, "model", None)
+    if x.shape[1] % sizes["model"] == 0:
+        return hint(x, DP, "model", None, None)
+    return hint(x, DP, None, None, "model")
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * scale * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rotary(x, positions, theta=10_000.0):
+    """x: (..., S, H, Dh) with positions (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def _act(name):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "geglu": jax.nn.gelu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.bfloat16):
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    d, hd = cfg.d_model, cfg.hd
+    if cfg.use_mla:
+        return {
+            "q_down": dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+            "q_up": dense_init(ks[1], cfg.q_lora_rank, cfg.n_heads * (hd + cfg.rope_head_dim), dtype),
+            "kv_down": dense_init(ks[2], d, cfg.kv_lora_rank + cfg.rope_head_dim, dtype),
+            "kv_up": dense_init(ks[3], cfg.kv_lora_rank, cfg.n_heads * 2 * hd, dtype),
+            "o": dense_init(ks[4], cfg.n_heads * hd, d, dtype),
+            "q_norm": jnp.ones((cfg.q_lora_rank,), dtype),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+        }
+    return {
+        "q": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "k": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "v": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "o": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _sdpa_dense(q, k, v, causal, q_offset=0):
+    """q: (B,S,H,Dh), k/v: (B,Sk,Hkv,Dh). Materializes (S,Sk) scores."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(Dh)
+    if causal:
+        qi = jnp.arange(S)[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where((qi >= ki)[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def _sdpa_chunked(q, k, v, causal):
+    """Online-softmax over KV chunks: flash-equivalent memory in pure JAX.
+
+    q/k share Dh; v may have its own head dim (MLA: qk 192, v 128).
+    """
+    B, S, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    nc = Sk // ATTN_CHUNK
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    kc = k.reshape(B, nc, ATTN_CHUNK, H, Dh)
+    vc = v.reshape(B, nc, ATTN_CHUNK, H, Dv)
+    scale = 1.0 / np.sqrt(Dh)
+    qi = jnp.arange(S)[:, None]
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, xs):
+        # checkpointed: the (S, chunk) score/probability blocks are
+        # recomputed in backward instead of being saved per chunk
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        if causal:
+            ki = ci * ATTN_CHUNK + jnp.arange(ATTN_CHUNK)[None, :]
+            s = jnp.where((qi >= ki)[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * jnp.transpose(alpha, (0, 2, 1, 3)) + jnp.einsum(
+            "bhqk,bkhd->bqhd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, S, H, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nc)),
+        unroll=scan_unroll(),
+    )
+    l = jnp.where(l == 0, 1.0, l)
+    out = acc / jnp.transpose(l, (0, 2, 1, 3))
+    return out.astype(q.dtype)
+
+
+def sdpa(q, k, v, causal=True, q_offset=0):
+    if k.shape[1] > CHUNK_THRESHOLD and k.shape[1] % ATTN_CHUNK == 0:
+        return _sdpa_chunked(q, k, v, causal)
+    return _sdpa_dense(q, k, v, causal, q_offset)
+
+
+def gqa_attention(cfg: ArchConfig, p, x, positions, causal=True, cache=None, cache_pos=None):
+    """Returns (out, new_cache). cache: dict(k,v) of (B, S_max, Hkv, Dh)."""
+    B, S, D = x.shape
+    hd = cfg.hd
+    q = hint_heads((x @ p["q"]).reshape(B, S, cfg.n_heads, hd))
+    k = hint_heads((x @ p["k"]).reshape(B, S, cfg.n_kv_heads, hd))
+    v = hint_heads((x @ p["v"]).reshape(B, S, cfg.n_kv_heads, hd))
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        kk, vv = ck, cv
+        # mask out cache slots beyond current position via causal offset
+        out = _sdpa_dense(q, kk, vv, causal=True, q_offset=cache_pos)
+    else:
+        out = sdpa(q, k, v, causal=causal)
+    out = hint_heads(out).reshape(B, S, cfg.n_heads * hd)
+    return hint(out @ p["o"], DP, None, None), new_cache
+
+
+def mla_attention(cfg: ArchConfig, p, x, positions, causal=True, cache=None, cache_pos=None):
+    """DeepSeek MLA. Cache stores the *compressed* c_kv (+ rope key) —
+    (kv_lora + rope_head_dim) per token instead of 2*H*Dh.
+    """
+    B, S, D = x.shape
+    hd, rd = cfg.hd, cfg.rope_head_dim
+    H = cfg.n_heads
+    cq = rms_norm(x @ p["q_down"], p["q_norm"], cfg.norm_eps)
+    q = hint_heads((cq @ p["q_up"]).reshape(B, S, H, hd + rd))
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rotary(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = x @ p["kv_down"]                         # (B,S,kv_lora+rd)
+    c_kv = ckv_full[..., : cfg.kv_lora_rank]
+    k_rope = rotary(ckv_full[..., cfg.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_pos, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        # -- absorbed decode (§Perf iteration 2) ---------------------------
+        # The naive path re-expands K/V for the WHOLE cache every step
+        # (O(S * kv_lora * 2*H*hd) flops/token). Absorbing kv_up into the
+        # query/output projections runs attention in the compressed latent
+        # space: O(S * H * (kv_lora + rd)) — a ~100x decode-flops cut.
+        kv_up = p["kv_up"].reshape(cfg.kv_lora_rank, H, 2, hd)
+        w_uk = jnp.transpose(kv_up[:, :, 0], (1, 0, 2))   # (H, kv_lora, hd)
+        w_uv = jnp.transpose(kv_up[:, :, 1], (1, 0, 2))   # (H, kv_lora, hd)
+        c_n = rms_norm(cc, p["kv_norm"], cfg.norm_eps)    # (B, Sc, kv_lora)
+        q_lat = jnp.einsum("bshd,hkd->bshk", q_nope, w_uk.astype(q_nope.dtype))
+        scale = 1.0 / np.sqrt(hd + rd)
+        s_lat = jnp.einsum("bshk,btk->bhst", q_lat, c_n) * scale
+        s_rope = jnp.einsum("bshr,btr->bhst", q_rope, cr.astype(q_rope.dtype)) * scale
+        scores = (s_lat + s_rope).astype(jnp.float32)
+        ti = jnp.arange(cc.shape[1])[None, None, None, :]
+        qi = jnp.arange(S)[None, None, :, None] + cache_pos
+        scores = jnp.where(qi >= ti, scores, -1e30)
+        pr = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btk->bshk", pr.astype(c_n.dtype), c_n)
+        out = jnp.einsum("bshk,hkd->bshd", ctx, w_uv.astype(ctx.dtype))
+        out = hint_heads(out).reshape(B, S, H * hd)
+        return hint(out @ p["o"], DP, None, None), new_cache
+    # -- train / prefill: materialized K/V (MXU-friendly batched form) -----
+    new_cache = None
+    c_n = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    kv = hint_heads((c_n @ p["kv_up"]).reshape(B, -1, H, 2 * hd))
+    k_nope, v = kv[..., :hd], kv[..., hd:]
+    # concat nope + shared rope dims
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (rd,))
+    k_full = jnp.concatenate([k_nope, k_rope_b.astype(k_nope.dtype)], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = sdpa(q_full, k_full, v, causal=causal)
+    out = hint_heads(out).reshape(B, S, H * hd)
+    return hint(out @ p["o"], DP, None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(cfg: ArchConfig, key, d_ff=None, dtype=jnp.bfloat16):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, d_ff, dtype),
+        "w_up": dense_init(k2, cfg.d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, cfg.d_model, dtype),
+    }
+
+
+def glu_mlp(cfg: ArchConfig, p, x):
+    act = _act(cfg.act)
+    h = act(hint(x @ p["w_gate"], DP, None, "model")) * hint(x @ p["w_up"], DP, None, "model")
+    return hint(h @ p["w_down"], DP, None, None)
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based token-choice dispatch with capacity)
+# ---------------------------------------------------------------------------
+
+
+def moe_params(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert_ff
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * scale).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) / np.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(cfg, ks[4], d_ff=cfg.n_shared_experts * cfg.d_expert_ff, dtype=dtype)
+    return p
+
+
+MOE_GROUP = 32_768   # max tokens dispatched per group (bounds E*C*D buffer)
+
+
+def moe_ffn(cfg: ArchConfig, p, x):
+    """x: (B,S,D) -> (B,S,D). Token-choice top-k with capacity dropping.
+
+    Sort-based dispatch: tokens sorted by assigned expert, scattered into an
+    (E, C, D) buffer (capacity C), per-expert gated-GLU GEMMs, combined back
+    with gate weights. Expert dim shards over 'model' (EP): GSPMD realizes
+    the token->expert exchange as all-to-all on the scatter/gather.
+
+    Long inputs are dispatched in groups of MOE_GROUP tokens (scan) so the
+    capacity buffer stays O(MOE_GROUP) — the grouped all-to-all schedule
+    real MoE systems use for prefill.
+    """
+    B, S, D = x.shape
+    T_all = B * S
+    if T_all > MOE_GROUP and T_all % MOE_GROUP == 0:
+        ng = T_all // MOE_GROUP
+        xg = x.reshape(ng, MOE_GROUP, D)
+
+        # checkpointed: each group's dispatch gathers are recomputed in
+        # backward instead of stacking (ng, SL, D) residuals (§Perf iter 1)
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def per_group(_, xg_i):
+            return (), _moe_group(cfg, p, xg_i)
+
+        _, yg = jax.lax.scan(per_group, (), xg, unroll=scan_unroll())
+        return yg.reshape(B, S, D)
+    return _moe_group(cfg, p, x.reshape(T_all, D)).reshape(B, S, D)
+
+
+def _moe_group(cfg: ArchConfig, p, x2):
+    D = x2.shape[-1]
+    T = x2.shape[0]
+    x = x2[None]  # keep shapes below unchanged
+    E, K = cfg.n_experts, cfg.top_k
+    scores = jax.nn.softmax((x2.astype(jnp.float32) @ p["router"]), axis=-1)
+    gvals, gidx = jax.lax.top_k(scores, K)                     # (T,K)
+    gvals = (gvals / jnp.sum(gvals, axis=-1, keepdims=True)).astype(x.dtype)
+
+    SL = T * K
+    C = max(8, int(cfg.capacity_factor * SL / E))
+    flat_e = gidx.reshape(SL)
+    perm = jnp.argsort(flat_e)
+    sorted_e = flat_e[perm]                                    # (SL,)
+    tok = perm // K
+    pos = jnp.arange(SL) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    keep = pos < C
+    dest = jnp.where(keep, sorted_e * C + pos, E * C)          # drop slot at end
+    gathered = hint(x2[tok], DP, None)      # keep token copies dp-sharded
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    buf = buf.at[dest].add(gathered)
+    xe = hint(buf[: E * C].reshape(E, C, D), "model", None, None)   # EP
+
+    act = _act(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"]
+    )
+    h = hint(h, "model", None, None)
+    ye = hint(jnp.einsum("ecf,efd->ecd", h, p["w_down"]), "model", None, None).reshape(E * C, D)
+    ye = jnp.concatenate([ye, jnp.zeros((1, D), ye.dtype)], axis=0)
+
+    contrib = hint(ye[dest], DP, None) * (gvals.reshape(SL)[perm])[:, None] * keep[:, None].astype(x.dtype)
+    out = hint(jnp.zeros((T, D), x.dtype).at[tok].add(contrib), DP, None)
+    if cfg.n_shared_experts:
+        out = out + glu_mlp(cfg, p["shared"], x2)
+    return out

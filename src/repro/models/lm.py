@@ -1,0 +1,429 @@
+"""Unified language-model builder for all assigned architecture families.
+
+* dense / vlm     — pre-norm GQA transformer (rotary, GLU MLP)
+* moe             — attention (GQA or MLA) + MoE FFN
+* ssm             — Mamba1 stack (attention-free)
+* hybrid          — Mamba2 stack with a SHARED attention+MLP block applied
+                    every ``attn_every`` layers (Zamba2's weight-shared design)
+* audio (whisper) — encoder-decoder, see ``whisper.py``
+
+Layers are homogeneous and stacked (params have a leading (L, ...) axis) so
+the forward pass is a single ``lax.scan`` — keeping HLO size independent of
+depth, which is what makes the 61-layer/671B dry-run compile tractable.
+``remat_policy`` wraps the scanned block with ``jax.checkpoint``.
+
+API (pure functions, pjit-ready):
+  init_params(cfg, rng)                         -> params
+  forward(cfg, params, tokens)                  -> logits             (train)
+  loss_fn(cfg, params, batch)                   -> scalar loss
+  init_cache(cfg, batch, max_len)               -> cache
+  decode_step(cfg, params, cache, tok, pos)     -> (logits, cache)
+  prefill(cfg, params, tokens, cache)           -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from . import layers as L
+from . import ssm as S
+
+
+def _split_tree(key, n):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """One layer's params (unstacked)."""
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "ln1": jnp.ones((d,), dtype),
+            "attn": L.attention_params(cfg, ks[0], dtype),
+            "ln2": jnp.ones((d,), dtype),
+            "mlp": L.mlp_params(cfg, ks[1], dtype=dtype),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": jnp.ones((d,), dtype),
+            "attn": L.attention_params(cfg, ks[0], dtype),
+            "ln2": jnp.ones((d,), dtype),
+            "moe": L.moe_params(cfg, ks[1], dtype),
+        }
+    if cfg.family == "ssm":
+        return {
+            "ln1": jnp.ones((d,), dtype),
+            "ssm": S.mamba1_params(cfg, ks[0], dtype),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "ln1": jnp.ones((d,), dtype),
+            "ssm": S.mamba2_params(cfg, ks[0], dtype),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k_embed, k_layers, k_head, k_shared, k_mtp = jax.random.split(rng, 5)
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, d), jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _block_params(cfg, k, dtype))(layer_keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, d, cfg.vocab, dtype)
+    if cfg.family == "hybrid":
+        # Zamba2 shared attention block (ONE set of weights, reused)
+        params["shared_attn"] = {
+            "ln1": jnp.ones((d,), dtype),
+            "attn": L.attention_params(cfg, k_shared, dtype),
+            "ln2": jnp.ones((d,), dtype),
+            "mlp": L.mlp_params(cfg, jax.random.fold_in(k_shared, 1), dtype=dtype),
+        }
+    if cfg.mtp_depth:
+        # DeepSeek-V3 multi-token prediction: one extra transformer block +
+        # projection predicting token t+2 from [h_t ; emb(t+1)]
+        params["mtp"] = {
+            "proj": L.dense_init(k_mtp, 2 * d, d, dtype),
+            "block": _block_params(
+                dataclass_replace(cfg, family="moe" if cfg.family == "moe" else cfg.family),
+                jax.random.fold_in(k_mtp, 1),
+                dtype,
+            ),
+            "norm": jnp.ones((d,), dtype),
+        }
+    return params
+
+
+def dataclass_replace(cfg, **kw):
+    import dataclasses
+
+    return dataclasses.replace(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(cfg, p, x, positions, cache=None, cache_pos=None, causal=True):
+    attn_fn = L.mla_attention if cfg.use_mla else L.gqa_attention
+    h, new_cache = attn_fn(cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                           positions, causal=causal, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    hn = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + L.moe_ffn(cfg, p["moe"], hn)
+    else:
+        x = x + L.glu_mlp(cfg, p["mlp"], hn)
+    return x, new_cache
+
+
+def _ssm_block(cfg, p, x, state=None):
+    fn = S.mamba1_block if cfg.ssm_variant == "mamba1" else S.mamba2_block
+    h, new_state = fn(cfg, p["ssm"], L.rms_norm(x, p["ln1"], cfg.norm_eps), state)
+    return x + h, new_state
+
+
+# ---------------------------------------------------------------------------
+# forward (train / no cache)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params, tokens, remat: bool = True,
+            input_embeds: Optional[jnp.ndarray] = None, return_hidden: bool = False):
+    """tokens: (B,S) int32 (or ``input_embeds`` (B,S,D) for frontend stubs)."""
+    if input_embeds is not None:
+        x = input_embeds
+        B, Sq, _ = x.shape
+    else:
+        B, Sq = tokens.shape
+        x = params["embed"][tokens].astype(params["embed"].dtype)
+    x = L.hint(x, L.DP, None, None)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def block(x_, lp):
+            y, _ = _attn_block(cfg, lp, x_, positions)
+            return y, None
+    elif cfg.family == "ssm":
+        def block(x_, lp):
+            y, _ = _ssm_block(cfg, lp, x_)
+            return y, None
+    elif cfg.family == "hybrid":
+        def block(x_, lp):
+            y, _ = _ssm_block(cfg, lp, x_)
+            return y, None
+    else:
+        raise ValueError(cfg.family)
+
+    if remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+
+    if cfg.family == "hybrid":
+        # groups of attn_every ssm blocks followed by the shared attn block
+        k = cfg.attn_every
+        ng = cfg.n_layers // k
+        lp = jax.tree_util.tree_map(
+            lambda a: a[: ng * k].reshape((ng, k) + a.shape[1:]), params["layers"]
+        )
+
+        def group(x_, glp):
+            y, _ = jax.lax.scan(block, x_, glp, unroll=L.scan_unroll())
+            y, _ = _attn_block(cfg, params["shared_attn"], y, positions)
+            return y, None
+
+        if remat:
+            group = jax.checkpoint(group, prevent_cse=False)
+        x, _ = jax.lax.scan(group, x, lp, unroll=L.scan_unroll())
+        # remaining tail layers (n_layers % attn_every)
+        rem = cfg.n_layers - ng * k
+        if rem:
+            tail = jax.tree_util.tree_map(lambda a: a[ng * k :], params["layers"])
+            x, _ = jax.lax.scan(block, x, tail, unroll=L.scan_unroll())
+    else:
+        x, _ = jax.lax.scan(block, x, params["layers"], unroll=L.scan_unroll())
+
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.hint(hidden @ head, L.DP, None, "model")
+    if return_hidden:
+        return logits, hidden
+    return logits
+
+
+def loss_fn(cfg: ArchConfig, params, batch, remat: bool = True):
+    """batch: dict(tokens (B,S+1)) -> mean next-token cross-entropy.
+
+    With ``cfg.mtp_depth``, adds the DeepSeek-V3 multi-token-prediction
+    auxiliary loss (predict t+2 from the backbone state at t).
+    """
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    embeds = batch.get("input_embeds")
+    need_hidden = bool(cfg.mtp_depth)
+    kw = dict(remat=remat, return_hidden=need_hidden)
+    if embeds is not None:
+        out = forward(cfg, params, inp, input_embeds=embeds[:, :-1], **kw)
+    else:
+        out = forward(cfg, params, inp, **kw)
+    logits, hidden = out if need_hidden else (out, None)
+    loss = xent(logits, tgt)
+    if cfg.mtp_depth:
+        # MTP: at position t, combine h_t with emb(token_{t+1}) to predict
+        # token_{t+2} through one extra block (DeepSeek-V3 Section 2.2)
+        mp = params["mtp"]
+        B, Sq = inp.shape
+        h = hidden[:, : Sq - 1]                                 # (B,S-1,D)
+        nxt = params["embed"][inp[:, 1:]].astype(h.dtype)       # emb(t+1)
+        z = jnp.concatenate([h, nxt], axis=-1) @ mp["proj"]
+        positions = jnp.broadcast_to(jnp.arange(Sq - 1)[None], (B, Sq - 1))
+        z, _ = _attn_block(cfg, mp["block"], z, positions)
+        z = L.rms_norm(z, mp["norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        mtp_logits = z @ head
+        loss = loss + 0.3 * xent(mtp_logits, tgt[:, 1:])        # token t+2
+    return loss
+
+
+def xent(logits, targets):
+    """Sharding-friendly cross-entropy: never materializes a replicated
+    log-softmax. The target logit is extracted by a one-hot contraction that
+    stays sharded over the vocab (model) axis; logsumexp reduces over it.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                     # (B,S)
+    onehot = L.hint(
+        jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.bfloat16),
+        L.DP, None, "model",
+    ).astype(logits.dtype)
+    tgt_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return (lse - tgt_logit).mean()
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    Lc = cfg.n_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.use_mla:
+            return {
+                "c_kv": jnp.zeros((Lc, batch, max_len, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((Lc, batch, max_len, cfg.rope_head_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((Lc, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((Lc, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+    if cfg.family == "ssm":
+        st = S.mamba1_init_state(cfg, batch, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (Lc,) + a.shape) * 0, st)
+    if cfg.family == "hybrid":
+        st = S.mamba2_init_state(cfg, batch, dtype)
+        cache = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (Lc,) + a.shape) * 0, st)
+        cache = {"ssm": cache}
+        # the shared attention block has ONE weight set but is applied once
+        # per group — each application needs its own KV history
+        ng = cfg.n_layers // cfg.attn_every
+        cache["attn_k"] = jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)
+        cache["attn_v"] = jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)
+        return cache
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos,
+                input_embeds: Optional[jnp.ndarray] = None):
+    """One decode step. tokens: (B, 1); pos: scalar int32 (current length).
+
+    Attention archs attend over the KV cache; SSM archs update O(1) state.
+    Returns (logits (B,1,V), new_cache).
+    """
+    if input_embeds is not None:
+        x = input_embeds
+    else:
+        x = params["embed"][tokens].astype(params["embed"].dtype)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def block(x_, xs):
+            lp, lcache = xs
+            y, new_c = _attn_block(cfg, lp, x_, positions, cache=lcache, cache_pos=pos)
+            return y, new_c
+
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], cache), unroll=L.scan_unroll())
+    elif cfg.family == "ssm":
+        def block(x_, xs):
+            lp, lstate = xs
+            y, new_s = _ssm_block(cfg, lp, x_, state=lstate)
+            return y, new_s
+
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], cache), unroll=L.scan_unroll())
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+        ng = cfg.n_layers // k
+        lp = jax.tree_util.tree_map(
+            lambda a: a[: ng * k].reshape((ng, k) + a.shape[1:]), params["layers"])
+        sc = jax.tree_util.tree_map(
+            lambda a: a[: ng * k].reshape((ng, k) + a.shape[1:]), cache["ssm"])
+
+        def inner(x_, xs):
+            lp_, st_ = xs
+            y, new_s = _ssm_block(cfg, lp_, x_, state=st_)
+            return y, new_s
+
+        def group(x_, xs):
+            glp, gst, gk, gv = xs
+            y, new_s = jax.lax.scan(inner, x_, (glp, gst), unroll=L.scan_unroll())
+            y, new_ac = _attn_block(cfg, params["shared_attn"], y, positions,
+                                    cache={"k": gk, "v": gv}, cache_pos=pos)
+            return y, (new_s, new_ac["k"], new_ac["v"])
+
+        x, (new_sc, new_k, new_v) = jax.lax.scan(
+            group, x, (lp, sc, cache["attn_k"], cache["attn_v"]), unroll=L.scan_unroll())
+        rem = cfg.n_layers - ng * k
+        new_cache = {"ssm": jax.tree_util.tree_map(
+            lambda a: a.reshape((ng * k,) + a.shape[2:]), new_sc)}
+        if rem:
+            tail_lp = jax.tree_util.tree_map(lambda a: a[ng * k :], params["layers"])
+            tail_st = jax.tree_util.tree_map(lambda a: a[ng * k :], cache["ssm"])
+            x, new_tail = jax.lax.scan(inner, x, (tail_lp, tail_st))
+            new_cache["ssm"] = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], 0), new_cache["ssm"], new_tail)
+        new_cache["attn_k"] = new_k
+        new_cache["attn_v"] = new_v
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache):
+    """Prefill: run the full prompt once, filling the cache. tokens: (B,S)."""
+    B, Sq = tokens.shape
+    x = params["embed"][tokens].astype(params["embed"].dtype)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def block(x_, xs):
+            lp, lcache = xs
+            y, new_c = _attn_block(cfg, lp, x_, positions, cache=lcache, cache_pos=0)
+            return y, new_c
+
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], cache), unroll=L.scan_unroll())
+    elif cfg.family in ("ssm", "hybrid"):
+        # run the training-style forward but carry states
+        if cfg.family == "ssm":
+            def block(x_, xs):
+                lp, lstate = xs
+                y, new_s = _ssm_block(cfg, lp, x_, state=lstate)
+                return y, new_s
+
+            x, new_cache = jax.lax.scan(block, x, (params["layers"], cache), unroll=L.scan_unroll())
+        else:
+            # hybrid prefill mirrors decode_step's grouped structure
+            return _hybrid_prefill(cfg, params, x, positions, cache)
+    # prefill emits only the last position's logits
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache
+
+
+def _hybrid_prefill(cfg, params, x, positions, cache):
+    k = cfg.attn_every
+    ng = cfg.n_layers // k
+    lp = jax.tree_util.tree_map(
+        lambda a: a[: ng * k].reshape((ng, k) + a.shape[1:]), params["layers"])
+    sc = jax.tree_util.tree_map(
+        lambda a: a[: ng * k].reshape((ng, k) + a.shape[1:]), cache["ssm"])
+
+    def inner(x_, xs):
+        lp_, st_ = xs
+        y, new_s = _ssm_block(cfg, lp_, x_, state=st_)
+        return y, new_s
+
+    def group(x_, xs):
+        glp, gst, gk, gv = xs
+        y, new_s = jax.lax.scan(inner, x_, (glp, gst))
+        y, new_ac = _attn_block(cfg, params["shared_attn"], y, positions,
+                                cache={"k": gk, "v": gv}, cache_pos=0)
+        return y, (new_s, new_ac["k"], new_ac["v"])
+
+    x, (new_sc, new_k, new_v) = jax.lax.scan(
+        group, x, (lp, sc, cache["attn_k"], cache["attn_v"]), unroll=L.scan_unroll())
+    new_cache = {
+        "ssm": jax.tree_util.tree_map(lambda a: a.reshape((ng * k,) + a.shape[2:]), new_sc),
+        "attn_k": new_k,
+        "attn_v": new_v,
+    }
+    rem = cfg.n_layers - ng * k
+    if rem:
+        tail_lp = jax.tree_util.tree_map(lambda a: a[ng * k :], params["layers"])
+        tail_st = jax.tree_util.tree_map(lambda a: a[ng * k :], cache["ssm"])
+        x, new_tail = jax.lax.scan(inner, x, (tail_lp, tail_st))
+        new_cache["ssm"] = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], 0), new_cache["ssm"], new_tail)
+    # prefill emits only the last position's logits
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache

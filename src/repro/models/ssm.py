@@ -1,0 +1,269 @@
+"""State-space model blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel has no TPU
+analogue, so
+
+* **Mamba1** uses a chunked ``lax.scan`` over time with rematerialized
+  chunks: the (B, d_inner, N) expanded state is never stored across the
+  whole sequence — only chunk-boundary states are saved for backward,
+  matching the memory behavior of the fused GPU kernel.
+* **Mamba2** uses the SSD *chunked matmul* form (Dao & Gu, 2024): scalar
+  per-head decay lets intra-chunk work become (c x c) masked GEMMs on the
+  MXU plus a tiny inter-chunk recurrence — the TPU-native formulation.
+
+Both expose a single-step ``*_step`` for decode (O(1) state, which is what
+makes ``long_500k`` feasible for these families).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from .layers import dense_init
+
+SSM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, R + 2 * N, dtype),
+        "dt_proj": dense_init(ks[3], R, di, dtype),
+        "dt_bias": jnp.full((di,), -2.0, jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: (B,S,di); w: (K,di). Returns (y, new_state) with state (B,K-1,di)."""
+    B, S, di = x.shape
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, K - 1, di), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + S, :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, S:, :] if S >= K - 1 else xp[:, -(K - 1) :, :]
+    return y + b[None, None, :], new_state
+
+
+def mamba1_scan(p, x, h0=None):
+    """Selective scan. x: (B,S,di) post-conv/act. Returns (y, h_final).
+
+    h: (B, di, N). Chunked + remat'd: memory O(S/chunk * B*di*N) residuals.
+    """
+    B, S, di = x.shape
+    N = p["A_log"].shape[1]
+    R = p["dt_proj"].shape[0]
+    A = -jnp.exp(p["A_log"])                                   # (di,N)
+
+    proj = x @ p["x_proj"]                                      # (B,S,R+2N)
+    dt = jax.nn.softplus(
+        proj[..., :R].astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"]
+    )                                                           # (B,S,di)
+    Bm = proj[..., R : R + N].astype(jnp.float32)               # (B,S,N)
+    Cm = proj[..., R + N :].astype(jnp.float32)                 # (B,S,N)
+    xf = x.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None] * A[None])                 # (B,di,N)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = h * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    @jax.checkpoint
+    def chunk_scan(h, chunk):
+        return jax.lax.scan(step, h, chunk)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    nchunk = max(1, S // SSM_CHUNK) if S % SSM_CHUNK == 0 else 1
+    xs = (
+        xf.swapaxes(0, 1),
+        dt.swapaxes(0, 1),
+        Bm.swapaxes(0, 1),
+        Cm.swapaxes(0, 1),
+    )
+    if nchunk > 1:
+        xs = tuple(a.reshape(nchunk, S // nchunk, *a.shape[1:]) for a in xs)
+        from .layers import scan_unroll
+        h, ys = jax.lax.scan(lambda h_, c: chunk_scan(h_, c), h0, xs,
+                             unroll=scan_unroll())
+        ys = ys.reshape(S, B, di)
+    else:
+        h, ys = chunk_scan(h0, xs)
+    y = ys.swapaxes(0, 1) + xf * p["D"][None, None, :]
+    return y.astype(x.dtype), h
+
+
+def mamba1_block(cfg: ArchConfig, p, x, state=None):
+    """Full block: in_proj -> conv -> silu -> SSM -> gate -> out_proj.
+
+    state: None (train/prefill) or dict(conv, h) for decode.
+    """
+    from .layers import DP, hint
+
+    xz = hint(x @ p["in_proj"], DP, None, "model")
+    di = cfg.d_inner
+    xs, z = xz[..., :di], xz[..., di:]
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    h0 = None if state is None else state["h"]
+    y, h = mamba1_scan(p, xc, h0)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = {"conv": new_conv, "h": h}
+    return out, new_state
+
+
+def mamba1_init_state(cfg: ArchConfig, batch, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD chunked form)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # projections for x, z, B, C, dt in one matmul (mamba2 style)
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di + 2 * N), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * N,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _segsum(a):
+    """a: (..., c) log-decays -> (..., c, c) lower-tri cumulative sums."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_ssd(x, a_log, Bm, Cm, h0=None, chunk=SSM_CHUNK):
+    """SSD chunked scan.
+
+    x:  (B, S, H, P)   values
+    a_log: (B, S, H)   per-step log decay (<= 0)
+    Bm, Cm: (B, S, N)  input/output projections (shared across heads)
+    h0: (B, H, P, N) initial state
+    Returns (y: (B,S,H,P), h_final).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    nc = S // c
+    xr = x.reshape(Bsz, nc, c, H, P)
+    ar = a_log.reshape(Bsz, nc, c, H)
+    Br = Bm.reshape(Bsz, nc, c, N)
+    Cr = Cm.reshape(Bsz, nc, c, N)
+
+    # intra-chunk (diagonal block): y_intra[t] = sum_{s<=t} C_t.B_s prod decay
+    L = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))               # (B,nc,H,c,c)
+    scores = jnp.einsum("bnck,bnsk->bncs", Cr, Br)               # (B,nc,c,c)
+    y_intra = jnp.einsum("bncs,bnhcs,bnshp->bnchp", scores, L.astype(scores.dtype), xr)
+
+    # chunk states: state_n = sum_s B_s x_s prod_{s..end} decay
+    decay_to_end = jnp.exp(
+        jnp.cumsum(ar, axis=2)[:, :, -1:, :] - jnp.cumsum(ar, axis=2)
+    )                                                            # (B,nc,c,H)
+    states = jnp.einsum("bnsk,bnsh,bnshp->bnhpk", Br, decay_to_end.astype(Br.dtype), xr)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(jnp.sum(ar, axis=2))                   # (B,nc,H)
+
+    def inter(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                          # emit state *before* this chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+    hT, h_prefix = jax.lax.scan(
+        inter, h0,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    h_prefix = h_prefix.swapaxes(0, 1)                           # (B,nc,H,P,N)
+
+    # contribution of carried state into each chunk position
+    decay_from_start = jnp.exp(jnp.cumsum(ar, axis=2))           # (B,nc,c,H)
+    y_inter = jnp.einsum(
+        "bnck,bnhpk,bnch->bnchp", Cr, h_prefix, decay_from_start.astype(Cr.dtype)
+    )
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def mamba2_block(cfg: ArchConfig, p, x, state=None):
+    from .layers import DP, hint
+
+    B, S, D = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    proj = hint(x @ p["in_proj"], DP, None, "model")
+    z = proj[..., :di]
+    xBC = proj[..., di : 2 * di + 2 * N]
+    dt_raw = proj[..., 2 * di + 2 * N :]                        # (B,S,H)
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di : di + N].astype(jnp.float32)
+    Cm = xBC[..., di + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_log = -jnp.exp(p["A_log"])[None, None, :] * dt            # (B,S,H) <= 0
+    h0 = None if state is None else state["h"]
+    # ZOH discretization: h = exp(dt*A) h + dt * B x  (input absorbs dt)
+    y, hT = mamba2_ssd(xs.astype(jnp.float32) * dt[..., None], a_log, Bm, Cm, h0)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]   # skip path
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    rms = jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-5)
+    y = (y * rms * p["norm_g"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "h": hT.astype(jnp.float32)}
+
+
+def mamba2_init_state(cfg: ArchConfig, batch, dtype=jnp.bfloat16):
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di + 2 * N), dtype),
+        "h": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+    }

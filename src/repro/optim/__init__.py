@@ -1,0 +1,10 @@
+from .optimizers import (
+    adamw_init,
+    adamw_update,
+    adafactor_init,
+    adafactor_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+from .compression import compress_int8, decompress_int8, error_feedback_update

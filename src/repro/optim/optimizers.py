@@ -1,0 +1,149 @@
+"""Optimizers: AdamW (fp32 state) and Adafactor (factored second moment).
+
+Adafactor exists because the 671B config cannot hold Adam's 2x fp32 state on
+one v5e pod (DESIGN.md §5): factored v (row/col statistics, O(m+n) per
+matrix) + bf16 momentum cuts optimizer bytes from 8x to ~2x params.
+
+All state trees mirror the param tree, so pjit shards optimizer state with
+the same PartitionSpecs as the parameters (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_map(f, *ts, **kw):
+    return jax.tree_util.tree_map(f, *ts, **kw)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": tree_map(f32, params),
+        "v": tree_map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    step = state["step"] + 1
+    m = tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+    v = tree_map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                 state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, bf16 momentum)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init_v(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),        # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "m": tree_map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+        "v": tree_map(init_v, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, lr, b1=0.9, decay=0.99, eps=1e-30, wd=0.0):
+    step = state["step"] + 1
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p.shape):
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = (
+                vr[..., None]
+                / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                * vc[..., None, :]
+            )
+            u = g32 * jax.lax.rsqrt(denom + eps)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = decay * v["v"] + (1 - decay) * g2
+            u = g32 * jax.lax.rsqrt(vv + eps)
+            new_v = {"v": vv}
+        # update clipping (Adafactor's RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms)
+        new_m = (b1 * m.astype(jnp.float32) + (1 - b1) * u).astype(jnp.bfloat16)
+        new_p = (p.astype(jnp.float32) - lr * (new_m.astype(jnp.float32) + wd * p.astype(jnp.float32))).astype(p.dtype)
+        return new_p, new_m, new_v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable
+
+
+def make_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return Optimizer("adamw", adamw_init, adamw_update)
+    if name == "adafactor":
+        return Optimizer("adafactor", adafactor_init, adafactor_update)
+    raise ValueError(name)

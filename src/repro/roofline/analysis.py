@@ -1,0 +1,270 @@
+"""Roofline analysis for the dry-run (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = FLOPs / (chips * 197e12)          bf16 peak, TPU v5e
+  memory     = HBM bytes / (chips * 819e9)
+  collective = per-device collective bytes / 50e9 (ICI per-link)
+
+Sources and their caveats (measured, not assumed):
+
+* XLA's HloCostAnalysis counts while-loop bodies ONCE. Our models scan over
+  layers, so ``compiled.cost_analysis()`` under-reports by ~n_layers x. The
+  dry-run therefore does a SECOND, lowering-only pass with every model scan
+  unrolled (``layers.accounting_unroll``) whose ``lowered.cost_analysis()``
+  is trip-count-correct. (Verified: scan(10 matmuls) reports 1 matmul rolled,
+  10 unrolled.)
+* Collective bytes come from the *compiled* (post-GSPMD) per-device HLO
+  text: we sum operand bytes of all-gather/all-reduce/reduce-scatter/
+  all-to-all/collective-permute per computation, then multiply computations
+  reached through `while` loops by their trip counts (parsed from the loop
+  condition's comparison constant).
+* MODEL_FLOPS = 6*N*D (dense train) / 6*N_active*D (MoE) / 2*N_active*B
+  (decode) — the "useful FLOPs" yardstick; the ratio against HLO FLOPs
+  exposes remat/padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' -> bytes. Tuples handled by caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, Any]:
+    """Sum collective operand bytes in a post-SPMD HLO module, multiplying
+    loop bodies by their trip counts.
+
+    Returns {op_kind: bytes, ..., "total": bytes, "counts": {kind: n}}.
+    """
+    # 1. split into computations
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if m and "{" in line:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"\s*ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+
+    # 2. per-computation: collective bytes + calls (while/call/fusion refs)
+    comp_coll: Dict[str, Dict[str, int]] = {}
+    comp_counts: Dict[str, Dict[str, int]] = {}
+    comp_calls: Dict[str, List[Tuple[str, int]]] = {}  # (callee, multiplier)
+
+    def trip_count(cond_comp: str) -> int:
+        """Best effort: find `constant(N)` compared against the loop index."""
+        best = 1
+        for line in comps.get(cond_comp, ()):
+            if "compare" in line:
+                mm = re.findall(r"constant\((\d+)\)", line)
+                if mm:
+                    best = max(best, int(mm[-1]))
+        if best == 1:
+            # constant may be defined on its own line in the condition comp
+            for line in comps.get(cond_comp, ()):
+                mm = re.match(r".*=\s*s32\[\]\s*constant\((\d+)\)", line)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        return best
+
+    for name, lines in comps.items():
+        coll: Dict[str, int] = {}
+        cnts: Dict[str, int] = {}
+        calls: List[Tuple[str, int]] = []
+        for line in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"=\s*[\w\[\],{{}}() ]*{kind}(\.|\()", line) or f" {kind}(" in line:
+                    # operand shapes appear in the result type; use the
+                    # result shape (same bytes for AR/A2A; AG output is the
+                    # gathered size — closer to wire bytes than the input)
+                    shapes = re.findall(r"(\w+\[[\d,]*\])", line.split("=")[0])
+                    total = sum(_shape_bytes(s) for s in shapes)
+                    if total == 0:
+                        shapes = re.findall(r"(\w+\[[\d,]*\])", line)
+                        total = sum(_shape_bytes(s) for s in shapes[:1])
+                    coll[kind] = coll.get(kind, 0) + total
+                    cnts[kind] = cnts.get(kind, 0) + 1
+            mw = re.search(r"while\(.*\).*condition=%?([\w.\-]+).*body=%?([\w.\-]+)", line)
+            if mw:
+                tc = trip_count(mw.group(1))
+                calls.append((mw.group(2), tc))
+                calls.append((mw.group(1), tc))
+            else:
+                for mm in re.finditer(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)", line):
+                    calls.append((mm.group(1), 1))
+        comp_coll[name] = coll
+        comp_counts[name] = cnts
+        comp_calls[name] = calls
+
+    # 3. accumulate from entry with multipliers
+    totals: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    seen_stack = []
+
+    def walk(name: str, mult: int, depth=0):
+        if depth > 50 or name not in comps:
+            return
+        for k, v in comp_coll.get(name, {}).items():
+            totals[k] = totals.get(k, 0) + v * mult
+            counts[k] = counts.get(k, 0) + comp_counts[name].get(k, 0) * mult
+        for callee, m in comp_calls.get(name, ()):
+            if callee != name:
+                walk(callee, mult * m, depth + 1)
+
+    if entry:
+        walk(entry, 1)
+    else:  # fall back: flat sum
+        for name in comps:
+            for k, v in comp_coll[name].items():
+                totals[k] = totals.get(k, 0) + v
+
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return {"bytes": totals, "counts": counts}
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> Dict[str, float]:
+    """MODEL_FLOPS for the cell: the 6ND yardstick + attention term."""
+    B, S = shape.global_batch, shape.seq_len
+    n_act = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = B * S
+        base = 6.0 * n_act * tokens
+        attn = 0.0
+        if cfg.family in ("dense", "vlm", "moe"):
+            attn = cfg.n_layers * 6.0 * B * S * S * cfg.n_heads * cfg.hd  # causal: x0.5, QK+PV: x2
+        elif cfg.family == "hybrid":
+            ng = cfg.n_layers // cfg.attn_every
+            attn = ng * 6.0 * B * S * S * cfg.n_heads * cfg.hd
+        elif cfg.family == "audio":
+            enc_S = 1500
+            attn = cfg.n_enc_layers * 12.0 * B * enc_S * enc_S * cfg.n_heads * cfg.hd \
+                + cfg.n_dec_layers * (6.0 * B * S * S + 12.0 * B * S * enc_S) * cfg.n_heads * cfg.hd / (cfg.n_heads * cfg.hd) * (cfg.n_heads * cfg.hd)
+        return {"matmul": base, "attention": attn, "total": base + attn}
+    if shape.kind == "prefill":
+        tokens = B * S
+        base = 2.0 * n_act * tokens
+        attn = 0.0
+        if cfg.family in ("dense", "vlm", "moe"):
+            attn = cfg.n_layers * 2.0 * B * S * S * cfg.n_heads * cfg.hd
+        elif cfg.family == "hybrid":
+            attn = (cfg.n_layers // cfg.attn_every) * 2.0 * B * S * S * cfg.n_heads * cfg.hd
+        elif cfg.family == "audio":
+            enc_S = 1500
+            base = 2.0 * n_act * B * enc_S
+            attn = cfg.n_enc_layers * 4.0 * B * enc_S * enc_S * cfg.n_heads * cfg.hd
+        return {"matmul": base, "attention": attn, "total": base + attn}
+    # decode: one token per sequence
+    base = 2.0 * n_act * B
+    attn = 0.0
+    if cfg.family in ("dense", "vlm", "moe"):
+        attn = cfg.n_layers * 4.0 * B * S * cfg.n_heads * cfg.hd
+    elif cfg.family == "hybrid":
+        attn = (cfg.n_layers // cfg.attn_every) * 4.0 * B * S * cfg.n_heads * cfg.hd
+    elif cfg.family == "audio":
+        attn = cfg.n_dec_layers * 4.0 * B * (S + 1500) * cfg.n_heads * cfg.hd
+    return {"matmul": base, "attention": attn, "total": base + attn}
+
+
+def roofline_terms(cell: Dict[str, Any], cfg, shape) -> Dict[str, Any]:
+    """Combine dry-run measurements into the three roofline terms."""
+    n_dev = cell.get("n_devices", 256)
+    flops = cell.get("acct_flops") or cell.get("hlo_flops") or 0.0
+    hbm_bytes = cell.get("acct_bytes") or cell.get("hlo_bytes") or 0.0
+    coll = (cell.get("collectives") or {}).get("bytes", {}).get("total", 0)
+    mf = model_flops(cfg, shape)
+    # cost_analysis is per-program = per-device for SPMD modules
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    useful_per_dev = mf["total"] / n_dev
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_total": mf["total"],
+        "model_flops_per_dev": useful_per_dev,
+        "useful_over_hlo": (useful_per_dev / flops) if flops else None,
+        "roofline_bound_s": max(t_compute, t_memory, t_coll),
+        "mfu_bound": (useful_per_dev / PEAK_FLOPS) / max(t_compute, t_memory, t_coll)
+        if max(t_compute, t_memory, t_coll) > 0 else None,
+    }
+
+
+def roofline_report(cells: List[Dict[str, Any]]) -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    from ..configs import get_config
+    from ..models.config import SHAPES
+
+    rows = []
+    hdr = ("| arch | shape | mesh | step | t_compute | t_memory | t_collective "
+           "| dominant | MODEL_FLOPs/HLO_FLOPs | bound MFU |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for c in cells:
+        if c.get("status") != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c.get('mesh','')} | "
+                        f"{c.get('status')} | {c.get('reason') or c.get('error','')[:40]} | | | | | |")
+            continue
+        cfg = get_config(c["arch"])
+        shape = SHAPES[c["shape"]]
+        t = roofline_terms(c, cfg, shape)
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['step']} "
+            f"| {t['t_compute_s']*1e3:.2f} ms | {t['t_memory_s']*1e3:.2f} ms "
+            f"| {t['t_collective_s']*1e3:.2f} ms | {t['dominant']} "
+            f"| {t['useful_over_hlo'] and round(t['useful_over_hlo'],3)} "
+            f"| {t['mfu_bound'] and round(t['mfu_bound'],3)} |"
+        )
+    return "\n".join(rows)

@@ -1,0 +1,165 @@
+"""Fault-tolerant training driver.
+
+Responsibilities at fleet scale, and how each is realized here:
+
+* **Checkpoint/restart** — periodic async checkpoints; on (re)start the
+  driver restores the latest complete checkpoint and, because the data
+  pipeline is a pure function of step (data/pipeline.py), replays exactly
+  the remaining batches. ``run()`` survives injected step failures.
+* **Failure detection** — a pluggable ``failure_hook(step)`` raising
+  ``WorkerFailure`` stands in for the real heartbeat/health service; the
+  driver treats it like a lost worker: roll back to the last checkpoint,
+  rebuild the jitted step (fresh devices), continue.
+* **Straggler mitigation** — per-step wall-time EWMA; steps slower than
+  ``straggler_factor`` x the EWMA are logged and counted. On real fleets
+  this signal feeds the scheduler to re-shard away from slow hosts; here it
+  is surfaced in metrics (and covered by a unit test with an artificial
+  sleep).
+* **Elastic scaling** — ``reshard(new_mesh)`` re-lowers the step for a new
+  mesh and device_puts the state with the new shardings (checkpoint format
+  is mesh-independent, see checkpoint/manager.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..models import api
+from ..models.config import ArchConfig, ShapeConfig
+from ..launch import steps as st
+from ..launch import sharding as shd
+
+
+class WorkerFailure(RuntimeError):
+    """Raised by the failure hook to simulate a lost worker/preemption."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_steps: int = 200
+    straggler_factor: float = 3.0
+    max_restarts: int = 5
+    async_checkpoint: bool = True
+    lr: float = 3e-4
+    warmup: int = 2000
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        shape: ShapeConfig,
+        mesh,
+        data,
+        tcfg: TrainerConfig,
+        failure_hook: Optional[Callable[[int], None]] = None,
+        optimizer: Optional[str] = None,
+    ):
+        self.cfg, self.shape, self.mesh, self.data, self.tcfg = cfg, shape, mesh, data, tcfg
+        self.failure_hook = failure_hook
+        self.optimizer = optimizer
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.metrics: List[Dict[str, Any]] = []
+        self.straggler_steps: List[int] = []
+        self._build()
+
+    # -- construction -------------------------------------------------------
+    def _build(self):
+        self.bundle = st.make_train_step(
+            self.cfg, self.shape, self.mesh, optimizer=self.optimizer,
+            lr=self.tcfg.lr, warmup=self.tcfg.warmup,
+            total_steps=max(self.tcfg.max_steps, self.tcfg.warmup + 1))
+        self.step_fn = jax.jit(
+            self.bundle.fn,
+            in_shardings=self.bundle.in_shardings,
+            out_shardings=self.bundle.out_shardings,
+            donate_argnums=self.bundle.donate_argnums,
+        )
+
+    def init_state(self, seed: int = 0):
+        from .. import optim
+
+        params = api.init_params(self.cfg, jax.random.PRNGKey(seed))
+        opt = optim.make_optimizer(self.optimizer or st.pick_optimizer(self.cfg))
+        opt_state = opt.init(params)
+        p_sh, o_sh = self.bundle.in_shardings[0], self.bundle.in_shardings[1]
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+        return params, opt_state
+
+    # -- elastic ------------------------------------------------------------
+    def reshard(self, new_mesh, params, opt_state):
+        """Move to a different mesh (elastic scale up/down)."""
+        self.mesh = new_mesh
+        self._build()
+        p_sh, o_sh = self.bundle.in_shardings[0], self.bundle.in_shardings[1]
+        params = jax.device_put(jax.tree_util.tree_map(np.asarray, params), p_sh)
+        opt_state = jax.device_put(jax.tree_util.tree_map(np.asarray, opt_state), o_sh)
+        return params, opt_state
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, seed: int = 0):
+        restarts = 0
+        while True:
+            try:
+                return self._run_once(seed)
+            except WorkerFailure as e:
+                restarts += 1
+                if restarts > self.tcfg.max_restarts:
+                    raise RuntimeError(f"exceeded max restarts: {e}")
+                self.metrics.append({"event": "restart", "cause": str(e)})
+                self._build()   # fresh executable (new workers)
+
+    def _run_once(self, seed: int):
+        # restore or init
+        try:
+            params_like, opt_like = self._abstract_state()
+            p_sh, o_sh = self.bundle.in_shardings[0], self.bundle.in_shardings[1]
+            params, opt_state, step0, extra = self.ckpt.restore(
+                params_like, opt_like, shardings=(p_sh, o_sh)
+            )
+            start = step0 + 1
+        except FileNotFoundError:
+            params, opt_state = self.init_state(seed)
+            start = 0
+
+        ewma = None
+        for step in range(start, self.tcfg.max_steps):
+            t0 = time.time()   # whole-iteration time: data + step + sync
+            if self.failure_hook is not None:
+                self.failure_hook(step)      # may raise WorkerFailure
+            batch = self.data.batch_at(step)
+            batch = {k: jax.device_put(v, s) for (k, v), s in
+                     zip(batch.items(), [self.bundle.in_shardings[2][k] for k in batch])}
+            params, opt_state, metrics = self.step_fn(
+                params, opt_state, batch, np.int32(step)
+            )
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            if dt > self.tcfg.straggler_factor * ewma and step > start + 3:
+                self.straggler_steps.append(step)
+            self.metrics.append(
+                {"step": step, "loss": float(metrics["loss"]),
+                 "grad_norm": float(metrics["grad_norm"]), "dt": dt}
+            )
+            if (step + 1) % self.tcfg.ckpt_every == 0 or step + 1 == self.tcfg.max_steps:
+                save = self.ckpt.save_async if self.tcfg.async_checkpoint else self.ckpt.save
+                save(step, params, opt_state, extra={"data": {"step": step}})
+        self.ckpt.wait()
+        return params, opt_state
+
+    def _abstract_state(self):
+        from .. import optim
+
+        params_like = st.abstract_params(self.cfg)
+        opt = optim.make_optimizer(self.optimizer or st.pick_optimizer(self.cfg))
+        opt_like = jax.eval_shape(opt.init, params_like)
+        return params_like, opt_like

@@ -1,0 +1,195 @@
+"""Substrate tests: data determinism, checkpointing, optimizers, compression,
+fault-tolerant trainer."""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import MemmapTokens, ShardInfo, SyntheticLM, write_token_file
+
+rng = np.random.default_rng(0)
+
+
+class TestData:
+    def test_determinism_across_restart(self):
+        d = SyntheticLM(vocab=64, batch=8, seq=16, seed=3)
+        b10 = d.batch_at(10)
+        d2 = SyntheticLM(vocab=64, batch=8, seq=16, seed=3)
+        np.testing.assert_array_equal(b10["tokens"], d2.batch_at(10)["tokens"])
+
+    def test_host_shards_disjoint_union(self):
+        full = SyntheticLM(vocab=64, batch=8, seq=4, seed=3)
+        parts = [SyntheticLM(vocab=64, batch=8, seq=4, seed=3,
+                             shard=ShardInfo(h, 4)) for h in range(4)]
+        sizes = {p.local_batch for p in parts}
+        assert sizes == {2}
+
+    def test_memmap_backend(self, tmp_path):
+        toks = rng.integers(0, 100, (40 * 17,)).astype(np.int32)
+        path = str(tmp_path / "tokens.bin")
+        write_token_file(path, toks)
+        d = MemmapTokens(path, batch=4, seq=16)
+        b = d.batch_at(0)
+        assert b["tokens"].shape == (4, 17)
+        np.testing.assert_array_equal(b["tokens"][0], toks[:17])
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return (
+            {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.bfloat16),
+             "b": jnp.arange(3, dtype=jnp.float32)},
+            {"m": {"w": jnp.zeros((4, 4)), "b": jnp.ones((3,))},
+             "step": jnp.asarray(7, jnp.int32)},
+        )
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        params, opt = self._tree()
+        m = CheckpointManager(str(tmp_path))
+        m.save(5, params, opt)
+        p2, o2, step, _ = m.restore(params, opt)
+        assert step == 5
+        np.testing.assert_allclose(np.asarray(p2["w"], np.float32),
+                                   np.asarray(params["w"], np.float32))
+        assert str(jnp.asarray(p2["w"]).dtype) == "bfloat16" or p2["w"].dtype == np.float32
+
+    def test_atomic_commit_ignores_torn_checkpoint(self, tmp_path):
+        params, opt = self._tree()
+        m = CheckpointManager(str(tmp_path))
+        m.save(1, params, opt)
+        # simulate a torn save: directory without manifest
+        os.makedirs(tmp_path / "step_9")
+        (tmp_path / "step_9" / "params__w.npy").write_bytes(b"junk")
+        assert m.latest_step() == 1
+
+    def test_rotation(self, tmp_path):
+        params, opt = self._tree()
+        m = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            m.save(s, params, opt)
+        assert m.all_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        params, opt = self._tree()
+        m = CheckpointManager(str(tmp_path))
+        m.save_async(11, params, opt)
+        m.wait()
+        assert m.latest_step() == 11
+
+
+class TestOptimizers:
+    def test_adamw_reduces_quadratic(self):
+        w = {"w": jnp.asarray([3.0, -2.0])}
+        opt = optim.make_optimizer("adamw")
+        state = opt.init(w)
+        for i in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(w)
+            w, state = opt.update(w, g, state, lr=0.05, wd=0.0)
+        assert float(jnp.abs(w["w"]).max()) < 0.1
+
+    def test_adafactor_reduces_quadratic_matrix(self):
+        w = {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+        opt = optim.make_optimizer("adafactor")
+        state = opt.init(w)
+        for i in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(w)
+            w, state = opt.update(w, g, state, lr=0.1)
+        assert float(jnp.abs(w["w"]).max()) < 0.2
+
+    def test_adafactor_state_is_factored(self):
+        w = {"w": jnp.zeros((64, 32))}
+        opt = optim.make_optimizer("adafactor")
+        state = opt.init(w)
+        v = state["v"]["w"]
+        assert set(v) == {"vr", "vc"}
+        assert v["vr"].shape == (64,) and v["vc"].shape == (32,)
+        # factored state is O(m+n), not O(mn)
+        assert v["vr"].size + v["vc"].size < 64 * 32 / 5
+
+    def test_global_norm_clip(self):
+        g = {"a": jnp.full((10,), 10.0)}
+        clipped, gn = optim.clip_by_global_norm(g, 1.0)
+        assert float(gn) > 1.0
+        total = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+        np.testing.assert_allclose(total, 1.0, rtol=1e-4)
+
+
+class TestCompression:
+    @given(st.integers(0, 5))
+    @settings(max_examples=5, deadline=None)
+    def test_error_feedback_unbiased_over_time(self, seed):
+        """Property: with error feedback, the accumulated applied update
+        converges to the accumulated true gradient (residual stays bounded)."""
+        r = np.random.default_rng(seed)
+        g_true = jnp.asarray(r.standard_normal((512,)), jnp.float32)
+        residual = jnp.zeros_like(g_true)
+        applied = jnp.zeros_like(g_true)
+        for _ in range(20):
+            deq, residual = optim.error_feedback_update(g_true, residual)
+            applied = applied + deq
+        # average applied update ~ g_true
+        np.testing.assert_allclose(np.asarray(applied) / 20, np.asarray(g_true),
+                                   atol=0.02)
+
+    def test_roundtrip_shape(self):
+        g = jnp.asarray(rng.standard_normal((100, 7)), jnp.float32)
+        q, s = optim.compress_int8(g)
+        out = optim.decompress_int8(q, s, g.shape)
+        assert out.shape == g.shape
+        assert float(jnp.abs(out - g).max()) < float(jnp.abs(g).max()) / 64
+
+
+class TestTrainer:
+    def _mk(self, tmp, max_steps=30, hook=None):
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_smoke_mesh
+        from repro.models.config import ShapeConfig
+        from repro.runtime.trainer import Trainer, TrainerConfig
+
+        cfg = get_smoke_config("smollm_360m")
+        data = SyntheticLM(cfg.vocab, 4, 32, seed=1)
+        return Trainer(
+            cfg, ShapeConfig("t", 32, 4, "train"), make_smoke_mesh(), data,
+            TrainerConfig(ckpt_dir=tmp, ckpt_every=10, max_steps=max_steps,
+                          lr=5e-3, warmup=5),
+            failure_hook=hook,
+        )
+
+    def test_restart_resumes_and_learns(self, tmp_path):
+        from repro.runtime.trainer import WorkerFailure
+
+        fails = {"n": 0}
+
+        def hook(step):
+            if step == 15 and fails["n"] == 0:
+                fails["n"] += 1
+                raise WorkerFailure("injected")
+
+        t = self._mk(str(tmp_path), max_steps=30, hook=hook)
+        t.run()
+        events = [m for m in t.metrics if m.get("event") == "restart"]
+        assert len(events) == 1
+        losses = [m["loss"] for m in t.metrics if "loss" in m]
+        assert losses[-1] < losses[0]
+        # resumed from the step-9 checkpoint, not from scratch
+        steps = [m["step"] for m in t.metrics if "step" in m]
+        assert steps.count(10) == 2 and steps.count(0) == 1
+
+    def test_straggler_detection(self, tmp_path):
+        slow = {"done": False}
+
+        def hook(step):
+            if step == 20 and not slow["done"]:
+                slow["done"] = True
+                time.sleep(6.0)   # >> 3x EWMA even on a contended CPU
+
+        t = self._mk(str(tmp_path), max_steps=25, hook=hook)
+        t.run()
+        assert 20 in t.straggler_steps

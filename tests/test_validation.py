@@ -1,0 +1,59 @@
+"""Compilation-results validation tests (VT1 / VT2 / VT3, Table 2/3 analogues)."""
+import numpy as np
+import pytest
+
+from repro.core import ir, validate
+
+
+class TestVT1:
+    @pytest.mark.parametrize("op", list(validate.VT1_CASES))
+    def test_ir_ila_vs_independent_impl(self, op):
+        assert validate.vt1_check(op, n=5)
+
+
+class TestVT2:
+    @pytest.mark.parametrize("case", validate.vt2_cases(8, 32), ids=lambda c: c.name)
+    def test_fragment_equivalence_abstract_types(self, case):
+        assert validate.vt2_check(case, n=5)
+
+    def test_exhaustive_finite_domain(self):
+        """Complete check over the full {-1,0,1} lattice (Table 3 analogue)."""
+        T = ir.Var("T", (2, 2))
+        case = validate.VT2Case(
+            "maxpool-2x2",
+            ir.call("reduce_max", ir.call("windows", T, wh=2, ww=1, sh=2, sw=1), axis=(2, 3)),
+            ir.call("fasr_load", ir.call("fasr_maxpool", ir.call("fasr_store", T))),
+            {"T": (2, 2)},
+        )
+        ok, n = validate.vt2_exhaustive(case, (-1.0, 0.0, 1.0))
+        assert ok and n == 3 ** 4
+
+    def test_exhaustive_catches_wrong_mapping(self):
+        """Soundness of the checker: a deliberately wrong mapping fails."""
+        T = ir.Var("T", (2, 2))
+        case = validate.VT2Case(
+            "wrong",
+            ir.call("reduce_max", ir.call("windows", T, wh=2, ww=1, sh=2, sw=1), axis=(2, 3)),
+            ir.call("fasr_load", ir.call("fasr_meanpool", ir.call("fasr_store", T))),
+            {"T": (2, 2)},
+        )
+        ok, _ = validate.vt2_exhaustive(case, (-1.0, 0.0, 1.0))
+        assert not ok
+
+
+class TestVT3:
+    def test_vta_gemm_ila_vs_kernel_exact(self):
+        assert validate.vt3_gemm(n=2)
+
+
+class TestMappingValidation:
+    def test_table2_magnitudes(self):
+        """Quick (n=5) version of Table 2: VTA GEMM exact; FlexASR ops a few
+        percent; maxpool exact on device-representable inputs."""
+        rows = validate.validate_mappings(n_inputs=5)
+        by_op = {(r.accelerator, r.operation): r for r in rows}
+        assert by_op[("VTA", "GEMM")].avg_err == 0.0
+        assert by_op[("FlexASR", "MaxPool")].avg_err == 0.0
+        assert 0 < by_op[("FlexASR", "LinearLayer")].avg_err < 0.06
+        assert 0 < by_op[("FlexASR", "Attention")].avg_err < 0.10
+        assert 0 < by_op[("HLSCNN", "Conv2D")].avg_err < 0.05
