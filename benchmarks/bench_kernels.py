@@ -12,13 +12,19 @@ from repro.kernels import ops
 PEAK = 197e12
 
 
-def _time(fn, n=3):
-    fn()  # warm/compile
-    t0 = time.time()
+def _time(fn, n=5):
+    """min per-iteration time; device work forced inside the timed region."""
+    out = fn()  # warm/compile
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    ts = []
     for _ in range(n):
+        t0 = time.perf_counter()
         out = fn()
-    jnp = out.block_until_ready() if hasattr(out, "block_until_ready") else out
-    return (time.time() - t0) / n
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
 
 
 def run():

@@ -1,49 +1,134 @@
 """ILA simulator speed (the paper's "30x faster than RTL simulation" claim).
 
-No RTL offline, so we benchmark the two simulator tiers we do have — the
-jit-compiled lax.scan simulator vs the eager per-command reference — on the
-FlexASR LinearLayer fragment. The jit tier is the analogue of ILAng's
-generated C++ simulator; the eager tier stands in for the slow
-interpretation baseline.
+No RTL offline, so we benchmark the simulator tiers we do have on the
+FlexASR LinearLayer fragment:
+
+  eager      — per-command reference interpretation (the slow baseline)
+  jit scan   — full command stream re-derived, re-packed and scanned per
+               invocation (the pre-fragment-compiler behavior; the analogue
+               of ILAng's generated simulator run from scratch each time)
+  compiled   — fragment-compiler fast path: cached setup state, vectorized
+               data packing, unrolled tail (steady state; cold = first
+               invocation for a parameter set, including setup simulation)
+  batched    — the same, vmapped over a stack of data streams
+
+Timing methodology: ``time.perf_counter``, device results forced with
+``block_until_ready()`` inside the timed region, per-iteration min/median
+reported. Also reported: fragment-cache hit/miss counts and jit trace
+counts (retraces stay bounded — power-of-two bucketing for streams, one
+compiled executor per data-stream signature).
 """
 from __future__ import annotations
 
+import statistics
 import time
 
+import jax
 import numpy as np
 
 from repro.accel import flexasr as fa
+from repro.core import ila as ila_mod
+
+
+def _force(r):
+    if hasattr(r, "block_until_ready"):
+        r.block_until_ready()
+    elif isinstance(r, dict):
+        for v in r.values():
+            if hasattr(v, "block_until_ready"):
+                v.block_until_ready()
+    return r
+
+
+def _time(fn, n=10, warmup=1):
+    for _ in range(warmup):
+        _force(fn())
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        _force(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts), statistics.median(ts)
 
 
 def run():
-    print("\n== ILA simulator speed (jit scan vs eager reference) ==")
+    print("\n== ILA simulator speed (fragment compiler vs jit scan vs eager) ==")
     rng = np.random.default_rng(0)
     x = rng.standard_normal((64, 128)).astype(np.float32)
     w = (rng.standard_normal((64, 128)) * 0.1).astype(np.float32)
     b = np.zeros((64,), np.float32)
     cmds, rd = fa.build_linear_fragment(x, w, b)
+    xs = [rng.standard_normal((64, 128)).astype(np.float32) for _ in range(8)]
 
-    # warm both paths
-    fa.flexasr.simulate_jit(cmds)
-    t0 = time.time()
-    n_jit = 20
-    for _ in range(n_jit):
-        st = fa.flexasr.simulate_jit(cmds)
-    rd(st).block_until_ready()
-    t_jit = (time.time() - t0) / n_jit
+    # steady-state jit-scan tier: the pre-fragment-compiler behavior —
+    # weight/config commands re-derived per invocation (cache=False), the
+    # full stream re-packed, then scanned
+    def seed_path():
+        frag = fa.linear_fragment(w, b, cache=False)
+        c = frag.full_commands(fa.pack_linear_data(frag, x))
+        return fa.read_full(fa.flexasr.simulate_jit(c))
 
-    t0 = time.time()
+    jit_min, jit_med = _time(seed_path, n=5)
+
+    # compiled tier, cold: fresh fragment (setup stream simulated) each time
+    def cold_path():
+        frag = fa.linear_fragment(w, b, cache=False)
+        return fa.read_full(frag.run(fa.pack_linear_data(frag, x)))
+
+    cold_min, cold_med = _time(cold_path, n=3)
+
+    # compiled tier, steady state: cached setup, only data re-packed
+    frag = fa.linear_fragment(w, b)
+    frag.setup_state()
+
+    def warm_path():
+        return fa.read_full(frag.run(fa.pack_linear_data(frag, x)))
+
+    warm_min, warm_med = _time(warm_path, n=20)
+
+    # batched tier: 8 samples through one vmapped simulator call
+    datas = [fa.pack_linear_data(frag, xi) for xi in xs]
+
+    def batch_path():
+        return jax.vmap(fa.read_full)(frag.run_batch(datas))
+
+    batch_min, batch_med = _time(batch_path, n=10)
+    per_sample_min = batch_min / len(xs)
+
+    t0 = time.perf_counter()
     n_eager = 2
     for _ in range(n_eager):
         st = fa.flexasr.simulate(cmds)
-    t_eager = (time.time() - t0) / n_eager
+    eager = (time.perf_counter() - t0) / n_eager
 
-    speedup = t_eager / t_jit
+    # bit-exactness of every tier vs the eager reference
+    ref = np.asarray(rd(fa.flexasr.simulate(cmds)))
+    out_warm = np.asarray(warm_path())[:64, :64]
+    out_batch = np.asarray(batch_path())[0][:64, :64]
+    ref_b0 = np.asarray(
+        fa.read_full(fa.flexasr.simulate(frag.full_commands(datas[0])))
+    )[:64, :64]
+    exact = np.array_equal(ref, out_warm) and np.array_equal(ref_b0, out_batch)
+
+    speedup = jit_min / warm_min
     print(f"fragment: {len(cmds)} commands (FlexASR LinearLayer 64x128->64)")
-    print(f"eager reference: {t_eager*1e3:8.1f} ms/invocation")
-    print(f"jit simulator:   {t_jit*1e3:8.1f} ms/invocation   ({speedup:.0f}x faster)")
-    return [("sim_speed_jit", t_jit * 1e6, f"speedup={speedup:.1f}x"),
-            ("sim_speed_eager", t_eager * 1e6, f"n_cmds={len(cmds)}")]
+    print(f"eager reference:    {eager*1e3:8.1f} ms/invocation")
+    print(f"jit scan (seed):    {jit_min*1e3:8.1f} ms min / {jit_med*1e3:.1f} ms median")
+    print(f"compiled cold:      {cold_min*1e3:8.1f} ms min / {cold_med*1e3:.1f} ms median")
+    print(f"compiled steady:    {warm_min*1e3:8.1f} ms min / {warm_med*1e3:.1f} ms median"
+          f"   ({speedup:.1f}x vs jit scan)")
+    print(f"batched (8/call):   {per_sample_min*1e3:8.1f} ms/sample min")
+    print(f"bit-exact vs eager reference: {exact}")
+    print(f"fragment cache: {ila_mod.FRAGMENTS.info()}")
+    print(f"flexasr jit traces: {fa.flexasr.jit_cache_info()}")
+    assert exact, "compiled tiers must match the eager reference bit-for-bit"
+    return [
+        ("sim_steady_compiled", warm_min * 1e6, f"speedup={speedup:.1f}x"),
+        ("sim_cold_compiled", cold_min * 1e6, "includes setup sim"),
+        ("sim_batched_per_sample", per_sample_min * 1e6, "batch of 8"),
+        ("sim_speed_jit", jit_min * 1e6, f"n_cmds={len(cmds)}"),
+        ("sim_speed_eager", eager * 1e6, f"n_cmds={len(cmds)}"),
+    ]
 
 
 if __name__ == "__main__":

@@ -48,7 +48,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.ila import ILA, Command, Fragment, IRAccelMapping, REGISTRY
+from ..core.ila import (
+    FRAGMENTS, ILA, BulkWrite, Command, CompiledFragment, DataStream, Fragment,
+    IRAccelMapping, PackedStream, REGISTRY, fingerprint,
+)
 from . import numerics
 from .numerics import AdaptivFloatSpec
 
@@ -334,6 +337,12 @@ def _fn_start(st, addr, data):
 
 # --------------------------------------------------------------------------
 # Driver-side fragment builders (the IR-accelerator mappings, Figure 5)
+#
+# Each builder is split into a *setup* stream (weight/config load, built and
+# simulated once per parameter set, cached as post-setup architectural state)
+# and a *data* stream (activation rows + FN_START, re-packed per sample).
+# ``build_*_fragment`` keeps the original one-shot API: setup + data
+# concatenated into a single eager-simulable command list.
 # --------------------------------------------------------------------------
 
 
@@ -345,12 +354,22 @@ def _rows_of(x: np.ndarray) -> np.ndarray:
     return buf.reshape(MAX_TS * (MAX_IN // V), V)
 
 
-def _write_matrix_cmds(base: int, x: np.ndarray) -> List[Command]:
-    rows = _rows_of(x)
-    return [
-        Command(WRITE_V, base + i, tuple(rows[i])) for i in range(rows.shape[0])
-        if np.any(rows[i]) or i < (x.shape[0] * (MAX_IN // V))
-    ]
+def _matrix_bulk(base: int, x: np.ndarray) -> BulkWrite:
+    """(T, D) tensor -> bulk WRITE_V run: T*(MAX_IN//V) rows at ``base``."""
+    n = x.shape[0] * (MAX_IN // V)
+    return BulkWrite("gb_large", base, _rows_of(x)[:n], WRITE_V)
+
+
+def _tail(entries) -> PackedStream:
+    """Pack [(opcode, values), ...] config/trigger commands into a stream."""
+    n = len(entries)
+    ops = np.array([e[0] for e in entries], np.int32)
+    addrs = np.zeros((n,), np.int32)
+    data = np.zeros((n, V), np.float32)
+    for i, (_, vals) in enumerate(entries):
+        vals = np.asarray(vals, np.float32)
+        data[i, : len(vals)] = vals
+    return PackedStream(ops, addrs, data)
 
 
 def _write_weight_cmds(w: np.ndarray) -> List[Command]:
@@ -401,119 +420,276 @@ BASE_OUT = MAX_TS * (MAX_IN // V)
 BASE_AUX = 2 * MAX_TS * (MAX_IN // V)
 
 
+def read_full(st) -> jnp.ndarray:
+    """Fixed-shape output read (vmap-safe): the whole (MAX_TS, MAX_IN)
+    output block; callers slice the valid [:T, :D] window host-side."""
+    return _read_matrix(st, BASE_OUT, MAX_TS, MAX_IN)
+
+
+def _setup_stream(weight_cmds: List[Command], cfg) -> PackedStream:
+    return PackedStream.concat([PackedStream.from_commands(weight_cmds, V), _tail(cfg)])
+
+
+# -- LinearLayer -------------------------------------------------------------
+
+
+def linear_fragment(w, b, act: int = ACT_NONE, cache: bool = True) -> CompiledFragment:
+    """Setup half of the LinearLayer mapping: weights + bias resident in PE
+    memory, sizing/activation configured. Cached per parameter set."""
+    w, b = np.asarray(w, np.float32), np.asarray(b, np.float32)
+    O, I = w.shape
+    assert I <= MAX_IN and O <= MAX_OUT and O <= MAX_IN
+
+    key = ("fasr_linear", I, O, int(act), fingerprint(w, b))
+
+    def build():
+        (bw,) = _exp_biases(w)
+        setup = _setup_stream(
+            _write_weight_cmds(w) + _write_bias_cmds(b),
+            [
+                (PE_CFG_RNN_LAYER_SIZING, (I, O)),
+                (PE_CFG_MNGR, (1.0,)),
+                (PE_CFG_ACT_MNGR, (float(act),)),
+                (GB_CFG_MMNGR, (BASE_IN, BASE_OUT, 0, 0)),
+            ],
+        )
+        return CompiledFragment(
+            flexasr, key, setup, meta={"w": w, "b": b, "bw": bw, "I": I, "O": O}
+        )
+
+    return FRAGMENTS.get(key, build) if cache else build()
+
+
+def pack_linear_data(frag: CompiledFragment, x) -> DataStream:
+    """Data half: activation rows + per-sample AF exponent windows + trigger.
+    The driver sizes the output window from the ideal fp32 result, exactly
+    as the one-shot builder did."""
+    x = np.asarray(x, np.float32)
+    T = x.shape[0]
+    assert T <= MAX_TS and x.shape[1] == frag.meta["I"]
+    (ba,) = _exp_biases(x)
+    ideal = x @ frag.meta["w"].T + frag.meta["b"]
+    (bo,) = _exp_biases(ideal)
+    tail = _tail(
+        [
+            (GB_CFG_GB_CONTROL, (MODE_LINEAR, T)),
+            (CFG_NUMERICS, (frag.meta["bw"], ba, bo)),
+            (FN_START, ()),
+        ]
+    )
+    return DataStream([_matrix_bulk(BASE_IN, x)], tail)
+
+
 def build_linear_fragment(x, w, b, act: int = ACT_NONE):
     """nn.dense + bias_add -> FlexASR LinearLayer fragment (Figure 5)."""
-    x, w, b = np.asarray(x), np.asarray(w), np.asarray(b)
-    T, I = x.shape
-    O = w.shape[0]
-    assert T <= MAX_TS and I <= MAX_IN and O <= MAX_OUT and O <= MAX_IN
-    bw, ba = _exp_biases(w, x)
-    ideal = x.astype(np.float32) @ w.astype(np.float32).T + b
-    (bo,) = _exp_biases(ideal)
-    cmds: List[Command] = []
-    cmds += _write_weight_cmds(w)
-    cmds += _write_bias_cmds(b)
-    cmds += _write_matrix_cmds(BASE_IN, x)
-    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (I, O)))
-    cmds.append(Command(PE_CFG_MNGR, 0, (1.0,)))
-    cmds.append(Command(PE_CFG_ACT_MNGR, 0, (float(act),)))
-    cmds.append(Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, 0, 0)))
-    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (MODE_LINEAR, T)))
-    cmds.append(Command(CFG_NUMERICS, 0, (bw, ba, bo)))
-    cmds.append(Command(FN_START))
+    x = np.asarray(x, np.float32)
+    T, O = x.shape[0], np.asarray(w).shape[0]
+    frag = linear_fragment(w, b, act)
+    cmds = frag.full_commands(pack_linear_data(frag, x))
     return cmds, lambda st: _read_matrix(st, BASE_OUT, T, O)
+
+
+# -- LSTM --------------------------------------------------------------------
+
+
+def lstm_fragment(wi, wh, b, cache: bool = True) -> CompiledFragment:
+    wi, wh, b = (np.asarray(t, np.float32) for t in (wi, wh, b))
+    I, H = wi.shape[1], wh.shape[1]
+    assert I <= MAX_IN and 4 * H <= MAX_OUT and H <= MAX_H
+
+    key = ("fasr_lstm", I, H, fingerprint(wi, wh, b))
+
+    def build():
+        (bw,) = _exp_biases(np.concatenate([wi.ravel(), wh.ravel()]))
+        bo = 0.0 - (2 ** AF.n_exp - 1)  # h,c in (-1,1): top exponent 0
+        # PE gate memory layout: gate g occupies rows [g*MAX_H, g*MAX_H + H)
+        wi_p = np.zeros((4 * MAX_H, wi.shape[1]), np.float32)
+        wh_p = np.zeros((4 * MAX_H, wh.shape[1]), np.float32)
+        b_p = np.zeros((4 * MAX_H,), np.float32)
+        for g in range(4):
+            wi_p[g * MAX_H : g * MAX_H + H] = wi[g * H : (g + 1) * H]
+            wh_p[g * MAX_H : g * MAX_H + H] = wh[g * H : (g + 1) * H]
+            b_p[g * MAX_H : g * MAX_H + H] = b[g * H : (g + 1) * H]
+        setup = _setup_stream(
+            _write_weight_cmds(wi_p) + _write_wh_cmds(wh_p) + _write_bias_cmds(b_p),
+            [
+                (PE_CFG_RNN_LAYER_SIZING, (I, H)),
+                (PE_CFG_MNGR, (1.0,)),
+                (GB_CFG_MMNGR, (BASE_IN, BASE_OUT, 0, 0)),
+            ],
+        )
+        return CompiledFragment(flexasr, key, setup, meta={"bw": bw, "bo": bo, "I": I, "H": H})
+
+    return FRAGMENTS.get(key, build) if cache else build()
+
+
+def pack_lstm_data(frag: CompiledFragment, x) -> DataStream:
+    x = np.asarray(x, np.float32)
+    T = x.shape[0]
+    assert T <= MAX_TS and x.shape[1] == frag.meta["I"]
+    (ba,) = _exp_biases(x)
+    tail = _tail(
+        [
+            (GB_CFG_GB_CONTROL, (MODE_LSTM, T)),
+            (CFG_NUMERICS, (frag.meta["bw"], ba, frag.meta["bo"])),
+            (FN_START, ()),
+        ]
+    )
+    return DataStream([_matrix_bulk(BASE_IN, x)], tail)
 
 
 def build_lstm_fragment(x, wi, wh, b):
     """Unrolled-LSTM IR fragment -> ONE FlexASR LSTM invocation (the
     paper's 566-ops-to-1-instruction granularity bridge)."""
-    x, wi, wh, b = map(np.asarray, (x, wi, wh, b))
-    T, I = x.shape
-    H = wh.shape[1]
-    assert T <= MAX_TS and I <= MAX_IN and 4 * H <= MAX_OUT and H <= MAX_H
-    bw, ba = _exp_biases(np.concatenate([wi.ravel(), wh.ravel()]), x)
-    bo = 0.0 - (2 ** AF.n_exp - 1)  # h,c in (-1,1): top exponent 0
-    # PE gate memory layout: gate g occupies rows [g*MAX_H, g*MAX_H + H)
-    wi_p = np.zeros((4 * MAX_H, wi.shape[1]), np.float32)
-    wh_p = np.zeros((4 * MAX_H, wh.shape[1]), np.float32)
-    b_p = np.zeros((4 * MAX_H,), np.float32)
-    for g in range(4):
-        wi_p[g * MAX_H : g * MAX_H + H] = wi[g * H : (g + 1) * H]
-        wh_p[g * MAX_H : g * MAX_H + H] = wh[g * H : (g + 1) * H]
-        b_p[g * MAX_H : g * MAX_H + H] = b[g * H : (g + 1) * H]
-    cmds: List[Command] = []
-    cmds += _write_weight_cmds(wi_p)
-    cmds += _write_wh_cmds(wh_p)
-    cmds += _write_bias_cmds(b_p)
-    cmds += _write_matrix_cmds(BASE_IN, x)
-    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (I, H)))
-    cmds.append(Command(PE_CFG_MNGR, 0, (1.0,)))
-    cmds.append(Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, 0, 0)))
-    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (MODE_LSTM, T)))
-    cmds.append(Command(CFG_NUMERICS, 0, (bw, ba, bo)))
-    cmds.append(Command(FN_START))
+    x = np.asarray(x, np.float32)
+    T, H = x.shape[0], np.asarray(wh).shape[1]
+    frag = lstm_fragment(wi, wh, b)
+    cmds = frag.full_commands(pack_lstm_data(frag, x))
     return cmds, lambda st: _read_matrix(st, BASE_OUT, T, H)
 
 
-def build_pool_fragment(x, kind="max"):
-    x = np.asarray(x)
-    T, D = x.shape
-    assert T <= MAX_TS and D <= MAX_IN
+# -- temporal pooling --------------------------------------------------------
+
+
+def pool_fragment(D: int, kind: str = "max", cache: bool = True) -> CompiledFragment:
+    assert D <= MAX_IN
+    key = ("fasr_pool", D, kind)
+
+    def build():
+        setup = _tail(
+            [
+                (PE_CFG_RNN_LAYER_SIZING, (D, D)),
+                (GB_CFG_MMNGR, (BASE_IN, BASE_OUT, 0, 0)),
+            ]
+        )
+        mode = MODE_MAXPOOL if kind == "max" else MODE_MEANPOOL
+        return CompiledFragment(flexasr, key, setup, meta={"mode": mode, "D": D})
+
+    return FRAGMENTS.get(key, build) if cache else build()
+
+
+def pack_pool_data(frag: CompiledFragment, x) -> DataStream:
+    x = np.asarray(x, np.float32)
+    T = x.shape[0]
+    assert T <= MAX_TS and x.shape[1] == frag.meta["D"]
     (bo,) = _exp_biases(x)
-    mode = MODE_MAXPOOL if kind == "max" else MODE_MEANPOOL
-    cmds: List[Command] = []
-    cmds += _write_matrix_cmds(BASE_IN, x)
-    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (D, D)))
-    cmds.append(Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, 0, 0)))
-    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (mode, T)))
-    cmds.append(Command(CFG_NUMERICS, 0, (0.0, 0.0, bo)))
-    cmds.append(Command(FN_START))
+    tail = _tail(
+        [
+            (GB_CFG_GB_CONTROL, (frag.meta["mode"], T)),
+            (CFG_NUMERICS, (0.0, 0.0, bo)),
+            (FN_START, ()),
+        ]
+    )
+    return DataStream([_matrix_bulk(BASE_IN, x)], tail)
+
+
+def build_pool_fragment(x, kind="max"):
+    x = np.asarray(x, np.float32)
+    T, D = x.shape
+    frag = pool_fragment(D, kind)
+    cmds = frag.full_commands(pack_pool_data(frag, x))
     return cmds, lambda st: _read_matrix(st, BASE_OUT, T // 2, D)
 
 
-def build_layernorm_fragment(x, gamma, beta):
-    x, gamma, beta = map(np.asarray, (x, gamma, beta))
-    T, D = x.shape
-    assert T <= MAX_TS and D <= MAX_IN
-    ba = _exp_biases(x)[0]
+# -- layer norm --------------------------------------------------------------
+
+
+def layernorm_fragment(gamma, beta, cache: bool = True) -> CompiledFragment:
+    gamma, beta = np.asarray(gamma, np.float32), np.asarray(beta, np.float32)
+    D = gamma.shape[0]
+    assert D <= MAX_IN
+    key = ("fasr_layernorm", D, fingerprint(gamma, beta))
+
+    def build():
+        setup = _setup_stream(
+            _write_weight_cmds(gamma[None, :]) + _write_bias_cmds(beta),
+            [
+                (PE_CFG_RNN_LAYER_SIZING, (D, D)),
+                (GB_CFG_MMNGR, (BASE_IN, BASE_OUT, 0, 0)),
+            ],
+        )
+        return CompiledFragment(
+            flexasr, key, setup, meta={"gamma": gamma, "beta": beta, "D": D}
+        )
+
+    return FRAGMENTS.get(key, build) if cache else build()
+
+
+def pack_layernorm_data(frag: CompiledFragment, x) -> DataStream:
+    x = np.asarray(x, np.float32)
+    T = x.shape[0]
+    assert T <= MAX_TS and x.shape[1] == frag.meta["D"]
+    (ba,) = _exp_biases(x)
     # the driver sizes the output exponent window from the ideal result
     mu = x.mean(-1, keepdims=True)
     va = x.var(-1, keepdims=True)
-    ideal = (x - mu) / np.sqrt(va + 1e-5) * gamma + beta
-    bo = _exp_biases(ideal)[0]
-    cmds: List[Command] = []
-    cmds += _write_weight_cmds(gamma[None, :])
-    cmds += _write_bias_cmds(beta)
-    cmds += _write_matrix_cmds(BASE_IN, x)
-    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (D, D)))
-    cmds.append(Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, 0, 0)))
-    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (MODE_LAYERNORM, T)))
-    cmds.append(Command(CFG_NUMERICS, 0, (0.0, ba, bo)))
-    cmds.append(Command(FN_START))
+    ideal = (x - mu) / np.sqrt(va + 1e-5) * frag.meta["gamma"] + frag.meta["beta"]
+    (bo,) = _exp_biases(ideal)
+    tail = _tail(
+        [
+            (GB_CFG_GB_CONTROL, (MODE_LAYERNORM, T)),
+            (CFG_NUMERICS, (0.0, ba, bo)),
+            (FN_START, ()),
+        ]
+    )
+    return DataStream([_matrix_bulk(BASE_IN, x)], tail)
+
+
+def build_layernorm_fragment(x, gamma, beta):
+    x = np.asarray(x, np.float32)
+    T, D = x.shape
+    frag = layernorm_fragment(gamma, beta)
+    cmds = frag.full_commands(pack_layernorm_data(frag, x))
     return cmds, lambda st: _read_matrix(st, BASE_OUT, T, D)
 
 
-def build_attention_fragment(q, k, v):
-    q, k, v = map(np.asarray, (q, k, v))
+# -- attention ---------------------------------------------------------------
+
+
+def attention_fragment(D: int, cache: bool = True) -> CompiledFragment:
+    assert D <= MAX_IN
+    key = ("fasr_attention", D)
+
+    def build():
+        setup = _tail([(PE_CFG_RNN_LAYER_SIZING, (D, D))])
+        return CompiledFragment(flexasr, key, setup, meta={"D": D})
+
+    return FRAGMENTS.get(key, build) if cache else build()
+
+
+def pack_attention_data(frag: CompiledFragment, q, k, v) -> DataStream:
+    q, k, v = (np.asarray(t, np.float32) for t in (q, k, v))
     Tq, D = q.shape
     Tk = k.shape[0]
-    assert Tq <= MAX_TS and Tk <= MAX_TS and D <= MAX_IN
-    ba = _exp_biases(np.concatenate([q.ravel(), k.ravel(), v.ravel()]))[0]
+    assert Tq <= MAX_TS and Tk <= MAX_TS and D == frag.meta["D"]
+    (ba,) = _exp_biases(np.concatenate([q.ravel(), k.ravel(), v.ravel()]))
     s = (q @ k.T) / np.sqrt(q.shape[1])
     p = np.exp(s - s.max(-1, keepdims=True))
     p = p / p.sum(-1, keepdims=True)
-    bo = _exp_biases(p @ v)[0]
-    cmds: List[Command] = []
-    cmds += _write_matrix_cmds(BASE_IN, q)
-    cmds += _write_matrix_cmds(BASE_AUX, k)
-    cmds += _write_matrix_cmds(BASE_AUX + MAX_TS * (MAX_IN // V), v)
-    cmds.append(Command(PE_CFG_RNN_LAYER_SIZING, 0, (D, D)))
-    cmds.append(
-        Command(GB_CFG_MMNGR, 0, (BASE_IN, BASE_OUT, BASE_AUX, Tk))
+    (bo,) = _exp_biases(p @ v)
+    tail = _tail(
+        [
+            (GB_CFG_MMNGR, (BASE_IN, BASE_OUT, BASE_AUX, Tk)),
+            (GB_CFG_GB_CONTROL, (MODE_ATTENTION, Tq)),
+            (CFG_NUMERICS, (0.0, ba, bo)),
+            (FN_START, ()),
+        ]
     )
-    cmds.append(Command(GB_CFG_GB_CONTROL, 0, (MODE_ATTENTION, Tq)))
-    cmds.append(Command(CFG_NUMERICS, 0, (0.0, ba, bo)))
-    cmds.append(Command(FN_START))
+    return DataStream(
+        [
+            _matrix_bulk(BASE_IN, q),
+            _matrix_bulk(BASE_AUX, k),
+            _matrix_bulk(BASE_AUX + MAX_TS * (MAX_IN // V), v),
+        ],
+        tail,
+    )
+
+
+def build_attention_fragment(q, k, v):
+    q = np.asarray(q, np.float32)
+    Tq, D = q.shape
+    frag = attention_fragment(D)
+    cmds = frag.full_commands(pack_attention_data(frag, q, k, v))
     return cmds, lambda st: _read_matrix(st, BASE_OUT, Tq, D)
 
 

@@ -29,7 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.ila import ILA, Command, IRAccelMapping, REGISTRY
+from ..core.ila import (
+    FRAGMENTS, ILA, BulkWrite, Command, CompiledFragment, DataStream,
+    IRAccelMapping, PackedStream, REGISTRY, fingerprint,
+)
 from . import numerics
 from .numerics import FixedPointSpec
 
@@ -138,20 +141,83 @@ def _conv_start(st, addr, data):
 
 
 # ---------------------------------------------------------------------------
-# Driver-side fragment builder
+# Driver-side fragment builder — split into a *setup* stream (weight SRAM +
+# geometry/datatype config, cached per parameter set) and a *data* stream
+# (activation SRAM + CONV_START, re-packed per sample).
 # ---------------------------------------------------------------------------
+
+FOH, FOW = MAX_H - MAX_KH + 1, MAX_W - MAX_KW + 1
+
+
+def _words_rows(vec: np.ndarray) -> np.ndarray:
+    """Flatten a tensor into V-lane SRAM words (n_words, V), zero-padded."""
+    vec = np.asarray(vec, np.float32).reshape(-1)
+    n_words = (len(vec) + V - 1) // V
+    buf = np.zeros((n_words * V,), np.float32)
+    buf[: len(vec)] = vec
+    return buf.reshape(n_words, V)
 
 
 def _write_words(opcode: int, vec: np.ndarray) -> List[Command]:
-    vec = np.asarray(vec, np.float32).reshape(-1)
-    n_words = (len(vec) + V - 1) // V
-    cmds = []
-    for i in range(n_words):
-        seg = np.zeros((V,), np.float32)
-        chunk = vec[i * V : (i + 1) * V]
-        seg[: len(chunk)] = chunk
-        cmds.append(Command(opcode, i, tuple(seg)))
-    return cmds
+    rows = _words_rows(vec)
+    return [Command(opcode, i, tuple(rows[i])) for i in range(rows.shape[0])]
+
+
+def read_full(st) -> jnp.ndarray:
+    """Fixed-shape output read (vmap-safe): the full stride-1 conv output;
+    callers apply the per-sample stride/geometry slicing host-side."""
+    return st["out_mem"].reshape(-1)[: FOH * FOW * MAX_K].reshape(1, FOH, FOW, MAX_K)
+
+
+def conv2d_fragment(
+    w, in_shape, strides=(1, 1), wgt_bits: int = 8, cache: bool = True
+) -> CompiledFragment:
+    """Setup half: weights resident in wgt SRAM, conv geometry + weight
+    datatype configured. ``in_shape`` is the (post-padding) (h, w, c) input
+    geometry — part of the device configuration, hence of the cache key."""
+    w = np.asarray(w, np.float32)
+    h, wd, c = in_shape
+    kh, kw, ci, k = w.shape
+    assert h <= MAX_H and wd <= MAX_W and c <= MAX_C and k <= MAX_K
+    assert kh <= MAX_KH and kw <= MAX_KW
+    sh, sw = strides
+    key = ("hlscnn_conv2d", (h, wd, c), (sh, sw), int(wgt_bits), fingerprint(w))
+
+    def build():
+        wp = np.zeros((MAX_KH, MAX_KW, MAX_C, MAX_K), np.float32)
+        wp[:kh, :kw, :c, :k] = w
+        cmds = _write_words(WR_WGT, wp)
+        cmds.append(Command(CFG_CONV, 0, (h, wd, c, k, kh, kw, sh, sw)))
+        cmds.append(Command(CFG_DTYPE, 0, (float(wgt_bits),)))
+        setup = PackedStream.from_commands(cmds, V)
+        oh, ow = (h - kh) // sh + 1, (wd - kw) // sw + 1
+        meta = {"h": h, "wd": wd, "c": c, "k": k, "oh": oh, "ow": ow, "sh": sh, "sw": sw}
+        return CompiledFragment(hlscnn, key, setup, meta=meta)
+
+    return FRAGMENTS.get(key, build) if cache else build()
+
+
+def pack_conv2d_data(frag: CompiledFragment, x) -> DataStream:
+    """Data half: one padded sample into act SRAM + trigger."""
+    x = np.asarray(x, np.float32)
+    m = frag.meta
+    assert x.shape == (1, m["h"], m["wd"], m["c"])
+    xp = np.zeros((1, MAX_H, MAX_W, MAX_C), np.float32)
+    xp[:, : m["h"], : m["wd"], : m["c"]] = x
+    bulk = BulkWrite("act_mem", 0, _words_rows(xp), WR_ACT)
+    tail = PackedStream.single(CONV_START, 0, (), V)
+    return DataStream([bulk], tail)
+
+
+def out_slice(frag: CompiledFragment):
+    """The valid-output window of read_full for this fragment's geometry."""
+    m = frag.meta
+    return (
+        slice(None),
+        slice(0, m["oh"] * m["sh"], m["sh"]),
+        slice(0, m["ow"] * m["sw"], m["sw"]),
+        slice(0, m["k"]),
+    )
 
 
 def build_conv2d_fragment(x, w, strides=(1, 1), padding=(0, 0), wgt_bits: int = 8):
@@ -161,26 +227,13 @@ def build_conv2d_fragment(x, w, strides=(1, 1), padding=(0, 0), wgt_bits: int = 
     if padding != (0, 0):
         x = np.pad(x, ((0, 0), (padding[0], padding[0]), (padding[1], padding[1]), (0, 0)))
     n, h, wd, c = x.shape
-    kh, kw, ci, k = w.shape
-    assert n == 1 and h <= MAX_H and wd <= MAX_W and c <= MAX_C and k <= MAX_K
-    assert kh <= MAX_KH and kw <= MAX_KW
-    xp = np.zeros((1, MAX_H, MAX_W, MAX_C), np.float32)
-    xp[:, :h, :wd, :c] = x
-    wp = np.zeros((MAX_KH, MAX_KW, MAX_C, MAX_K), np.float32)
-    wp[:kh, :kw, :c, :k] = w
-    sh, sw = strides
-    cmds: List[Command] = []
-    cmds += _write_words(WR_ACT, xp)
-    cmds += _write_words(WR_WGT, wp)
-    cmds.append(Command(CFG_CONV, 0, (h, wd, c, k, kh, kw, sh, sw)))
-    cmds.append(Command(CFG_DTYPE, 0, (float(wgt_bits),)))
-    cmds.append(Command(CONV_START))
-    oh, ow = (h - kh) // sh + 1, (wd - kw) // sw + 1
-    foh, fow = MAX_H - MAX_KH + 1, MAX_W - MAX_KW + 1
+    assert n == 1
+    frag = conv2d_fragment(w, (h, wd, c), strides, wgt_bits)
+    cmds = frag.full_commands(pack_conv2d_data(frag, x))
+    sl = out_slice(frag)
 
     def read_out(st):
-        y = st["out_mem"].reshape(-1)[: foh * fow * MAX_K].reshape(1, foh, fow, MAX_K)
-        return y[:, : oh * sh : sh, : ow * sw : sw, :k]
+        return read_full(st)[sl]
 
     return cmds, read_out
 

@@ -26,7 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.ila import ILA, Command, IRAccelMapping, REGISTRY
+from ..core.ila import (
+    FRAGMENTS, ILA, BulkWrite, Command, CompiledFragment, DataStream,
+    IRAccelMapping, PackedStream, REGISTRY, fingerprint,
+)
 from . import numerics
 
 T = 16               # tile side (the 16x16 GEMM core)
@@ -138,7 +141,18 @@ def _store(st, addr, data):
 
 
 # ---------------------------------------------------------------------------
-# Driver-side fragment builders — "operators are sequences of instructions"
+# Driver-side fragment builders — "operators are sequences of instructions".
+#
+# Split for the fragment-compiler fast path: the *setup* stream stages the
+# stationary operand (weight tiles -> wgt SRAM) and zeroes the accumulators;
+# the *data* stream DMAs the moving operand, issues the GEMM/ALU micro-ops,
+# and stores results. DRAM scratch layout is fixed per fragment so data
+# streams for every invocation hit the same addresses:
+#
+#   [0, nt*kt)                 weight tiles          (setup)
+#   nt*kt                      always-zero tile      (setup; acc preload)
+#   (nt*kt+1, +mt*kt)          input tiles           (data, bulk write)
+#   (nt*kt+1+mt*kt, +mt*nt)    output tiles          (data, STORE)
 # ---------------------------------------------------------------------------
 
 
@@ -156,122 +170,190 @@ def _write_dram_tile(cmds, tile_idx: int, tile: np.ndarray):
         cmds.append(Command(WR_DRAM, tile_idx * T + r, tuple(tile[r])))
 
 
+def _tile_rows(tiles: np.ndarray) -> np.ndarray:
+    """(n, T, T) tile stack -> (n*T, T) contiguous DRAM rows."""
+    return np.ascontiguousarray(tiles).reshape(-1, T)
+
+
+def _cmd_stream(entries) -> PackedStream:
+    """[(opcode, values), ...] -> PackedStream (addr unused by these ops)."""
+    n = len(entries)
+    ops = np.array([e[0] for e in entries], np.int32)
+    addrs = np.zeros((n,), np.int32)
+    data = np.zeros((n, T), np.float32)
+    for i, (_, vals) in enumerate(entries):
+        vals = np.asarray(vals, np.float32)
+        data[i, : len(vals)] = vals
+    return PackedStream(ops, addrs, data)
+
+
+def gemm_fragment(b_int8: np.ndarray, mt: int, cache: bool = True) -> CompiledFragment:
+    """Setup half of the GEMM mapping: weight tiles resident in wgt SRAM and
+    ``mt * nt`` accumulators zeroed, for data chunks of up to ``mt`` row
+    tiles. Cached per (weight chunk, layout)."""
+    b_t, nt, kt = _tiles(np.asarray(b_int8, np.float32))
+    assert mt * kt <= N_INP and nt * kt <= N_WGT and mt * nt <= N_ACC
+    inp_base = nt * kt + 1
+    out_base = inp_base + mt * kt
+    assert (out_base + mt * nt) <= DRAM_TILES
+    key = ("vta_gemm", mt, nt, kt, fingerprint(b_int8))
+
+    def build():
+        cmds: List[Command] = []
+        for n in range(nt):
+            for k in range(kt):
+                _write_dram_tile(cmds, n * kt + k, b_t[n, k])
+                cmds.append(Command(LOAD_WGT, 0, (n * kt + k, n * kt + k)))
+        # zero accumulators: preload every acc tile from an always-zero tile
+        zero_tile = nt * kt
+        _write_dram_tile(cmds, zero_tile, np.zeros((T, T), np.float32))
+        for m in range(mt):
+            for n in range(nt):
+                cmds.append(Command(LOAD_ACC, 0, (m * nt + n, zero_tile)))
+        setup = PackedStream.from_commands(cmds, T)
+        meta = {
+            "mt": mt, "nt": nt, "kt": kt, "inp_base": inp_base,
+            "out_base": out_base, "N": int(np.asarray(b_int8).shape[0]),
+        }
+        return CompiledFragment(vta, key, setup, meta=meta)
+
+    return FRAGMENTS.get(key, build) if cache else build()
+
+
+def pack_gemm_data(frag: CompiledFragment, a_int8: np.ndarray, requant_shift: int = 0) -> DataStream:
+    """Data half: input tiles + GEMM/requant/STORE micro-ops for one chunk
+    of up to ``mt`` row tiles."""
+    m = frag.meta
+    a_t, mt_c, kt = _tiles(np.asarray(a_int8, np.float32))
+    assert kt == m["kt"] and mt_c <= m["mt"]
+    nt, inp_base, out_base = m["nt"], m["inp_base"], m["out_base"]
+    bulk = BulkWrite(
+        "dram", inp_base * T, _tile_rows(a_t.reshape(mt_c * kt, T, T)), WR_DRAM
+    )
+    entries = []
+    for i in range(mt_c):
+        for k in range(kt):
+            entries.append((LOAD_INP, (i * kt + k, inp_base + i * kt + k)))
+    for mi in range(mt_c):
+        for n in range(nt):
+            for k in range(kt):
+                entries.append((GEMM, (mi * nt + n, mi * kt + k, n * kt + k)))
+    if requant_shift > 0:
+        for mi in range(mt_c):
+            for n in range(nt):
+                entries.append((ALU, (ALU_SHR, mi * nt + n, 0, 1.0, float(requant_shift))))
+    narrow = 1.0 if requant_shift > 0 else 0.0
+    for mi in range(mt_c):
+        for n in range(nt):
+            entries.append((STORE, (mi * nt + n, out_base + mi * nt + n, narrow)))
+    return DataStream([bulk], _cmd_stream(entries))
+
+
+def read_gemm_full(frag: CompiledFragment):
+    """Vmap-safe fixed-shape read of the whole output region: (mt*T, nt*T);
+    callers slice the valid [:M, :N] window."""
+    m = frag.meta
+    mt, nt, out_base = m["mt"], m["nt"], m["out_base"]
+
+    def read(st):
+        region = st["dram"][out_base * T : (out_base + mt * nt) * T]
+        return region.reshape(mt, nt, T, T).transpose(0, 2, 1, 3).reshape(mt * T, nt * T)
+
+    return read
+
+
 def build_gemm_fragment(a_int8: np.ndarray, b_int8: np.ndarray, requant_shift: int = 0):
     """dense(a, b) (int8) -> VTA instruction sequence.
 
     a:(M,K) b:(N,K); returns int32 accum (or int8 after shift/narrow if
     requant_shift > 0). Tiled over the 16x16 GEMM core.
     """
-    a_t, mt, kt = _tiles(np.asarray(a_int8, np.float32))
-    b_t, nt, kt2 = _tiles(np.asarray(b_int8, np.float32))
-    assert kt == kt2
-    assert mt * kt <= N_INP and nt * kt <= N_WGT and mt * nt <= N_ACC
-    cmds: List[Command] = []
-    # DMA in: inp tiles then wgt tiles
-    dram_idx = 0
-    for i in range(mt):
-        for k in range(kt):
-            _write_dram_tile(cmds, dram_idx, a_t[i, k])
-            cmds.append(Command(LOAD_INP, 0, (i * kt + k, dram_idx)))
-            dram_idx += 1
-    for n in range(nt):
-        for k in range(kt):
-            _write_dram_tile(cmds, dram_idx, b_t[n, k])
-            cmds.append(Command(LOAD_WGT, 0, (n * kt + k, dram_idx)))
-            dram_idx += 1
-    # zero accumulators via imm min/max trick: load from an always-zero tile
-    zero_tile = dram_idx
-    _write_dram_tile(cmds, zero_tile, np.zeros((T, T), np.float32))
-    dram_idx += 1
-    for m in range(mt):
-        for n in range(nt):
-            cmds.append(Command(LOAD_ACC, 0, (m * nt + n, zero_tile)))
-    # GEMM micro-ops
-    for m in range(mt):
-        for n in range(nt):
-            for k in range(kt):
-                cmds.append(Command(GEMM, 0, (m * nt + n, m * kt + k, n * kt + k)))
-    if requant_shift > 0:
-        for m in range(mt):
-            for n in range(nt):
-                cmds.append(Command(ALU, 0, (ALU_SHR, m * nt + n, 0, 1.0, float(requant_shift))))
-    out_base = dram_idx
-    narrow = 1.0 if requant_shift > 0 else 0.0
-    for m in range(mt):
-        for n in range(nt):
-            cmds.append(Command(STORE, 0, (m * nt + n, out_base + m * nt + n, narrow)))
-    M, K = np.asarray(a_int8).shape
-    N = np.asarray(b_int8).shape[0]
+    a = np.asarray(a_int8)
+    mt = (a.shape[0] + T - 1) // T
+    frag = gemm_fragment(b_int8, mt)
+    cmds = frag.full_commands(pack_gemm_data(frag, a_int8, requant_shift))
+    M, N = a.shape[0], np.asarray(b_int8).shape[0]
+    read = read_gemm_full(frag)
 
     def read_out(st):
-        tiles = []
-        for m in range(mt):
-            row = []
-            for n in range(nt):
-                row.append(st["dram"][(out_base + m * nt + n) * T : (out_base + m * nt + n + 1) * T])
-            tiles.append(jnp.concatenate(row, axis=1))
-        full = jnp.concatenate(tiles, axis=0)
-        return full[:M, :N]
+        return read(st)[:M, :N]
+
+    return cmds, read_out
+
+
+def alu_fragment(rt: int, ct: int, kind: str, cache: bool = True) -> CompiledFragment:
+    """Vector-ALU ops have no stationary operand: the setup stream is empty
+    and the whole invocation is a data stream. Cached per tile layout only
+    (the fragment then exists to batch same-layout invocations).
+
+    DRAM layout (``n = rt * ct`` tiles): a tiles [0, n), b tiles [n, 2n)
+    (add only), outputs after the operand region.
+    """
+    n = rt * ct
+    assert kind in ("add", "relu")
+    n_ops = 2 * n if kind == "add" else n
+    assert n_ops <= N_ACC and (n_ops + n) <= DRAM_TILES
+    key = ("vta_alu", kind, rt, ct)
+
+    def build():
+        meta = {"rt": rt, "ct": ct, "kind": kind, "out_base": n_ops}
+        return CompiledFragment(vta, key, PackedStream.empty(T), meta=meta)
+
+    return FRAGMENTS.get(key, build) if cache else build()
+
+
+def pack_alu_data(frag: CompiledFragment, a_int: np.ndarray, b_int=None) -> DataStream:
+    m = frag.meta
+    rt, ct, kind, out_base = m["rt"], m["ct"], m["kind"], m["out_base"]
+    n = rt * ct
+    a_t, rt2, ct2 = _tiles(np.asarray(a_int, np.float32))
+    assert (rt2, ct2) == (rt, ct)
+    bulk = [BulkWrite("dram", 0, _tile_rows(a_t.reshape(n, T, T)), WR_DRAM)]
+    entries = [(LOAD_ACC, (i, i)) for i in range(n)]
+    if kind == "add":
+        b_t, _, _ = _tiles(np.asarray(b_int, np.float32))
+        bulk.append(BulkWrite("dram", n * T, _tile_rows(b_t.reshape(n, T, T)), WR_DRAM))
+        entries += [(LOAD_ACC, (n + i, n + i)) for i in range(n)]
+        entries += [(ALU, (ALU_ADD, i, n + i, 0.0, 0.0)) for i in range(n)]
+    else:
+        entries += [(ALU, (ALU_MAX, i, 0, 1.0, 0.0)) for i in range(n)]
+    entries += [(STORE, (i, out_base + i)) for i in range(n)]
+    return DataStream(bulk, _cmd_stream(entries))
+
+
+def read_alu_full(frag: CompiledFragment):
+    """Vmap-safe read of the whole (rt*T, ct*T) output; slice [:R, :C]."""
+    m = frag.meta
+    rt, ct, out_base = m["rt"], m["ct"], m["out_base"]
+
+    def read(st):
+        region = st["dram"][out_base * T : (out_base + rt * ct) * T]
+        return region.reshape(rt, ct, T, T).transpose(0, 2, 1, 3).reshape(rt * T, ct * T)
+
+    return read
+
+
+def _build_alu_fragment(kind, a_int, b_int=None):
+    a = np.asarray(a_int)
+    rt, ct = (a.shape[0] + T - 1) // T, (a.shape[1] + T - 1) // T
+    frag = alu_fragment(rt, ct, kind)
+    cmds = frag.full_commands(pack_alu_data(frag, a_int, b_int))
+    R, C = a.shape
+    read = read_alu_full(frag)
+
+    def read_out(st):
+        return read(st)[:R, :C]
 
     return cmds, read_out
 
 
 def build_add_fragment(a_int: np.ndarray, b_int: np.ndarray):
     """elementwise add on the vector ALU (acc RF resident)."""
-    a_t, rt, ct = _tiles(np.asarray(a_int, np.float32))
-    b_t, _, _ = _tiles(np.asarray(b_int, np.float32))
-    assert 2 * rt * ct <= N_ACC
-    cmds: List[Command] = []
-    dram_idx = 0
-    for r in range(rt):
-        for c in range(ct):
-            _write_dram_tile(cmds, dram_idx, a_t[r, c])
-            cmds.append(Command(LOAD_ACC, 0, (r * ct + c, dram_idx)))
-            dram_idx += 1
-            _write_dram_tile(cmds, dram_idx, b_t[r, c])
-            cmds.append(Command(LOAD_ACC, 0, (rt * ct + r * ct + c, dram_idx)))
-            dram_idx += 1
-    for i in range(rt * ct):
-        cmds.append(Command(ALU, 0, (ALU_ADD, i, rt * ct + i, 0.0, 0.0)))
-    out_base = dram_idx
-    for i in range(rt * ct):
-        cmds.append(Command(STORE, 0, (i, out_base + i)))
-    R, C = np.asarray(a_int).shape
-
-    def read_out(st):
-        tiles = []
-        for r in range(rt):
-            row = [st["dram"][(out_base + r * ct + c) * T : (out_base + r * ct + c + 1) * T] for c in range(ct)]
-            tiles.append(jnp.concatenate(row, axis=1))
-        return jnp.concatenate(tiles, axis=0)[:R, :C]
-
-    return cmds, read_out
+    return _build_alu_fragment("add", a_int, b_int)
 
 
 def build_relu_fragment(a_int: np.ndarray):
-    a_t, rt, ct = _tiles(np.asarray(a_int, np.float32))
-    cmds: List[Command] = []
-    dram_idx = 0
-    for r in range(rt):
-        for c in range(ct):
-            _write_dram_tile(cmds, dram_idx, a_t[r, c])
-            cmds.append(Command(LOAD_ACC, 0, (r * ct + c, dram_idx)))
-            dram_idx += 1
-    for i in range(rt * ct):
-        cmds.append(Command(ALU, 0, (ALU_MAX, i, 0, 1.0, 0.0)))
-    out_base = dram_idx
-    for i in range(rt * ct):
-        cmds.append(Command(STORE, 0, (i, out_base + i)))
-    R, C = np.asarray(a_int).shape
-
-    def read_out(st):
-        tiles = []
-        for r in range(rt):
-            row = [st["dram"][(out_base + r * ct + c) * T : (out_base + r * ct + c + 1) * T] for c in range(ct)]
-            tiles.append(jnp.concatenate(row, axis=1))
-        return jnp.concatenate(tiles, axis=0)[:R, :C]
-
-    return cmds, read_out
+    return _build_alu_fragment("relu", a_int)
 
 
 REGISTRY.register(IRAccelMapping("vta-gemm", "vta", "vta_gemm", build_gemm_fragment,

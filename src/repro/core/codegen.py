@@ -16,6 +16,23 @@ The driver layer tiles tensors that exceed device SRAM (row-chunking for
 FlexASR, 16x16 tiling for VTA is inside its fragment builder) — the same
 job a real device driver does.
 
+Execution engine
+----------------
+
+``engine="compiled"`` (default) routes every accelerator invocation through
+the fragment-compiler fast path of :mod:`..core.ila`: each op is *planned*
+into simulation jobs (CompiledFragment + per-sample DataStream + output
+window), jobs sharing a fragment and stream signature are batched through
+one ``vmap``-ed simulator call, and fragment setup (weight load) is
+simulated once per parameter set and cached. The batch/head/tile loops that
+previously ran fragments one at a time — LSTM batch, attention heads,
+conv2d batch, VTA/pool row tiles — all flow through this path, as does
+minibatched evaluation via :meth:`Executor.run_many`.
+
+``engine="jit"`` re-derives and scans the full command stream per invocation
+(the pre-fragment-compiler behavior); ``engine="eager"`` interprets commands
+one by one. Both exist as bit-exact references for the compiled path.
+
 Per-invocation statistics (op, rel-error vs ideal, value ranges) are
 collected — the "handy debugging information" the paper's authors gave the
 accelerator developers to diagnose the HLSCNN weight-quantization bug.
@@ -23,12 +40,14 @@ accelerator developers to diagnose the HLSCNN weight-quantization bug.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import ir
+from .ila import CompiledFragment, DataStream
 from ..accel import flexasr as fa
 from ..accel import hlscnn as hc
 from ..accel import vta as vt
@@ -46,6 +65,17 @@ class InvocationStat:
     n_commands: int
 
 
+@dataclasses.dataclass
+class SimJob:
+    """One fragment invocation: a data stream to run against a compiled
+    fragment, a vmap-safe full-region read, and the valid output window."""
+
+    frag: CompiledFragment
+    data: DataStream
+    read: Callable
+    window: Tuple
+
+
 class Executor:
     """Executes an extracted IR program, offloading accelerator intrinsics."""
 
@@ -55,16 +85,15 @@ class Executor:
         hlscnn_wgt_bits: int = 8,
         collect_stats: bool = True,
         jit_sim: bool = True,
+        engine: Optional[str] = None,
     ):
         assert mode in ("ila", "kernel", "ideal")
         self.mode = mode
         self.hlscnn_wgt_bits = hlscnn_wgt_bits
         self.collect_stats = collect_stats
-        self.jit_sim = jit_sim
+        self.engine = engine or ("compiled" if jit_sim else "eager")
+        assert self.engine in ("compiled", "jit", "eager")
         self.stats: List[InvocationStat] = []
-
-    def _sim(self, ila, cmds):
-        return ila.simulate_jit(cmds) if self.jit_sim else ila.simulate(cmds)
 
     # ------------------------------------------------------------------
     def run(self, e: ir.Expr, env: Dict[str, Any]):
@@ -78,6 +107,45 @@ class Executor:
                 v = self._exec_accel(x, args)
             else:
                 v = ir._eval(x, rec, env)
+            memo[x] = v
+            return v
+
+        return rec(e)
+
+    def run_many(self, e: ir.Expr, envs: Sequence[Dict[str, Any]]):
+        """Evaluate the program once per environment, batching accelerator
+        invocations *across samples*: all B samples' jobs for one IR node
+        run through one vmapped simulator call (sharing the node's cached
+        fragment), while host glue ops evaluate per sample. Per-sample
+        numerics (chunking, AF exponent windows) are identical to B calls
+        of :meth:`run`."""
+        B = len(envs)
+        memo: Dict[ir.Expr, List[Any]] = {}
+
+        def rec(x: ir.Expr) -> List[Any]:
+            if x in memo:
+                return memo[x]
+            if isinstance(x, ir.Call) and x.op in ir.ACCEL_OPS:
+                args_b = [rec(a) for a in x.args]
+                sample_args = [
+                    [np.asarray(args_b[k][s]) for k in range(len(args_b))]
+                    for s in range(B)
+                ]
+                if self.mode == "ila" and self.engine == "compiled" and x.op in self._PLANNERS:
+                    plans, jobs = [], []
+                    for s in range(B):
+                        s_jobs, assemble = self._plan(x, sample_args[s])
+                        plans.append((len(jobs), len(s_jobs), assemble))
+                        jobs += s_jobs
+                    outs = self._execute_jobs(jobs)
+                    v = [asm(outs[o : o + n]) for (o, n, asm) in plans]
+                else:
+                    v = [self._exec_accel(x, sample_args[s]) for s in range(B)]
+            else:
+                v = [
+                    ir._eval(x, (lambda a, s=s: rec(a)[s]), envs[s])
+                    for s in range(B)
+                ]
             memo[x] = v
             return v
 
@@ -101,169 +169,268 @@ class Executor:
             return self._ideal(x, args)
         if op in ("fasr_store", "fasr_load"):
             return args[0]
-        fn = {
-            "fasr_linear": self._fasr_linear,
-            "fasr_lstm": self._fasr_lstm,
-            "fasr_maxpool": lambda x_, a: self._fasr_pool(x_, a, "max"),
-            "fasr_meanpool": lambda x_, a: self._fasr_pool(x_, a, "mean"),
-            "fasr_layernorm": self._fasr_layernorm,
-            "fasr_attention": self._fasr_attention,
-            "hlscnn_conv2d": self._hlscnn_conv2d,
-            "vta_gemm": self._vta_gemm,
-            "vta_add": self._vta_add,
-            "vta_relu": self._vta_relu,
-        }[op]
-        return fn(x, args)
+        if self.mode == "kernel" and op == "fasr_linear":
+            return self._fasr_linear_kernel(x, args)
+        if self.mode == "kernel" and op == "vta_gemm":
+            return self._vta_gemm_kernel(x, args)
+        jobs, assemble = self._plan(x, args)
+        return assemble(self._execute_jobs(jobs))
 
     def _ideal(self, x: ir.Call, args):
         vs = [ir.Var(f"_{i}", np.shape(a)) for i, a in enumerate(args)]
         env = {f"_{i}": a for i, a in enumerate(args)}
         return ir.interpret(ir.Call(x.op, tuple(vs), x.attrs), env)
 
-    # -- FlexASR ---------------------------------------------------------
-    def _run_fasr(self, builder, *tensors, ideal, opname):
-        cmds, rd = builder(*tensors)
-        st = self._sim(fa.flexasr, cmds)
-        out = np.asarray(rd(st))
-        self._record(opname, "flexasr", out, ideal, len(cmds))
-        return out
+    # -- job execution ---------------------------------------------------
+    def _execute_jobs(self, jobs: List[SimJob]) -> List[np.ndarray]:
+        """Run simulation jobs, batching those that share a fragment and a
+        data-stream signature through one vmapped simulator call."""
+        results: List[Optional[np.ndarray]] = [None] * len(jobs)
+        if self.engine != "compiled":
+            for i, j in enumerate(jobs):
+                cmds = j.frag.full_commands(j.data)
+                ila = j.frag.ila
+                st = ila.simulate_jit(cmds) if self.engine == "jit" else ila.simulate(cmds)
+                results[i] = np.asarray(j.read(st))[j.window]
+            return results
+        groups: Dict[Tuple, List[int]] = {}
+        for i, j in enumerate(jobs):
+            groups.setdefault((id(j.frag), j.data.sig()), []).append(i)
+        for idxs in groups.values():
+            frag = jobs[idxs[0]].frag
+            read = jobs[idxs[0]].read
+            if len(idxs) == 1:
+                j = jobs[idxs[0]]
+                results[idxs[0]] = np.asarray(read(frag.run(j.data)))[j.window]
+            else:
+                sts = frag.run_batch([jobs[i].data for i in idxs])
+                fulls = np.asarray(jax.vmap(read)(sts))
+                for bi, i in enumerate(idxs):
+                    results[i] = fulls[bi][jobs[i].window]
+        return results
+
+    def _plan(self, x: ir.Call, args) -> Tuple[List[SimJob], Callable]:
+        return self._PLANNERS[x.op](self, x, args)
 
     def _chunk_rows(self, x, max_rows):
         return [x[i : i + max_rows] for i in range(0, x.shape[0], max_rows)]
 
-    def _fasr_linear(self, x: ir.Call, args):
+    def _ncmds(self, jobs: List[SimJob]) -> int:
+        return sum(len(j.frag.setup) + len(j.data) for j in jobs)
+
+    # -- FlexASR ---------------------------------------------------------
+    def _fasr_linear_kernel(self, x: ir.Call, args):
         a, w, b = args
         orig_shape = a.shape
         a2 = a.reshape(-1, a.shape[-1])
         ideal_full = a2 @ w.T + b
-        if self.mode == "kernel":
-            out = np.asarray(kops.af_linear(jnp.asarray(a2), jnp.asarray(w), jnp.asarray(b)))
-            self._record("fasr_linear", "flexasr-kernel", out, ideal_full, 0)
-        else:
-            outs = []
-            for chunk in self._chunk_rows(a2, fa.MAX_TS):
-                cmds, rd = fa.build_linear_fragment(chunk, w, b)
-                st = self._sim(fa.flexasr, cmds)
-                outs.append(np.asarray(rd(st)))
-            out = np.concatenate(outs, axis=0)
-            self._record("fasr_linear", "flexasr", out, ideal_full, 0)
+        out = np.asarray(kops.af_linear(jnp.asarray(a2), jnp.asarray(w), jnp.asarray(b)))
+        self._record("fasr_linear", "flexasr-kernel", out, ideal_full, 0)
         return out.reshape(orig_shape[:-1] + (w.shape[0],))
 
-    def _fasr_lstm(self, x: ir.Call, args):
+    def _plan_fasr_linear(self, x: ir.Call, args):
+        a, w, b = args
+        orig_shape = a.shape
+        a2 = a.reshape(-1, a.shape[-1])
+        O = w.shape[0]
+        ideal_full = a2 @ w.T + b
+        frag = fa.linear_fragment(w, b)
+        jobs = [
+            SimJob(frag, fa.pack_linear_data(frag, chunk), fa.read_full,
+                   (slice(0, chunk.shape[0]), slice(0, O)))
+            for chunk in self._chunk_rows(a2, fa.MAX_TS)
+        ]
+
+        def assemble(outs):
+            out = np.concatenate(outs, axis=0)
+            self._record("fasr_linear", "flexasr", out, ideal_full, self._ncmds(jobs))
+            return out.reshape(orig_shape[:-1] + (O,))
+
+        return jobs, assemble
+
+    def _plan_fasr_lstm(self, x: ir.Call, args):
         xs, wi, wh, b = args
         T, B, I = xs.shape
-        ideal = np.asarray(ir._lstm(jnp.asarray(xs), jnp.asarray(wi), jnp.asarray(wh), jnp.asarray(b)))
-        outs = []
-        for bi in range(B):
-            cmds, rd = fa.build_lstm_fragment(xs[:, bi], wi, wh, b)
-            st = self._sim(fa.flexasr, cmds)
-            outs.append(np.asarray(rd(st)))
-        out = np.stack(outs, axis=1)
-        self._record("fasr_lstm", "flexasr", out, ideal, 0)
-        return out
+        H = wh.shape[1]
+        ideal = np.asarray(
+            ir._lstm(jnp.asarray(xs), jnp.asarray(wi), jnp.asarray(wh), jnp.asarray(b))
+        )
+        frag = fa.lstm_fragment(wi, wh, b)
+        jobs = [
+            SimJob(frag, fa.pack_lstm_data(frag, xs[:, bi]), fa.read_full,
+                   (slice(0, T), slice(0, H)))
+            for bi in range(B)
+        ]
 
-    def _fasr_pool(self, x: ir.Call, args, kind):
+        def assemble(outs):
+            out = np.stack(outs, axis=1)
+            self._record("fasr_lstm", "flexasr", out, ideal, self._ncmds(jobs))
+            return out
+
+        return jobs, assemble
+
+    def _plan_fasr_pool(self, x: ir.Call, args, kind):
         (a,) = args
         T = a.shape[0]
         pairs = a[: T - T % 2].reshape(T // 2, 2, *a.shape[1:])
         ideal = pairs.max(1) if kind == "max" else pairs.mean(1)
-        outs = []
+        jobs, layout = [], []
         for chunk in self._chunk_rows(a, fa.MAX_TS):
             # pooling is elementwise across features: chunk wide matrices
             # column-wise to fit the device's MAX_IN lanes
-            col_outs = []
+            cols = []
             for c0 in range(0, chunk.shape[1], fa.MAX_IN):
-                cmds, rd = fa.build_pool_fragment(chunk[:, c0 : c0 + fa.MAX_IN], kind)
-                st = self._sim(fa.flexasr, cmds)
-                col_outs.append(np.asarray(rd(st)))
-            outs.append(np.concatenate(col_outs, axis=1))
-        out = np.concatenate(outs, axis=0)
-        self._record(f"fasr_{kind}pool", "flexasr", out, ideal, 0)
-        return out
+                piece = chunk[:, c0 : c0 + fa.MAX_IN]
+                frag = fa.pool_fragment(piece.shape[1], kind)
+                jobs.append(
+                    SimJob(frag, fa.pack_pool_data(frag, piece), fa.read_full,
+                           (slice(0, piece.shape[0] // 2), slice(0, piece.shape[1])))
+                )
+                cols.append(len(jobs) - 1)
+            layout.append(cols)
 
-    def _fasr_layernorm(self, x: ir.Call, args):
+        def assemble(outs):
+            rows = [np.concatenate([outs[i] for i in cols], axis=1) for cols in layout]
+            out = np.concatenate(rows, axis=0)
+            self._record(f"fasr_{kind}pool", "flexasr", out, ideal, self._ncmds(jobs))
+            return out
+
+        return jobs, assemble
+
+    def _plan_fasr_layernorm(self, x: ir.Call, args):
         a, g, b = args
         orig = a.shape
         a2 = a.reshape(-1, a.shape[-1])
         mu = a2.mean(-1, keepdims=True)
         va = a2.var(-1, keepdims=True)
         ideal = (a2 - mu) / np.sqrt(va + 1e-5) * g + b
-        outs = []
-        for chunk in self._chunk_rows(a2, fa.MAX_TS):
-            cmds, rd = fa.build_layernorm_fragment(chunk, g, b)
-            st = self._sim(fa.flexasr, cmds)
-            outs.append(np.asarray(rd(st)))
-        out = np.concatenate(outs, axis=0).reshape(orig)
-        self._record("fasr_layernorm", "flexasr", out, ideal, 0)
-        return out
+        frag = fa.layernorm_fragment(g, b)
+        D = a2.shape[1]
+        jobs = [
+            SimJob(frag, fa.pack_layernorm_data(frag, chunk), fa.read_full,
+                   (slice(0, chunk.shape[0]), slice(0, D)))
+            for chunk in self._chunk_rows(a2, fa.MAX_TS)
+        ]
 
-    def _fasr_attention(self, x: ir.Call, args):
+        def assemble(outs):
+            out = np.concatenate(outs, axis=0).reshape(orig)
+            self._record("fasr_layernorm", "flexasr", out, ideal, self._ncmds(jobs))
+            return out
+
+        return jobs, assemble
+
+    def _plan_fasr_attention(self, x: ir.Call, args):
         q, k, v = args
         ideal = np.asarray(ir._attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)))
+        D = q.shape[-1]
+        frag = fa.attention_fragment(D)
         if q.ndim == 2:
-            cmds, rd = fa.build_attention_fragment(q, k, v)
-            out = np.asarray(rd(self._sim(fa.flexasr, cmds)))
-        else:
-            # batch of heads: one invocation per (batch) slice
-            outs = []
-            q2 = q.reshape(-1, q.shape[-2], q.shape[-1])
-            k2 = k.reshape(-1, k.shape[-2], k.shape[-1])
-            v2 = v.reshape(-1, v.shape[-2], v.shape[-1])
-            for i in range(q2.shape[0]):
-                cmds, rd = fa.build_attention_fragment(q2[i], k2[i], v2[i])
-                outs.append(np.asarray(rd(self._sim(fa.flexasr, cmds))))
+            jobs = [
+                SimJob(frag, fa.pack_attention_data(frag, q, k, v), fa.read_full,
+                       (slice(0, q.shape[0]), slice(0, v.shape[-1])))
+            ]
+
+            def assemble(outs):
+                self._record("fasr_attention", "flexasr", outs[0], ideal, self._ncmds(jobs))
+                return outs[0]
+
+            return jobs, assemble
+        # batch of heads: one invocation per (batch) slice, batched in sim
+        q2 = q.reshape(-1, q.shape[-2], q.shape[-1])
+        k2 = k.reshape(-1, k.shape[-2], k.shape[-1])
+        v2 = v.reshape(-1, v.shape[-2], v.shape[-1])
+        jobs = [
+            SimJob(frag, fa.pack_attention_data(frag, q2[i], k2[i], v2[i]), fa.read_full,
+                   (slice(0, q2.shape[1]), slice(0, v2.shape[2])))
+            for i in range(q2.shape[0])
+        ]
+
+        def assemble(outs):
             out = np.stack(outs).reshape(q.shape[:-1] + (v.shape[-1],))
-        self._record("fasr_attention", "flexasr", out, ideal, 0)
-        return out
+            self._record("fasr_attention", "flexasr", out, ideal, self._ncmds(jobs))
+            return out
+
+        return jobs, assemble
 
     # -- HLSCNN -----------------------------------------------------------
-    def _hlscnn_conv2d(self, x: ir.Call, args):
+    def _plan_hlscnn_conv2d(self, x: ir.Call, args):
         a, w = args
         strides = x.attr("strides")
         padding = x.attr("padding")
         ideal = np.asarray(ir._conv2d(jnp.asarray(a), jnp.asarray(w), strides, padding))
-        outs = []
-        for ni in range(a.shape[0]):
-            cmds, rd = hc.build_conv2d_fragment(
-                a[ni : ni + 1], w, strides, padding, wgt_bits=self.hlscnn_wgt_bits
+        if padding != (0, 0):
+            a = np.pad(
+                a, ((0, 0), (padding[0], padding[0]), (padding[1], padding[1]), (0, 0))
             )
-            st = self._sim(hc.hlscnn, cmds)
-            outs.append(np.asarray(rd(st)))
-        out = np.concatenate(outs, axis=0)
-        self._record("hlscnn_conv2d", "hlscnn", out, ideal, 0)
-        return out
+        frag = hc.conv2d_fragment(
+            w, a.shape[1:], strides, wgt_bits=self.hlscnn_wgt_bits
+        )
+        window = hc.out_slice(frag)
+        jobs = [
+            SimJob(frag, hc.pack_conv2d_data(frag, a[ni : ni + 1]), hc.read_full, window)
+            for ni in range(a.shape[0])
+        ]
+
+        def assemble(outs):
+            out = np.concatenate(outs, axis=0)
+            self._record("hlscnn_conv2d", "hlscnn", out, ideal, self._ncmds(jobs))
+            return out
+
+        return jobs, assemble
 
     # -- VTA ---------------------------------------------------------------
-    def _vta_gemm(self, x: ir.Call, args):
+    def _vta_gemm_kernel(self, x: ir.Call, args):
         a, b = args
         ideal = a @ b.T
         sa = np.abs(a).max() / 127.0 if np.abs(a).max() > 0 else 1.0
         sb = np.abs(b).max() / 127.0 if np.abs(b).max() > 0 else 1.0
         a8 = np.clip(np.round(a / sa), -127, 127)
         b8 = np.clip(np.round(b / sb), -127, 127)
-        if self.mode == "kernel":
-            out32 = np.asarray(
-                kops.int8_gemm(jnp.asarray(a8, jnp.int8), jnp.asarray(b8, jnp.int8))
-            ).astype(np.float64)
-        else:
-            # tile rows so SRAM limits hold: mt*kt <= N_INP etc.
-            kt = (a8.shape[1] + vt.T - 1) // vt.T
-            max_m = max(1, (vt.N_INP // kt)) * vt.T
-            max_n = max(1, (vt.N_WGT // kt)) * vt.T
-            outs = []
-            for mi in range(0, a8.shape[0], max_m):
-                rows = []
-                for nj in range(0, b8.shape[0], max_n):
-                    cmds, rd = vt.build_gemm_fragment(a8[mi : mi + max_m], b8[nj : nj + max_n])
-                    st = self._sim(vt.vta, cmds)
-                    rows.append(np.asarray(rd(st)))
-                outs.append(np.concatenate(rows, axis=1))
-            out32 = np.concatenate(outs, axis=0).astype(np.float64)
+        out32 = np.asarray(
+            kops.int8_gemm(jnp.asarray(a8, jnp.int8), jnp.asarray(b8, jnp.int8))
+        ).astype(np.float64)
         out = out32 * sa * sb
         self._record("vta_gemm", "vta", out, ideal, 0)
         return out.astype(np.float32)
 
-    def _vta_add(self, x: ir.Call, args):
+    def _plan_vta_gemm(self, x: ir.Call, args):
+        a, b = args
+        ideal = a @ b.T
+        sa = np.abs(a).max() / 127.0 if np.abs(a).max() > 0 else 1.0
+        sb = np.abs(b).max() / 127.0 if np.abs(b).max() > 0 else 1.0
+        a8 = np.clip(np.round(a / sa), -127, 127)
+        b8 = np.clip(np.round(b / sb), -127, 127)
+        # tile rows so SRAM limits hold: mt*kt <= N_INP etc.
+        kt = (a8.shape[1] + vt.T - 1) // vt.T
+        max_m = max(1, (vt.N_INP // kt)) * vt.T
+        max_n = max(1, (vt.N_WGT // kt)) * vt.T
+        mt_layout = (min(max_m, a8.shape[0]) + vt.T - 1) // vt.T
+        jobs, layout = [], []
+        for mi in range(0, a8.shape[0], max_m):
+            a_chunk = a8[mi : mi + max_m]
+            row = []
+            for nj in range(0, b8.shape[0], max_n):
+                b_chunk = b8[nj : nj + max_n]
+                frag = vt.gemm_fragment(b_chunk, mt_layout)
+                jobs.append(
+                    SimJob(frag, vt.pack_gemm_data(frag, a_chunk), vt.read_gemm_full(frag),
+                           (slice(0, a_chunk.shape[0]), slice(0, b_chunk.shape[0])))
+                )
+                row.append(len(jobs) - 1)
+            layout.append(row)
+
+        def assemble(outs):
+            out32 = np.concatenate(
+                [np.concatenate([outs[i] for i in row], axis=1) for row in layout],
+                axis=0,
+            ).astype(np.float64)
+            out = out32 * sa * sb
+            self._record("vta_gemm", "vta", out, ideal, self._ncmds(jobs))
+            return out.astype(np.float32)
+
+        return jobs, assemble
+
+    def _plan_vta_add(self, x: ir.Call, args):
         a, b = args
         # elementwise adds stay in the accumulator's wide fixed point; the
         # driver scales both operands onto a shared int grid
@@ -274,27 +441,57 @@ class Executor:
         b2 = bi.reshape(a2.shape)
         ct = (a2.shape[1] + vt.T - 1) // vt.T
         max_r = max(1, (vt.N_ACC // 2) // ct) * vt.T
-        outs = []
+        jobs = []
         for ri in range(0, a2.shape[0], max_r):
-            cmds, rd = vt.build_add_fragment(a2[ri : ri + max_r], b2[ri : ri + max_r])
-            st = self._sim(vt.vta, cmds)
-            outs.append(np.asarray(rd(st)))
-        out = (np.concatenate(outs, axis=0) * s).reshape(ai.shape).astype(np.float32)
-        self._record("vta_add", "vta", out, np.asarray(a) + np.asarray(b), 0)
-        return out
+            ac, bc = a2[ri : ri + max_r], b2[ri : ri + max_r]
+            rt = (ac.shape[0] + vt.T - 1) // vt.T
+            frag = vt.alu_fragment(rt, ct, "add")
+            jobs.append(
+                SimJob(frag, vt.pack_alu_data(frag, ac, bc), vt.read_alu_full(frag),
+                       (slice(0, ac.shape[0]), slice(0, ac.shape[1])))
+            )
 
-    def _vta_relu(self, x: ir.Call, args):
+        def assemble(outs):
+            out = (np.concatenate(outs, axis=0) * s).reshape(ai.shape).astype(np.float32)
+            self._record("vta_add", "vta", out, np.asarray(a) + np.asarray(b),
+                         self._ncmds(jobs))
+            return out
+
+        return jobs, assemble
+
+    def _plan_vta_relu(self, x: ir.Call, args):
         (a,) = args
         s = max(np.abs(a).max(), 1e-9) / (2 ** 20)
         ai = np.round(a / s)
         a2 = ai.reshape(-1, ai.shape[-1]) if ai.ndim > 1 else ai.reshape(1, -1)
         ct = (a2.shape[1] + vt.T - 1) // vt.T
         max_r = max(1, (vt.N_ACC // 2) // ct) * vt.T
-        outs = []
+        jobs = []
         for ri in range(0, a2.shape[0], max_r):
-            cmds, rd = vt.build_relu_fragment(a2[ri : ri + max_r])
-            st = self._sim(vt.vta, cmds)
-            outs.append(np.asarray(rd(st)))
-        out = (np.concatenate(outs, axis=0) * s).reshape(a.shape).astype(np.float32)
-        self._record("vta_relu", "vta", out, np.maximum(a, 0), 0)
-        return out
+            ac = a2[ri : ri + max_r]
+            rt = (ac.shape[0] + vt.T - 1) // vt.T
+            frag = vt.alu_fragment(rt, ct, "relu")
+            jobs.append(
+                SimJob(frag, vt.pack_alu_data(frag, ac), vt.read_alu_full(frag),
+                       (slice(0, ac.shape[0]), slice(0, ac.shape[1])))
+            )
+
+        def assemble(outs):
+            out = (np.concatenate(outs, axis=0) * s).reshape(a.shape).astype(np.float32)
+            self._record("vta_relu", "vta", out, np.maximum(a, 0), self._ncmds(jobs))
+            return out
+
+        return jobs, assemble
+
+    _PLANNERS = {
+        "fasr_linear": _plan_fasr_linear,
+        "fasr_lstm": _plan_fasr_lstm,
+        "fasr_maxpool": lambda self, x, a: self._plan_fasr_pool(x, a, "max"),
+        "fasr_meanpool": lambda self, x, a: self._plan_fasr_pool(x, a, "mean"),
+        "fasr_layernorm": _plan_fasr_layernorm,
+        "fasr_attention": _plan_fasr_attention,
+        "hlscnn_conv2d": _plan_hlscnn_conv2d,
+        "vta_gemm": _plan_vta_gemm,
+        "vta_add": _plan_vta_add,
+        "vta_relu": _plan_vta_relu,
+    }

@@ -84,6 +84,12 @@ class EGraph:
         self.shape: Dict[int, Tuple[int, ...]] = {}
         self.worklist: List[int] = []
         self.n_nodes = 0
+        # op-index: head[:2] (("op", name)) -> e-class ids known to contain a
+        # node with that operator. Entries may be stale (merged-away ids);
+        # ``_op_candidates`` resolves through union-find and re-compresses.
+        # Lets ``search`` skip e-matching classes that cannot match a
+        # pattern's root operator instead of scanning every class per rule.
+        self.op_index: Dict[Tuple, set] = {}
 
     # -- union-find ---------------------------------------------------------
     def find(self, a: int) -> int:
@@ -103,7 +109,19 @@ class EGraph:
         self.hashcons[n] = cid
         self.shape[cid] = shape
         self.n_nodes += 1
+        if n.head[0] == "op":
+            self.op_index.setdefault(n.head[:2], set()).add(cid)
         return cid
+
+    def _op_candidates(self, op: str) -> set:
+        """Root e-classes that may contain an ``op`` node (superset: stale
+        entries are canonicalized through find and compressed in place)."""
+        ids = self.op_index.get(("op", op))
+        if not ids:
+            return set()
+        roots = {self.find(c) for c in ids}
+        self.op_index[("op", op)] = roots
+        return roots
 
     def add(self, n: ENode) -> int:
         n = self.canon(n)
@@ -244,8 +262,23 @@ class EGraph:
             yield from stack
 
     def search(self, pat):
-        """All (eclass, subst) matches of ``pat`` anywhere in the graph."""
+        """All (eclass, subst) matches of ``pat`` anywhere in the graph.
+
+        Root-operator patterns consult the op-index so only candidate
+        classes are e-matched; iteration stays in ``classes`` order, so
+        match order — hence ``run_rewrites`` behavior — is unchanged.
+        """
         out = []
+        if isinstance(pat, PatNode):
+            cands = self._op_candidates(pat.op)
+            if not cands:
+                return out
+            for cid in list(self.classes.keys()):
+                if cid not in cands:
+                    continue
+                for s in self.ematch(pat, cid, {}):
+                    out.append((self.find(cid), s))
+            return out
         for cid in list(self.classes.keys()):
             for s in self.ematch(pat, cid, {}):
                 out.append((self.find(cid), s))

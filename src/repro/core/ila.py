@@ -19,11 +19,33 @@ Commands are uniform records so fragments can be stacked into arrays:
 128-bit MMIO payload of Figure 1). Wide tensors are moved one V-lane row per
 command — faithfully reproducing the granularity mismatch between IR tensors
 and accelerator interface commands that D2A is designed to bridge.
+
+Fragment-compiler fast path
+---------------------------
+
+Per-sample co-simulation is throughput-bound by three costs the paper's
+compiled-simulator approach (ILAng generates C++ rather than interpreting)
+avoids: re-deriving the command stream, host-side re-packing, and jit
+retracing per distinct stream length. This module provides:
+
+* ``PackedStream``    — a command stream as dense host arrays (no per-command
+  Python objects on the hot path);
+* a reserved ``NOP`` instruction, auto-registered on every ILA, so streams
+  pad to power-of-two **length buckets** (bounding retraces to O(log max_len)
+  per accelerator);
+* ``ILA.simulate_packed`` / ``ILA.simulate_batch`` — bucketed single-stream
+  and ``jax.vmap``-batched simulation over stacked command streams;
+* ``CompiledFragment`` — a *setup* stream (weight/config load) simulated once
+  and cached as architectural state, so steady-state invocations only pack
+  and simulate the per-sample *data* stream;
+* ``FragmentCache``   — an LRU keyed on (op, operand shapes, params
+  fingerprint) holding compiled fragments across Executor invocations.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import hashlib
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -31,6 +53,19 @@ import jax.numpy as jnp
 import numpy as np
 
 State = Dict[str, jnp.ndarray]
+
+# Reserved opcode: identity state update, used only for bucket padding. No
+# accelerator model may claim it (they all start their maps at 0x10).
+NOP_OPCODE = 0
+
+MIN_BUCKET = 16
+MAX_DATA_RUNNERS = 128
+
+
+def bucket_length(n: int, min_len: int = MIN_BUCKET) -> int:
+    """Next power-of-two >= max(n, min_len): the padded stream length."""
+    n = max(int(n), min_len)
+    return 1 << (n - 1).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +78,131 @@ class Command:
         d = np.zeros((vwidth,), np.float32)
         d[: len(self.data)] = self.data
         return np.int32(self.opcode), np.int32(self.addr), d
+
+
+@dataclasses.dataclass
+class PackedStream:
+    """A command stream as dense host arrays: ops (L,), addrs (L,),
+    data (L, V). The hot-path representation — builders that pack tensors
+    vectorize straight into these instead of materializing Command lists."""
+
+    ops: np.ndarray
+    addrs: np.ndarray
+    data: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.ops.shape[0])
+
+    @property
+    def vwidth(self) -> int:
+        return int(self.data.shape[1])
+
+    @staticmethod
+    def empty(vwidth: int) -> "PackedStream":
+        return PackedStream(
+            np.zeros((0,), np.int32), np.zeros((0,), np.int32),
+            np.zeros((0, vwidth), np.float32),
+        )
+
+    @staticmethod
+    def from_commands(cmds: Sequence[Command], vwidth: int) -> "PackedStream":
+        ops = np.array([c.opcode for c in cmds], np.int32)
+        addrs = np.array([c.addr for c in cmds], np.int32)
+        data = np.zeros((len(cmds), vwidth), np.float32)
+        for i, c in enumerate(cmds):
+            data[i, : len(c.data)] = c.data
+        return PackedStream(ops, addrs, data)
+
+    @staticmethod
+    def single(opcode: int, addr: int, values: Sequence[float], vwidth: int) -> "PackedStream":
+        d = np.zeros((1, vwidth), np.float32)
+        vals = np.asarray(values, np.float32)
+        d[0, : len(vals)] = vals
+        return PackedStream(np.array([opcode], np.int32), np.array([addr], np.int32), d)
+
+    @staticmethod
+    def concat(streams: Sequence["PackedStream"]) -> "PackedStream":
+        streams = [s for s in streams if len(s)]
+        if not streams:
+            raise ValueError("concat of empty stream list")
+        return PackedStream(
+            np.concatenate([s.ops for s in streams]),
+            np.concatenate([s.addrs for s in streams]),
+            np.concatenate([s.data for s in streams], axis=0),
+        )
+
+    def to_commands(self) -> List[Command]:
+        """Inverse of from_commands (compat path; not for the hot loop)."""
+        return [
+            Command(int(o), int(a), tuple(float(v) for v in d))
+            for o, a, d in zip(self.ops, self.addrs, self.data)
+        ]
+
+    def padded(self, length: int, nop_opcode: int = NOP_OPCODE) -> "PackedStream":
+        """Pad with NOPs to ``length`` (identity updates: semantics-free)."""
+        n = len(self)
+        if n == length:
+            return self
+        assert n < length, f"stream length {n} exceeds pad target {length}"
+        ops = np.full((length,), nop_opcode, np.int32)
+        addrs = np.zeros((length,), np.int32)
+        data = np.zeros((length, self.vwidth), np.float32)
+        ops[:n], addrs[:n], data[:n] = self.ops, self.addrs, self.data
+        return PackedStream(ops, addrs, data)
+
+
+@dataclasses.dataclass
+class BulkWrite:
+    """A run of row-write commands at contiguous addresses, targeting one
+    state buffer: ``buf[base + i] = rows[i]``. Every data stream in our ILAs
+    moves tensors this way (WRITE_V / WR_ACT / WR_DRAM), so the fragment
+    compiler lowers the run to ONE ``dynamic_update_slice`` instead of
+    scanning len(rows) commands — bit-identical, since contiguous row writes
+    at distinct addresses compose to exactly that slice update."""
+
+    buf: str
+    base: int
+    rows: np.ndarray  # (n, V)
+    opcode: int       # the equivalent per-row instruction, for parity streams
+
+    def to_stream(self) -> PackedStream:
+        n = self.rows.shape[0]
+        return PackedStream(
+            np.full((n,), self.opcode, np.int32),
+            np.arange(self.base, self.base + n, dtype=np.int32),
+            np.asarray(self.rows, np.float32),
+        )
+
+    @property
+    def sig(self) -> Tuple:
+        return (self.buf, self.base, self.rows.shape)
+
+
+@dataclasses.dataclass
+class DataStream:
+    """The per-invocation half of a compiled fragment: bulk tensor loads
+    plus the irregular tail (config writes + FN_START trigger). The tail is
+    scanned (NOP-bucketed); the bulk is applied as slice updates."""
+
+    bulk: List[BulkWrite]
+    tail: PackedStream
+
+    def __len__(self) -> int:
+        return sum(b.rows.shape[0] for b in self.bulk) + len(self.tail)
+
+    def to_stream(self) -> PackedStream:
+        """Full command-stream form (eager simulation / parity checks)."""
+        return PackedStream.concat([b.to_stream() for b in self.bulk] + [self.tail])
+
+    def sig(self) -> Tuple:
+        """Compilation signature: bulk layout + the tail's *command skeleton*
+        (opcodes + addresses as static values). Streams sharing a signature
+        differ only in payloads and compile to one executor."""
+        return (
+            tuple(b.sig for b in self.bulk),
+            tuple(int(o) for o in self.tail.ops),
+            tuple(int(a) for a in self.tail.addrs),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +229,13 @@ class ILA:
         self.instructions: List[Instruction] = []
         self._by_opcode: Dict[int, Instruction] = {}
         self._state_init: Dict[str, Callable[[], jnp.ndarray]] = {}
+        # compiled-simulator bookkeeping: one trace per distinct bucketed
+        # stream length (and per batch shape for the vmapped tier)
+        self.n_traces_single = 0
+        self.n_traces_batch = 0
+        self.instruction("nop", NOP_OPCODE, "identity update (bucket padding)")(
+            lambda st, addr, data: st
+        )
 
     # -- model construction ---------------------------------------------
     def state(self, name: str, init: Callable[[], jnp.ndarray]):
@@ -107,13 +274,8 @@ class ILA:
             data[i, : len(c.data)] = c.data
         return jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(data)
 
-    def make_jit_simulator(self):
-        """Build a jit-compiled fragment simulator: lax.scan over the packed
-        command stream with lax.switch dispatch on opcode.
-
-        All instruction updates must preserve state shapes/dtypes (they do:
-        ILA state is fixed architectural state, like hardware registers).
-        """
+    def _make_step(self):
+        """The scan step: lax.switch dispatch on opcode over all updates."""
         instrs = sorted(self.instructions, key=lambda i: i.opcode)
         opcode_to_branch = {ins.opcode: b for b, ins in enumerate(instrs)}
         # dense opcode -> branch lookup table
@@ -139,12 +301,38 @@ class ILA:
             st2 = jax.lax.switch(lut[op], branches, (st, addr, data))
             return st2, ()
 
-        @jax.jit
+        return step
+
+    def make_jit_simulator(self):
+        """Build a jit-compiled fragment simulator: lax.scan over the packed
+        command stream with lax.switch dispatch on opcode.
+
+        All instruction updates must preserve state shapes/dtypes (they do:
+        ILA state is fixed architectural state, like hardware registers).
+        """
+        step = self._make_step()
+
         def run(state, ops, addrs, data):
+            self.n_traces_single += 1  # python side effect: counts traces
             final, _ = jax.lax.scan(step, state, (ops, addrs, data))
             return final
 
-        return run
+        return jax.jit(run)
+
+    def make_batch_simulator(self):
+        """vmap the scanned simulator over stacked command streams, sharing
+        one initial state across the batch (independent fragment sims)."""
+        step = self._make_step()
+
+        def run_one(state, ops, addrs, data):
+            final, _ = jax.lax.scan(step, state, (ops, addrs, data))
+            return final
+
+        def run(state, ops, addrs, data):
+            self.n_traces_batch += 1
+            return jax.vmap(run_one, in_axes=(None, 0, 0, 0))(state, ops, addrs, data)
+
+        return jax.jit(run)
 
     def simulate_jit(self, commands: Sequence[Command], state: Optional[State] = None) -> State:
         """Jit-compiled simulation; the compiled scan is cached (jax.jit
@@ -153,6 +341,168 @@ class ILA:
         if not hasattr(self, "_jit_run"):
             self._jit_run = self.make_jit_simulator()
         return self._jit_run(st, *self.pack_program(commands))
+
+    # -- fragment-compiler fast path ------------------------------------
+    def simulate_packed(
+        self,
+        stream: PackedStream,
+        state: Optional[State] = None,
+        bucket: bool = True,
+    ) -> State:
+        """Simulate a packed stream, NOP-padded to a power-of-two bucket so
+        the jit scan retraces at most O(log max_len) times."""
+        st = state if state is not None else self.init_state()
+        if bucket:
+            stream = stream.padded(bucket_length(len(stream)))
+        if not hasattr(self, "_jit_run"):
+            self._jit_run = self.make_jit_simulator()
+        return self._jit_run(
+            st, jnp.asarray(stream.ops), jnp.asarray(stream.addrs), jnp.asarray(stream.data)
+        )
+
+    def simulate_batch(
+        self,
+        streams: Sequence[PackedStream],
+        state: Optional[State] = None,
+    ) -> State:
+        """Simulate B independent streams (each from the same initial state)
+        in one vmapped scan. Streams may have ragged true lengths: all are
+        NOP-padded to the common bucket. The batch dimension is bucketed too
+        (padding replays the last stream; callers slice [:B]).
+
+        Returns the stacked final state pytree (leading axis = padded batch).
+        """
+        assert streams, "simulate_batch needs at least one stream"
+        st = state if state is not None else self.init_state()
+        L = bucket_length(max(len(s) for s in streams))
+        B = len(streams)
+        Bp = bucket_length(B, min_len=1)
+        padded = [s.padded(L) for s in streams]
+        padded += [padded[-1]] * (Bp - B)
+        ops = np.stack([s.ops for s in padded])
+        addrs = np.stack([s.addrs for s in padded])
+        data = np.stack([s.data for s in padded])
+        if not hasattr(self, "_jit_run_batch"):
+            self._jit_run_batch = self.make_batch_simulator()
+        return self._jit_run_batch(
+            st, jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(data)
+        )
+
+    # -- compiled data-stream execution ---------------------------------
+    def _data_runner(self, sig: Tuple, shared_mask: Tuple[bool, ...]):
+        """Build the jitted executor for one data-stream signature: each
+        bulk write lowers to ONE dynamic_update_slice, and the short tail
+        *unrolls* with static opcodes — the command skeleton compiles away
+        entirely (no per-step lax.switch), which is the compiled-simulator
+        analogue of ILAng's generated C++ vs interpreting the command list.
+
+        ``shared_mask[i]`` marks tail payload rows that are identical across
+        a batch: those stay unbatched under vmap, so values derived from
+        them (mode/geometry registers) keep scalar batch status and
+        FN_START's mode dispatch executes exactly one branch. A batched
+        dispatch index would execute every branch at every position.
+        """
+        if not hasattr(self, "_data_runners"):
+            self._data_runners: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        key = (sig, shared_mask)
+        run = self._data_runners.get(key)
+        if run is not None:
+            self._data_runners.move_to_end(key)
+            return run
+        bulk_sig, tail_ops, tail_addrs = sig
+        updates = [self._by_opcode[op].update for op in tail_ops]
+        shared_pos = [i for i, s in enumerate(shared_mask) if s]
+        batched_pos = [i for i, s in enumerate(shared_mask) if not s]
+        row_src = {}  # position -> (which argument, index within it)
+        for k, i in enumerate(shared_pos):
+            row_src[i] = ("shared", k)
+        for k, i in enumerate(batched_pos):
+            row_src[i] = ("batched", k)
+
+        def apply(state, rows_list, shared_data, batched_data):
+            st = dict(state)
+            for (buf, base, _shape), rows in zip(bulk_sig, rows_list):
+                st[buf] = jax.lax.dynamic_update_slice(st[buf], rows, (base, 0))
+            for i, (update, addr) in enumerate(zip(updates, tail_addrs)):
+                which, k = row_src[i]
+                row = shared_data[k] if which == "shared" else batched_data[k]
+                st = update(st, jnp.int32(addr), row)
+            return st
+
+        def run_single(state, rows_list, shared_data, batched_data):
+            self.n_traces_single += 1
+            return apply(state, rows_list, shared_data, batched_data)
+
+        def run_batch(state, rows_list, shared_data, batched_data):
+            self.n_traces_batch += 1
+            return jax.vmap(apply, in_axes=(None, 0, None, 0))(
+                state, rows_list, shared_data, batched_data
+            )
+
+        run = (jax.jit(run_single), jax.jit(run_batch))
+        self._data_runners[key] = run
+        # bound the compiled-executor cache: heavily ragged workloads (a
+        # distinct operand shape per sample) would otherwise grow it without
+        # limit; evicted signatures simply re-trace on next use
+        while len(self._data_runners) > MAX_DATA_RUNNERS:
+            self._data_runners.popitem(last=False)
+        return run
+
+    @staticmethod
+    def _split_rows(tail_data: np.ndarray, shared_mask: Tuple[bool, ...]):
+        shared = [tail_data[i] for i, s in enumerate(shared_mask) if s]
+        batched = [tail_data[i] for i, s in enumerate(shared_mask) if not s]
+        # keep fixed (possibly 0-length) shapes so the jit signature is stable
+        V = tail_data.shape[1] if tail_data.ndim == 2 else 0
+        sh = np.stack(shared) if shared else np.zeros((0, V), np.float32)
+        ba = np.stack(batched) if batched else np.zeros((0, V), np.float32)
+        return sh, ba
+
+    def run_data(self, data: DataStream, state: Optional[State] = None) -> State:
+        st = state if state is not None else self.init_state()
+        mask = (True,) * len(data.tail)  # single stream: everything "shared"
+        single, _ = self._data_runner(data.sig(), mask)
+        shared, batched = self._split_rows(data.tail.data, mask)
+        return single(
+            st,
+            [jnp.asarray(b.rows) for b in data.bulk],
+            jnp.asarray(shared), jnp.asarray(batched),
+        )
+
+    def run_data_batch(self, datas: Sequence[DataStream], state: Optional[State] = None) -> State:
+        """Batched compiled execution of streams sharing one signature (same
+        bulk layout and tail command skeleton; payloads differ). The batch
+        dim is bucketed to a power of two by replaying the last stream
+        (callers slice [:B]). Payload rows that are identical across the
+        batch stay unbatched — see :meth:`_data_runner`."""
+        assert datas, "run_data_batch needs at least one stream"
+        st = state if state is not None else self.init_state()
+        sig = datas[0].sig()
+        assert all(d.sig() == sig for d in datas), "mixed signatures in one batch"
+        B = len(datas)
+        Bp = bucket_length(B, min_len=1)
+        datas = list(datas) + [datas[-1]] * (Bp - B)
+        tail0 = datas[0].tail.data
+        shared_mask = tuple(
+            bool(all(np.array_equal(d.tail.data[i], tail0[i]) for d in datas[1:]))
+            for i in range(tail0.shape[0])
+        )
+        rows_list = [
+            jnp.asarray(np.stack([d.bulk[i].rows for d in datas]))
+            for i in range(len(sig[0]))
+        ]
+        splits = [self._split_rows(d.tail.data, shared_mask) for d in datas]
+        shared = splits[0][0]
+        batched = np.stack([s[1] for s in splits])
+        _, batch = self._data_runner(sig, shared_mask)
+        return batch(st, rows_list, jnp.asarray(shared), jnp.asarray(batched))
+
+    def jit_cache_info(self) -> Dict[str, int]:
+        return {
+            "traces_single": self.n_traces_single,
+            "traces_batch": self.n_traces_batch,
+            "data_runners": len(getattr(self, "_data_runners", {})),
+        }
 
 
 # --------------------------------------------------------------------------
@@ -170,6 +520,109 @@ class Fragment:
 
     def __len__(self):
         return len(self.commands)
+
+
+def fingerprint(*arrays, extra: Tuple = ()) -> str:
+    """Content fingerprint of parameter tensors (+ static attrs) — the
+    params half of a fragment-cache key. blake2b over dtype/shape/bytes."""
+    h = hashlib.blake2b(digest_size=16)
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    if extra:
+        h.update(repr(extra).encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class CompiledFragment:
+    """A fragment compiled for steady-state reuse.
+
+    ``setup`` is the one-time stream (weight + static-config load) for one
+    parameter set; its effect is simulated once and memoized as
+    ``setup_state`` — architectural state with weights resident, exactly as
+    a real driver leaves the device configured between invocations. Per
+    invocation, callers pack only the *data* stream (activation load +
+    FN_START) and run it from the cached setup state. ``meta`` carries
+    builder-specific constants (exponent biases, layout dims) the data
+    packer and read-out need.
+    """
+
+    ila: ILA
+    key: Tuple
+    setup: PackedStream
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    _setup_state: Optional[State] = dataclasses.field(default=None, repr=False)
+
+    def setup_state(self) -> State:
+        if self._setup_state is None:
+            st = self.ila.init_state()
+            if len(self.setup):
+                st = self.ila.simulate_packed(self.setup, state=st)
+            self._setup_state = st
+        return self._setup_state
+
+    def run(self, data: "DataStream | PackedStream") -> State:
+        """One invocation: data stream from the cached post-setup state."""
+        if isinstance(data, DataStream):
+            return self.ila.run_data(data, state=self.setup_state())
+        return self.ila.simulate_packed(data, state=self.setup_state())
+
+    def run_batch(self, streams: Sequence["DataStream | PackedStream"]) -> State:
+        """Batched invocations sharing this fragment's setup state; returns
+        the stacked final state (leading axis covers the padded batch)."""
+        if isinstance(streams[0], DataStream):
+            return self.ila.run_data_batch(streams, state=self.setup_state())
+        return self.ila.simulate_batch(streams, state=self.setup_state())
+
+    def full_commands(self, data: "DataStream | PackedStream") -> List[Command]:
+        """setup + data as one eager-simulable Command list (parity checks)."""
+        stream = data.to_stream() if isinstance(data, DataStream) else data
+        if len(self.setup) == 0:
+            return stream.to_commands()
+        return PackedStream.concat([self.setup, stream]).to_commands()
+
+
+class FragmentCache:
+    """LRU of CompiledFragments keyed by (op, shapes, params fingerprint)."""
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[Tuple, CompiledFragment]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Tuple, build: Callable[[], CompiledFragment]) -> CompiledFragment:
+        frag = self._entries.get(key)
+        if frag is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return frag
+        self.misses += 1
+        frag = build()
+        frag.key = key
+        self._entries[key] = frag
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return frag
+
+    def clear(self):
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self):
+        return len(self._entries)
+
+    def info(self) -> Dict[str, int]:
+        return {"size": len(self._entries), "hits": self.hits, "misses": self.misses}
+
+
+#: process-wide fragment cache shared by all Executors (keys are content
+#: fingerprints, so distinct parameter sets never collide)
+FRAGMENTS = FragmentCache()
 
 
 @dataclasses.dataclass

@@ -115,6 +115,10 @@ class Trainer:
                 if restarts > self.tcfg.max_restarts:
                     raise RuntimeError(f"exceeded max restarts: {e}")
                 self.metrics.append({"event": "restart", "cause": str(e)})
+                # quiesce in-flight async checkpoint writes before restoring,
+                # or the restart can race the newest checkpoint's commit and
+                # silently resume from an older step
+                self.ckpt.wait()
                 self._build()   # fresh executable (new workers)
 
     def _run_once(self, seed: int):

@@ -1,0 +1,33 @@
+"""Optional-`hypothesis` shim: property tests skip cleanly when absent.
+
+``from hypothesis import given, settings, strategies as st`` made three test
+modules fail at *collection* on machines without hypothesis, taking their
+plain unit tests down with them. Import the same names from this module
+instead: with hypothesis installed they are the real thing; without it,
+``@given(...)`` turns the test into a clean skip and the rest of the module
+still runs.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    _skip = pytest.mark.skip(reason="hypothesis not installed")
+
+    def given(*_args, **_kwargs):
+        return lambda fn: _skip(fn)
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stands in for `strategies`; only evaluated while building the
+        decorator arguments of tests that will be skipped anyway."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

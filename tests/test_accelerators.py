@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # property tests skip if absent
 
 from repro.accel import flexasr as fa
 from repro.accel import hlscnn as hc

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # property tests skip if absent
 
 from repro.accel import numerics
 from repro.kernels import ops, ref

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # property tests skip if absent
 
 from repro import optim
 from repro.checkpoint.manager import CheckpointManager
