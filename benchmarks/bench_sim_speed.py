@@ -27,7 +27,6 @@ import jax
 import numpy as np
 
 from repro.accel import flexasr as fa
-from repro.core import ila as ila_mod
 
 
 def _force(r):
@@ -119,8 +118,7 @@ def run():
           f"   ({speedup:.1f}x vs jit scan)")
     print(f"batched (8/call):   {per_sample_min*1e3:8.1f} ms/sample min")
     print(f"bit-exact vs eager reference: {exact}")
-    print(f"fragment cache: {ila_mod.FRAGMENTS.info()}")
-    print(f"flexasr jit traces: {fa.flexasr.jit_cache_info()}")
+    print(f"flexasr target caches: {fa.TARGET.cache_info()}")
     assert exact, "compiled tiers must match the eager reference bit-for-bit"
     return [
         ("sim_steady_compiled", warm_min * 1e6, f"speedup={speedup:.1f}x"),

@@ -34,11 +34,11 @@ def _acc_row(name, platform, builder, input_shape, targets, steps=TRAIN_STEPS):
     res = compile_program(expr, targets=targets, flexible=True)
     ref, _ = cosim.eval_classification(res.program, trained, X, y, Executor("ideal"), N_EVAL)
     t0 = time.time()
-    ex8 = Executor("ila", hlscnn_wgt_bits=8)
+    ex8 = Executor("ila", target_options={"hlscnn": {"wgt_bits": 8}})
     orig, dt = cosim.eval_classification(res.program, trained, X, y, ex8, N_EVAL)
     upd = None
     if "hlscnn" in targets:
-        ex16 = Executor("ila", hlscnn_wgt_bits=16)
+        ex16 = Executor("ila", target_options={"hlscnn": {"wgt_bits": 16}})
         upd, _ = cosim.eval_classification(res.program, trained, X, y, ex16, N_EVAL)
     per_op = {}
     for s in ex8.stats:

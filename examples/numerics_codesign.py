@@ -23,7 +23,7 @@ n = 30
 ref, _ = cosim.eval_classification(res.program, trained, X, y, Executor("ideal"), n)
 print(f"3. reference accuracy (host fp32): {ref:.1%}")
 
-ex8 = Executor("ila", hlscnn_wgt_bits=8)
+ex8 = Executor("ila", target_options={"hlscnn": {"wgt_bits": 8}})
 orig, _ = cosim.eval_classification(res.program, trained, X, y, ex8, n)
 print(f"4. ORIGINAL design (8-bit fixed-point conv weights): {orig:.1%}")
 print("   per-invocation debugging statistics (given to the 'accelerator")
@@ -33,8 +33,9 @@ for s in ex8.stats:
     per_op.setdefault(s.op, []).append(s.rel_err)
 for op, errs in per_op.items():
     print(f"     {op:16s} mean rel err {np.mean(errs):.1%}")
+print("   per-target summary:", ex8.stats_summary())
 
-ex16 = Executor("ila", hlscnn_wgt_bits=16)
+ex16 = Executor("ila", target_options={"hlscnn": {"wgt_bits": 16}})
 upd, _ = cosim.eval_classification(res.program, trained, X, y, ex16, n)
 print(f"5. UPDATED design (16-bit weights): {upd:.1%}")
 print(f"\n   collapse {ref:.1%} -> {orig:.1%}, recovery -> {upd:.1%}"

@@ -19,21 +19,31 @@ B, PROMPT, GEN = 4, 16, 24
 rng = np.random.default_rng(0)
 prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, PROMPT)), jnp.int32)
 
+def _force(*trees):
+    # JAX dispatch is async: block so the timer measures compute, not enqueue
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+
+
 cache = api.init_cache(cfg, B, PROMPT + GEN)
-t0 = time.time()
+t0 = time.perf_counter()
 logits, cache = api.prefill(cfg, params, prompt, cache)
-print(f"prefill {PROMPT} tokens x{B}: {time.time()-t0:.2f}s")
+_force(logits, cache)
+print(f"prefill {PROMPT} tokens x{B}: {time.perf_counter()-t0:.2f}s")
 
 decode = jax.jit(lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos),
                  static_argnums=())
 tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
 out_tokens = [tok]
-t0 = time.time()
+t0 = time.perf_counter()
 for i in range(GEN - 1):
     logits, cache = api.decode_step(cfg, params, cache, tok, PROMPT + i)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out_tokens.append(tok)
-dt = time.time() - t0
+_force(tok, cache)
+dt = time.perf_counter() - t0
 gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
 print(f"decoded {GEN-1} steps x{B} seqs in {dt:.2f}s ({dt/(GEN-1)*1e3:.0f} ms/step)")
 print("generations:\n", gen)

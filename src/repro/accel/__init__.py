@@ -1,1 +1,13 @@
-"""Accelerator ILA models (FlexASR / HLSCNN / VTA) + custom numerics."""
+"""Accelerator backends, as :class:`~repro.accel.target.AcceleratorTarget`
+plugins + the custom-numerics library.
+
+Importing this package registers the bundled targets with the core registry
+(``repro.core.ila.TARGETS``) — the *only* integration step a backend needs.
+To add an accelerator: write one module against ``repro.accel.target`` (see
+``vecunit.py`` and ``docs/targets.md``) and import it here.
+"""
+from . import target  # noqa: F401  (the plugin API)
+from . import flexasr  # noqa: F401
+from . import hlscnn  # noqa: F401
+from . import vta  # noqa: F401
+from . import vecunit  # noqa: F401

@@ -48,12 +48,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import ir
+from ..core.egraph import P, Rewrite, V as PV, shape_of
 from ..core.ila import (
-    FRAGMENTS, ILA, BulkWrite, Command, CompiledFragment, DataStream, Fragment,
-    IRAccelMapping, PackedStream, REGISTRY, fingerprint,
+    ILA, BulkWrite, Command, CompiledFragment, DataStream, Fragment,
+    PackedStream, fingerprint,
 )
 from . import numerics
 from .numerics import AdaptivFloatSpec
+from .target import (
+    AcceleratorTarget, Intrinsic, SimJob, VT2Case, register_target,
+)
 
 V = 16            # interface lanes (128-bit MMIO word of 8-bit AF values)
 GB_ROWS = 4096    # global buffer rows
@@ -89,6 +94,18 @@ ACT_SIGMOID = 2
 ACT_TANH = 3
 
 flexasr = ILA("flexasr", vwidth=V)
+
+TARGET = AcceleratorTarget(
+    "flexasr",
+    flexasr,
+    display_name="FlexASR",
+    capabilities={
+        "max_in": MAX_IN, "max_out": MAX_OUT, "max_h": MAX_H, "max_ts": MAX_TS,
+        "numerics": "adaptivfloat8",
+    },
+    doc="speech/NLP accelerator: linear/LSTM/pooling/layernorm/attention in AdaptivFloat",
+)
+FRAGMENTS = TARGET.fragments
 
 flexasr.state("gb_large", lambda: jnp.zeros((GB_ROWS + MAX_TS * (MAX_IN // V), V), jnp.float32))
 flexasr.state("pe_w", lambda: jnp.zeros((MAX_OUT, MAX_IN), jnp.float32))
@@ -693,18 +710,414 @@ def build_attention_fragment(q, k, v):
     return cmds, lambda st: _read_matrix(st, BASE_OUT, Tq, D)
 
 
-# Register the IR-accelerator mappings
-REGISTRY.register(IRAccelMapping("fasr-linear", "flexasr", "fasr_linear", build_linear_fragment,
-                                 "bias_add(dense(x,w),b) -> FlexASR LinearLayer"))
-REGISTRY.register(IRAccelMapping("fasr-lstm", "flexasr", "fasr_lstm", build_lstm_fragment,
-                                 "unrolled LSTM -> one FlexASR LSTM instruction"))
-REGISTRY.register(IRAccelMapping("fasr-maxpool", "flexasr", "fasr_maxpool",
-                                 lambda x: build_pool_fragment(x, "max"),
-                                 "temporal max pooling"))
-REGISTRY.register(IRAccelMapping("fasr-meanpool", "flexasr", "fasr_meanpool",
-                                 lambda x: build_pool_fragment(x, "mean"),
-                                 "temporal mean pooling"))
-REGISTRY.register(IRAccelMapping("fasr-layernorm", "flexasr", "fasr_layernorm",
-                                 build_layernorm_fragment, "layer normalization"))
-REGISTRY.register(IRAccelMapping("fasr-attention", "flexasr", "fasr_attention",
-                                 build_attention_fragment, "scaled dot-product attention"))
+# --------------------------------------------------------------------------
+# IR -> intrinsic rewrites (instruction selection; guards = device capacity)
+# --------------------------------------------------------------------------
+
+
+def _linear_guard(eg, cid, s):
+    b = shape_of(eg, s["b"])
+    return len(shape_of(eg, s["c"])) == 1 and b[1] <= MAX_IN and b[0] <= MAX_IN
+
+
+def _lstm_guard(eg, cid, s):
+    wi = shape_of(eg, s["wi"])
+    wh = shape_of(eg, s["wh"])
+    return wi[1] <= MAX_IN and wh[1] <= MAX_H
+
+
+def _attn_guard(eg, cid, s):
+    q = shape_of(eg, s["q"])
+    k = shape_of(eg, s["k"])
+    # KV length is not driver-chunkable, hence the MAX_TS guard
+    return q[-1] <= MAX_IN and q[-2] <= MAX_TS and k[-2] <= MAX_TS
+
+
+def _rewrites():
+    return [
+        Rewrite(
+            "fasr-linear",
+            P("bias_add", P("dense", PV("a"), PV("b")), PV("c")),
+            P("fasr_linear", PV("a"), PV("b"), PV("c")),
+            guard=_linear_guard,
+        ),
+        Rewrite(
+            "fasr-lstm",
+            P("lstm", PV("x"), PV("wi"), PV("wh"), PV("b")),
+            P("fasr_lstm", PV("x"), PV("wi"), PV("wh"), PV("b")),
+            guard=_lstm_guard,
+        ),
+        Rewrite(
+            "fasr-attention",
+            P("attention", PV("q"), PV("k"), PV("v")),
+            P("fasr_attention", PV("q"), PV("k"), PV("v")),
+            guard=_attn_guard,
+        ),
+        Rewrite(
+            "fasr-layernorm",
+            P("layer_norm", PV("x"), PV("g"), PV("b"), attr_binds=("eps",)),
+            P("fasr_layernorm", PV("x"), PV("g"), PV("b"), attr_binds=("eps",)),
+            guard=lambda eg, cid, s: shape_of(eg, s["x"])[-1] <= MAX_IN,
+        ),
+        Rewrite(
+            "fasr-maxpool",
+            P(
+                "reduce_max",
+                P("windows", PV("T"), attrs=(("wh", 2), ("ww", 1), ("sh", 2), ("sw", 1))),
+                attrs=(("axis", (2, 3)),),
+            ),
+            # no width guard: pooling is elementwise across features, so the
+            # driver chunks wide matrices column-wise (plan_pool)
+            P("fasr_load", P("fasr_maxpool", P("fasr_store", PV("T")))),
+        ),
+        Rewrite(
+            "fasr-meanpool",
+            P(
+                "reduce_mean",
+                P("windows", PV("T"), attrs=(("wh", 2), ("ww", 1), ("sh", 2), ("sw", 1))),
+                attrs=(("axis", (2, 3)),),
+            ),
+            P("fasr_load", P("fasr_meanpool", P("fasr_store", PV("T")))),
+        ),
+        # Section 5.1: cancel redundant accelerator<->host round trips
+        Rewrite(
+            "fasr-store-load-cancel",
+            P("fasr_store", P("fasr_load", PV("x"))),
+            PV("x"),
+        ),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Intrinsic planners (op -> SimJobs; driver chunking lives here)
+# --------------------------------------------------------------------------
+
+
+def kernel_linear(ctx, x, args):
+    """Deployment fast path: the af_gemm Pallas kernel (same AF lattice)."""
+    from ..kernels import ops as kops
+
+    a, w, b = args
+    orig_shape = a.shape
+    a2 = a.reshape(-1, a.shape[-1])
+    ideal_full = a2 @ w.T + b
+    out = np.asarray(kops.af_linear(jnp.asarray(a2), jnp.asarray(w), jnp.asarray(b)))
+    ctx.record("fasr_linear", "flexasr-kernel", out, ideal_full, 0)
+    return out.reshape(orig_shape[:-1] + (w.shape[0],))
+
+
+def plan_linear(ctx, x, args):
+    a, w, b = args
+    orig_shape = a.shape
+    a2 = a.reshape(-1, a.shape[-1])
+    O = w.shape[0]
+    ideal_full = a2 @ w.T + b
+    frag = linear_fragment(w, b)
+    jobs = [
+        SimJob(frag, pack_linear_data(frag, chunk), read_full,
+               (slice(0, chunk.shape[0]), slice(0, O)))
+        for chunk in ctx.chunk_rows(a2, MAX_TS)
+    ]
+
+    def assemble(outs):
+        out = np.concatenate(outs, axis=0)
+        ctx.record("fasr_linear", "flexasr", out, ideal_full, ctx.ncmds(jobs))
+        return out.reshape(orig_shape[:-1] + (O,))
+
+    return jobs, assemble
+
+
+def plan_lstm(ctx, x, args):
+    xs, wi, wh, b = args
+    T, B, I = xs.shape
+    H = wh.shape[1]
+    ideal = np.asarray(
+        ir._lstm(jnp.asarray(xs), jnp.asarray(wi), jnp.asarray(wh), jnp.asarray(b))
+    )
+    frag = lstm_fragment(wi, wh, b)
+    jobs = [
+        SimJob(frag, pack_lstm_data(frag, xs[:, bi]), read_full,
+               (slice(0, T), slice(0, H)))
+        for bi in range(B)
+    ]
+
+    def assemble(outs):
+        out = np.stack(outs, axis=1)
+        ctx.record("fasr_lstm", "flexasr", out, ideal, ctx.ncmds(jobs))
+        return out
+
+    return jobs, assemble
+
+
+def plan_pool(ctx, x, args, kind):
+    (a,) = args
+    T = a.shape[0]
+    pairs = a[: T - T % 2].reshape(T // 2, 2, *a.shape[1:])
+    ideal = pairs.max(1) if kind == "max" else pairs.mean(1)
+    jobs, layout = [], []
+    for chunk in ctx.chunk_rows(a, MAX_TS):
+        # pooling is elementwise across features: chunk wide matrices
+        # column-wise to fit the device's MAX_IN lanes
+        cols = []
+        for c0 in range(0, chunk.shape[1], MAX_IN):
+            piece = chunk[:, c0 : c0 + MAX_IN]
+            frag = pool_fragment(piece.shape[1], kind)
+            jobs.append(
+                SimJob(frag, pack_pool_data(frag, piece), read_full,
+                       (slice(0, piece.shape[0] // 2), slice(0, piece.shape[1])))
+            )
+            cols.append(len(jobs) - 1)
+        layout.append(cols)
+
+    def assemble(outs):
+        rows = [np.concatenate([outs[i] for i in cols], axis=1) for cols in layout]
+        out = np.concatenate(rows, axis=0)
+        ctx.record(f"fasr_{kind}pool", "flexasr", out, ideal, ctx.ncmds(jobs))
+        return out
+
+    return jobs, assemble
+
+
+def plan_layernorm(ctx, x, args):
+    a, g, b = args
+    orig = a.shape
+    a2 = a.reshape(-1, a.shape[-1])
+    mu = a2.mean(-1, keepdims=True)
+    va = a2.var(-1, keepdims=True)
+    ideal = (a2 - mu) / np.sqrt(va + 1e-5) * g + b
+    frag = layernorm_fragment(g, b)
+    D = a2.shape[1]
+    jobs = [
+        SimJob(frag, pack_layernorm_data(frag, chunk), read_full,
+               (slice(0, chunk.shape[0]), slice(0, D)))
+        for chunk in ctx.chunk_rows(a2, MAX_TS)
+    ]
+
+    def assemble(outs):
+        out = np.concatenate(outs, axis=0).reshape(orig)
+        ctx.record("fasr_layernorm", "flexasr", out, ideal, ctx.ncmds(jobs))
+        return out
+
+    return jobs, assemble
+
+
+def plan_attention(ctx, x, args):
+    q, k, v = args
+    ideal = np.asarray(ir._attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)))
+    D = q.shape[-1]
+    frag = attention_fragment(D)
+    if q.ndim == 2:
+        jobs = [
+            SimJob(frag, pack_attention_data(frag, q, k, v), read_full,
+                   (slice(0, q.shape[0]), slice(0, v.shape[-1])))
+        ]
+
+        def assemble(outs):
+            ctx.record("fasr_attention", "flexasr", outs[0], ideal, ctx.ncmds(jobs))
+            return outs[0]
+
+        return jobs, assemble
+    # batch of heads: one invocation per (batch) slice, batched in sim
+    q2 = q.reshape(-1, q.shape[-2], q.shape[-1])
+    k2 = k.reshape(-1, k.shape[-2], k.shape[-1])
+    v2 = v.reshape(-1, v.shape[-2], v.shape[-1])
+    jobs = [
+        SimJob(frag, pack_attention_data(frag, q2[i], k2[i], v2[i]), read_full,
+               (slice(0, q2.shape[1]), slice(0, v2.shape[2])))
+        for i in range(q2.shape[0])
+    ]
+
+    def assemble(outs):
+        out = np.stack(outs).reshape(q.shape[:-1] + (v.shape[-1],))
+        ctx.record("fasr_attention", "flexasr", out, ideal, ctx.ncmds(jobs))
+        return out
+
+    return jobs, assemble
+
+
+# --------------------------------------------------------------------------
+# Validation declarations (conformance samples, VT2 cases, VT3, Table 2)
+# --------------------------------------------------------------------------
+
+
+def _sample_linear(r):
+    T, I, O = int(r.integers(1, 12)), int(r.integers(1, 33)), int(r.integers(1, 25))
+    return [
+        r.standard_normal((T, I)).astype(np.float32),
+        (r.standard_normal((O, I)) * 0.1).astype(np.float32),
+        (r.standard_normal((O,)) * 0.1).astype(np.float32),
+    ], {}
+
+
+def _sample_lstm(r):
+    T, I, H = int(r.integers(2, 7)), int(r.integers(1, 17)), int(r.integers(1, 9))
+    return [
+        (r.standard_normal((T, 1, I)) * 0.5).astype(np.float32),
+        (r.standard_normal((4 * H, I)) * 0.2).astype(np.float32),
+        (r.standard_normal((4 * H, H)) * 0.2).astype(np.float32),
+        (r.standard_normal((4 * H,)) * 0.1).astype(np.float32),
+    ], {}
+
+
+def _sample_pool(r):
+    T, D = 2 * int(r.integers(1, 9)), int(r.integers(1, 49))
+    return [r.standard_normal((T, D)).astype(np.float32)], {}
+
+
+def _sample_layernorm(r):
+    T, D = int(r.integers(1, 9)), int(r.integers(2, 49))
+    return [
+        r.standard_normal((T, D)).astype(np.float32),
+        r.standard_normal((D,)).astype(np.float32),
+        (r.standard_normal((D,)) * 0.1).astype(np.float32),
+    ], {"eps": 1e-5}
+
+
+def _sample_attention(r):
+    Tq, Tk, D = int(r.integers(1, 9)), int(r.integers(1, 13)), int(r.integers(2, 33))
+    return [
+        r.standard_normal((Tq, D)).astype(np.float32),
+        r.standard_normal((Tk, D)).astype(np.float32),
+        r.standard_normal((Tk, D)).astype(np.float32),
+    ], {}
+
+
+def _vt2(dim_t, dim_d):
+    a = ir.Var("a", (dim_t, dim_d))
+    w = ir.Var("w", (dim_d, dim_d))
+    c = ir.Var("c", (dim_d,))
+    T = ir.Var("T", (dim_t, dim_d))
+    g = ir.Var("g", (dim_d,))
+    be = ir.Var("be", (dim_d,))
+    return [
+        VT2Case(
+            "linear",
+            ir.bias_add(ir.dense(a, w), c),
+            ir.call("fasr_linear", a, w, c),
+            {"a": (dim_t, dim_d), "w": (dim_d, dim_d), "c": (dim_d,)},
+        ),
+        VT2Case(
+            "maxpool",
+            ir.call("reduce_max", ir.call("windows", T, wh=2, ww=1, sh=2, sw=1), axis=(2, 3)),
+            ir.call("fasr_load", ir.call("fasr_maxpool", ir.call("fasr_store", T))),
+            {"T": (dim_t, dim_d)},
+        ),
+        VT2Case(
+            "layernorm",
+            ir.call("layer_norm", a, g, be, eps=1e-5),
+            ir.call("fasr_layernorm", a, g, be, eps=1e-5),
+            {"a": (dim_t, dim_d), "g": (dim_d,), "be": (dim_d,)},
+        ),
+    ]
+
+
+def _vt3_linear(n: int = 3, seed: int = 0):
+    """FlexASR ILA LinearLayer vs the af_gemm Pallas kernel: both project
+    onto the same AdaptivFloat lattice, so they must agree bit-for-bit."""
+    from ..kernels import ops as kops
+
+    rng = np.random.default_rng(seed)
+    worst = 0.0
+    for _ in range(n):
+        x = rng.standard_normal((16, 64)).astype(np.float32)
+        w = (rng.standard_normal((32, 64)) * 0.1).astype(np.float32)
+        b = (rng.standard_normal((32,)) * 0.1).astype(np.float32)
+        cmds, rd = build_linear_fragment(x, w, b)
+        ila_out = np.asarray(rd(flexasr.simulate(cmds)))
+        kern_out = np.asarray(kops.af_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
+        worst = max(worst, float(np.abs(ila_out - kern_out).max()))
+    return worst <= 1e-6, worst
+
+
+def _mapping_cases(rng):
+    """Table 2 rows: (operation, case_fn) with case_fn() -> (ref, simulated)."""
+
+    def linear_case():
+        x = rng.standard_normal((16, 64)).astype(np.float32)
+        w = (rng.standard_normal((64, 64)) * 0.1).astype(np.float32)
+        b = (rng.standard_normal((64,)) * 0.1).astype(np.float32)
+        cmds, rd = build_linear_fragment(x, w, b)
+        return x @ w.T + b, rd(flexasr.simulate(cmds))
+
+    def lstm_case():
+        x = (rng.standard_normal((16, 32)) * 0.5).astype(np.float32)
+        wi = (rng.standard_normal((64, 32)) * 0.3).astype(np.float32)
+        wh = (rng.standard_normal((64, 16)) * 0.3).astype(np.float32)
+        b = (rng.standard_normal((64,)) * 0.1).astype(np.float32)
+        cmds, rd = build_lstm_fragment(x, wi, wh, b)
+        ref = ir._lstm(jnp.asarray(x[:, None]), jnp.asarray(wi), jnp.asarray(wh),
+                       jnp.asarray(b))[:, 0]
+        return ref, rd(flexasr.simulate(cmds))
+
+    def ln_case():
+        x = rng.standard_normal((16, 64)).astype(np.float32)
+        g = rng.standard_normal((64,)).astype(np.float32)
+        be = (rng.standard_normal((64,)) * 0.1).astype(np.float32)
+        cmds, rd = build_layernorm_fragment(x, g, be)
+        mu = x.mean(-1, keepdims=True)
+        va = x.var(-1, keepdims=True)
+        return (x - mu) / np.sqrt(va + 1e-5) * g + be, rd(flexasr.simulate(cmds))
+
+    def maxpool_case():
+        # device-representable inputs (written into the AF8 buffer), as the
+        # paper's 0.00% row implies
+        x = np.asarray(numerics.af_quantize(
+            jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32)), AF))
+        cmds, rd = build_pool_fragment(x, "max")
+        return x.reshape(8, 2, 64).max(1), rd(flexasr.simulate(cmds))
+
+    def meanpool_case():
+        x = rng.standard_normal((16, 64)).astype(np.float32)
+        cmds, rd = build_pool_fragment(x, "mean")
+        return x.reshape(8, 2, 64).mean(1), rd(flexasr.simulate(cmds))
+
+    def attn_case():
+        q = rng.standard_normal((8, 64)).astype(np.float32)
+        k = rng.standard_normal((16, 64)).astype(np.float32)
+        v = rng.standard_normal((16, 64)).astype(np.float32)
+        cmds, rd = build_attention_fragment(q, k, v)
+        ref = ir._attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        return ref, rd(flexasr.simulate(cmds))
+
+    return [
+        ("LinearLayer", linear_case),
+        ("LSTM", lstm_case),
+        ("LayerNorm", ln_case),
+        ("MaxPool", maxpool_case),
+        ("MeanPool", meanpool_case),
+        ("Attention", attn_case),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Registration: everything the core needs, through the public API
+# --------------------------------------------------------------------------
+
+TARGET.add_intrinsic(Intrinsic(
+    "fasr_linear", planner=plan_linear, kernel=kernel_linear,
+    sample=_sample_linear, tol=0.08,
+    doc="bias_add(dense(x,w),b) -> FlexASR LinearLayer"))
+TARGET.add_intrinsic(Intrinsic(
+    "fasr_lstm", planner=plan_lstm, sample=_sample_lstm, tol=0.20,
+    doc="unrolled LSTM -> one FlexASR LSTM instruction"))
+TARGET.add_intrinsic(Intrinsic(
+    "fasr_maxpool", planner=lambda ctx, x, a: plan_pool(ctx, x, a, "max"),
+    sample=_sample_pool, tol=0.05, doc="temporal max pooling"))
+TARGET.add_intrinsic(Intrinsic(
+    "fasr_meanpool", planner=lambda ctx, x, a: plan_pool(ctx, x, a, "mean"),
+    sample=_sample_pool, tol=0.05, doc="temporal mean pooling"))
+TARGET.add_intrinsic(Intrinsic(
+    "fasr_layernorm", planner=plan_layernorm, sample=_sample_layernorm,
+    tol=0.10, doc="layer normalization"))
+TARGET.add_intrinsic(Intrinsic(
+    "fasr_attention", planner=plan_attention, sample=_sample_attention,
+    tol=0.15, doc="scaled dot-product attention"))
+TARGET.add_intrinsic(Intrinsic(
+    "fasr_store", passthrough=True, doc="HBM -> accelerator transfer marker"))
+TARGET.add_intrinsic(Intrinsic(
+    "fasr_load", passthrough=True, doc="accelerator -> HBM transfer marker"))
+TARGET.add_rewrites(_rewrites)
+TARGET.add_vt2_cases(_vt2)
+TARGET.add_vt3_check("linear_ila_vs_af_gemm_kernel", _vt3_linear)
+TARGET.add_mapping_cases(_mapping_cases)
+register_target(TARGET)

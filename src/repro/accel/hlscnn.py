@@ -29,12 +29,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import ir
+from ..core.egraph import P, Rewrite, V as PV, shape_of
 from ..core.ila import (
-    FRAGMENTS, ILA, BulkWrite, Command, CompiledFragment, DataStream,
-    IRAccelMapping, PackedStream, REGISTRY, fingerprint,
+    ILA, BulkWrite, Command, CompiledFragment, DataStream,
+    PackedStream, fingerprint,
 )
 from . import numerics
 from .numerics import FixedPointSpec
+from .target import (
+    AcceleratorTarget, Intrinsic, SimJob, VT2Case, register_target,
+)
 
 V = 16
 ACT_WORDS = 8192
@@ -55,6 +60,19 @@ CFG_DTYPE = 0x21
 CONV_START = 0x30
 
 hlscnn = ILA("hlscnn", vwidth=V)
+
+TARGET = AcceleratorTarget(
+    "hlscnn",
+    hlscnn,
+    display_name="HLSCNN",
+    capabilities={
+        "max_hw": MAX_H, "max_c": MAX_C, "max_k": MAX_K, "max_khw": MAX_KH,
+        "numerics": "fixed8/16",
+    },
+    doc="coarse-grained conv2d accelerator in 8/16-bit fixed point",
+)
+FRAGMENTS = TARGET.fragments
+
 hlscnn.state("act_mem", lambda: jnp.zeros((ACT_WORDS, V), jnp.float32))
 hlscnn.state("wgt_mem", lambda: jnp.zeros((WGT_WORDS, V), jnp.float32))
 hlscnn.state("out_mem", lambda: jnp.zeros((OUT_WORDS, V), jnp.float32))
@@ -238,9 +256,102 @@ def build_conv2d_fragment(x, w, strides=(1, 1), padding=(0, 0), wgt_bits: int = 
     return cmds, read_out
 
 
-REGISTRY.register(
-    IRAccelMapping(
-        "hlscnn-conv2d", "hlscnn", "hlscnn_conv2d", build_conv2d_fragment,
-        "non-grouped 2D convolution in 8/16-bit fixed point",
+# --------------------------------------------------------------------------
+# Target declaration: rewrites, planner, validation cases, registration
+# --------------------------------------------------------------------------
+
+
+def _conv_guard(eg, cid, s):
+    n, h, w, c = shape_of(eg, s["x"])
+    kh, kw, ci, k = shape_of(eg, s["w"])
+    ph, pw = s["padding"]
+    return (
+        h + 2 * ph <= MAX_H
+        and w + 2 * pw <= MAX_W
+        and c <= MAX_C
+        and k <= MAX_K
+        and kh <= MAX_KH
+        and kw <= MAX_KW
     )
-)
+
+
+def _rewrites():
+    return [
+        Rewrite(
+            "hlscnn-conv2d",
+            P("conv2d", PV("x"), PV("w"), attr_binds=("strides", "padding")),
+            P("hlscnn_conv2d", PV("x"), PV("w"), attr_binds=("strides", "padding")),
+            guard=_conv_guard,
+        ),
+    ]
+
+
+def plan_conv2d(ctx, x, args):
+    a, w = args
+    strides = x.attr("strides")
+    padding = x.attr("padding")
+    wgt_bits = int(ctx.options.get("wgt_bits", 8))
+    ideal = np.asarray(ir._conv2d(jnp.asarray(a), jnp.asarray(w), strides, padding))
+    if padding != (0, 0):
+        a = np.pad(
+            a, ((0, 0), (padding[0], padding[0]), (padding[1], padding[1]), (0, 0))
+        )
+    frag = conv2d_fragment(w, a.shape[1:], strides, wgt_bits=wgt_bits)
+    window = out_slice(frag)
+    jobs = [
+        SimJob(frag, pack_conv2d_data(frag, a[ni : ni + 1]), read_full, window)
+        for ni in range(a.shape[0])
+    ]
+
+    def assemble(outs):
+        out = np.concatenate(outs, axis=0)
+        ctx.record("hlscnn_conv2d", "hlscnn", out, ideal, ctx.ncmds(jobs))
+        return out
+
+    return jobs, assemble
+
+
+def _sample_conv2d(r):
+    h = int(r.integers(4, 11))
+    c = int(r.integers(1, 9))
+    k = int(r.integers(1, 9))
+    kh = int(r.integers(1, 4))
+    return [
+        r.standard_normal((1, h, h, c)).astype(np.float32),
+        (r.standard_normal((kh, kh, c, k)) * 0.1).astype(np.float32),
+    ], {"strides": (1, 1), "padding": (0, 0)}
+
+
+def _vt2(dim_t, dim_d):
+    x = ir.Var("x", (1, 8, 8, 4))
+    wc = ir.Var("wc", (3, 3, 4, 8))
+    return [
+        VT2Case(
+            "conv2d",
+            ir.conv2d(x, wc, (1, 1), (0, 0)),
+            ir.call("hlscnn_conv2d", x, wc, strides=(1, 1), padding=(0, 0)),
+            {"x": (1, 8, 8, 4), "wc": (3, 3, 4, 8)},
+        ),
+    ]
+
+
+def _mapping_cases(rng):
+    def conv_case():
+        x = rng.standard_normal((1, 12, 12, 8)).astype(np.float32)
+        w = (rng.standard_normal((3, 3, 8, 16)) * 0.1).astype(np.float32)
+        cmds, rd = build_conv2d_fragment(x, w, (1, 1), (0, 0), wgt_bits=16)
+        out = rd(hlscnn.simulate(cmds))
+        ref = ir._conv2d(jnp.asarray(x), jnp.asarray(w), (1, 1), (0, 0))
+        return ref, out
+
+    return [("Conv2D", conv_case)]
+
+
+TARGET.add_intrinsic(Intrinsic(
+    "hlscnn_conv2d", planner=plan_conv2d, sample=_sample_conv2d,
+    tol=0.05, options={"wgt_bits": 16},
+    doc="non-grouped 2D convolution in 8/16-bit fixed point"))
+TARGET.add_rewrites(_rewrites)
+TARGET.add_vt2_cases(_vt2)
+TARGET.add_mapping_cases(_mapping_cases)
+register_target(TARGET)

@@ -1,0 +1,197 @@
+"""The ``AcceleratorTarget`` plugin API.
+
+The paper's thesis is that the ILA, as a formal software/hardware interface,
+makes compiler + simulator support for a *new prototype accelerator* mostly
+derivable: write the ILA and the IR-accelerator mappings, and flexible
+matching, code generation and application-level validation come for free.
+This module is that thesis as an API: one object per accelerator owning
+
+* its :class:`~repro.core.ila.ILA` model and per-target fragment cache,
+* its IR -> intrinsic rewrites (pattern + guard + target attribution),
+* its intrinsic **planners** (op -> ``SimJob`` list + assemble fn, with the
+  setup/data-stream split and driver chunking),
+* its numerics/ideal reference hooks (shape + fp32-oracle semantics fed to
+  the IR layer) and optional deployment kernels,
+* its VT1–VT3 validation declarations (conformance samples, VT2 fragment
+  pairs, VT3 ILA-vs-kernel checks, Table-2 mapping cases).
+
+Registering the target (:func:`register_target`) wires all of it into the
+registry-driven core: ``rules.accelerator_rewrites`` /
+``compile.compile_program`` enumerate targets, ``codegen.Executor``
+dispatches planning through the registry, ``validate`` runs whatever each
+target declares, and the conformance suite (``tests/test_target_conformance``)
+covers every declared intrinsic — a fourth backend needs zero edits to
+``core/`` (see ``docs/targets.md`` for a worked example).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import ir
+from ..core.egraph import Rewrite
+from ..core.ila import CompiledFragment, DataStream, FragmentCache, ILA, TARGETS
+
+
+@dataclasses.dataclass
+class SimJob:
+    """One fragment invocation: a data stream to run against a compiled
+    fragment, a vmap-safe full-region read, and the valid output window."""
+
+    frag: CompiledFragment
+    data: DataStream
+    read: Callable
+    window: Tuple
+
+
+@dataclasses.dataclass
+class PlanContext:
+    """What the Executor hands a planner: stat recording + per-target
+    execution options (e.g. ``{"wgt_bits": 16}`` for HLSCNN's updated
+    design), plus the driver-tiling helpers planners share."""
+
+    record: Callable[..., None]
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def chunk_rows(x: np.ndarray, max_rows: int) -> List[np.ndarray]:
+        return [x[i : i + max_rows] for i in range(0, x.shape[0], max_rows)]
+
+    @staticmethod
+    def ncmds(jobs: Sequence[SimJob]) -> int:
+        return sum(len(j.frag.setup) + len(j.data) for j in jobs)
+
+
+@dataclasses.dataclass
+class VT2Case:
+    """A compiler-IR fragment and its accelerator fragment, as IR exprs over
+    shared Vars — both interpreted with ideal (abstract-datatype) semantics
+    for the VT2 equivalence checks (random + exhaustive finite-domain)."""
+
+    name: str
+    ir_fragment: ir.Expr
+    accel_fragment: ir.Expr
+    var_shapes: Dict[str, Tuple[int, ...]]
+
+
+@dataclasses.dataclass
+class Intrinsic:
+    """One accelerator intrinsic op, as the target declares it.
+
+    planner      (ctx, call, args) -> (List[SimJob], assemble) — the ILA
+                 co-simulation path (None for pass-through markers).
+    kernel       optional deployment fast path (ctx, call, args) -> array.
+    passthrough  data-movement marker (store/load): executes as identity and
+                 is not counted as an invocation.
+    shape/ideal  IR extension hooks: shape(attrs, child_shapes) -> shape and
+                 ideal(attrs, args) -> array. None for ops the IR already
+                 understands (the bundled vocabulary).
+    sample       conformance-case generator: (rng) -> (args, attrs) drawing
+                 random operands *within the declared capability limits*.
+    tol          rel-Frobenius bound for ideal-vs-numerics conformance.
+    options      recommended Executor target-options for conformance runs.
+    """
+
+    op: str
+    planner: Optional[Callable] = None
+    kernel: Optional[Callable] = None
+    passthrough: bool = False
+    shape: Optional[Callable] = None
+    ideal: Optional[Callable] = None
+    sample: Optional[Callable] = None
+    tol: float = 0.05
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    doc: str = ""
+
+
+class AcceleratorTarget:
+    """One pluggable accelerator backend; see the module docstring."""
+
+    def __init__(
+        self,
+        name: str,
+        ila: ILA,
+        display_name: Optional[str] = None,
+        capabilities: Optional[Dict[str, Any]] = None,
+        doc: str = "",
+    ):
+        self.name = name
+        self.ila = ila
+        self.display_name = display_name or name
+        self.capabilities = dict(capabilities or {})
+        self.doc = doc
+        self.intrinsics: Dict[str, Intrinsic] = {}
+        #: per-target LRU of CompiledFragments (setup streams + cached state)
+        self.fragments = FragmentCache()
+        self._rewrite_fns: List[Callable[[], List[Rewrite]]] = []
+        self._vt2_fns: List[Callable[..., List[VT2Case]]] = []
+        #: name -> fn() -> (ok: bool, worst_abs_dev: float); ILA vs impl (VT3)
+        self.vt3_checks: Dict[str, Callable[[], Tuple[bool, float]]] = {}
+        self._mapping_fns: List[Callable] = []
+
+    # -- declaration ------------------------------------------------------
+    def add_intrinsic(self, intr: Intrinsic) -> Intrinsic:
+        self.intrinsics[intr.op] = intr
+        return intr
+
+    def add_rewrites(self, fn: Callable[[], List[Rewrite]]) -> None:
+        """Register a thunk producing this target's IR->intrinsic rewrites
+        (evaluated lazily so rewrite lists stay cheap to rebuild)."""
+        self._rewrite_fns.append(fn)
+
+    def add_vt2_cases(self, fn: Callable[..., List[VT2Case]]) -> None:
+        self._vt2_fns.append(fn)
+
+    def add_vt3_check(self, name: str, fn: Callable[[], Tuple[bool, float]]) -> None:
+        self.vt3_checks[name] = fn
+
+    def add_mapping_cases(self, fn: Callable) -> None:
+        """fn(rng) -> [(operation_label, case_fn)] where case_fn() returns
+        (reference, simulated) for one random input (Table 2)."""
+        self._mapping_fns.append(fn)
+
+    # -- what the core layers consume -------------------------------------
+    def rewrites(self) -> List[Rewrite]:
+        out: List[Rewrite] = []
+        for fn in self._rewrite_fns:
+            out.extend(dataclasses.replace(r, target=self.name) for r in fn())
+        return out
+
+    def planner(self, op: str) -> Optional[Callable]:
+        intr = self.intrinsics.get(op)
+        return intr.planner if intr is not None else None
+
+    def vt2_cases(self, dim_t: int = 16, dim_d: int = 64) -> List[VT2Case]:
+        out: List[VT2Case] = []
+        for fn in self._vt2_fns:
+            out.extend(fn(dim_t, dim_d))
+        return out
+
+    def mapping_cases(self, rng) -> List[Tuple[str, Callable]]:
+        out: List[Tuple[str, Callable]] = []
+        for fn in self._mapping_fns:
+            out.extend(fn(rng))
+        return out
+
+    def cache_info(self) -> Dict[str, Any]:
+        """Warm-cache health for the serving path: fragment-cache hit/miss
+        plus the ILA's jit trace / compiled-runner counters."""
+        return {"fragments": self.fragments.info(), **self.ila.jit_cache_info()}
+
+
+def register_target(target: AcceleratorTarget) -> AcceleratorTarget:
+    """Register ``target`` with the core: the registry (rewrites, planning,
+    validation enumeration) and the IR extension table (shape inference,
+    ideal oracle, cost model, invocation attribution)."""
+    TARGETS.register(target)
+    for intr in target.intrinsics.values():
+        ir.register_accel_op(
+            intr.op,
+            target.name,
+            shape_fn=intr.shape,
+            eval_fn=intr.ideal,
+            counts=not intr.passthrough,
+        )
+    return target

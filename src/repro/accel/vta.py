@@ -26,11 +26,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import ir
+from ..core.egraph import P, Rewrite, V as PV
 from ..core.ila import (
-    FRAGMENTS, ILA, BulkWrite, Command, CompiledFragment, DataStream,
-    IRAccelMapping, PackedStream, REGISTRY, fingerprint,
+    ILA, BulkWrite, Command, CompiledFragment, DataStream,
+    PackedStream, fingerprint,
 )
 from . import numerics
+from .target import (
+    AcceleratorTarget, Intrinsic, SimJob, VT2Case, register_target,
+)
 
 T = 16               # tile side (the 16x16 GEMM core)
 N_INP = 64           # inp SRAM tiles
@@ -52,6 +57,19 @@ ALU_SHR = 2
 ALU_MIN = 3
 
 vta = ILA("vta", vwidth=T)
+
+TARGET = AcceleratorTarget(
+    "vta",
+    vta,
+    display_name="VTA",
+    capabilities={
+        "tile": T, "n_inp": N_INP, "n_wgt": N_WGT, "n_acc": N_ACC,
+        "numerics": "int8xint8->int32",
+    },
+    doc="fine-grained programmable accelerator: 16x16 int8 GEMM core + vector ALU",
+)
+FRAGMENTS = TARGET.fragments
+
 vta.state("dram", lambda: jnp.zeros((DRAM_TILES * T, T), jnp.float32))
 vta.state("inp_sram", lambda: jnp.zeros((N_INP, T, T), jnp.float32))
 vta.state("wgt_sram", lambda: jnp.zeros((N_WGT, T, T), jnp.float32))
@@ -356,9 +374,204 @@ def build_relu_fragment(a_int: np.ndarray):
     return _build_alu_fragment("relu", a_int)
 
 
-REGISTRY.register(IRAccelMapping("vta-gemm", "vta", "vta_gemm", build_gemm_fragment,
-                                 "tiled int8 GEMM on the 16x16 core"))
-REGISTRY.register(IRAccelMapping("vta-add", "vta", "vta_add", build_add_fragment,
-                                 "vector ALU elementwise add"))
-REGISTRY.register(IRAccelMapping("vta-relu", "vta", "vta_relu", build_relu_fragment,
-                                 "vector ALU relu (max with 0)"))
+# --------------------------------------------------------------------------
+# Target declaration: rewrites, planners, validation cases, registration
+# --------------------------------------------------------------------------
+
+
+def _rewrites():
+    return [
+        Rewrite("vta-gemm", P("dense", PV("a"), PV("b")), P("vta_gemm", PV("a"), PV("b"))),
+        Rewrite("vta-add", P("add", PV("a"), PV("b")), P("vta_add", PV("a"), PV("b"))),
+        Rewrite("vta-relu", P("relu", PV("x")), P("vta_relu", PV("x"))),
+    ]
+
+
+def kernel_gemm(ctx, x, args):
+    """Deployment fast path: the int8_gemm Pallas kernel."""
+    from ..kernels import ops as kops
+
+    a, b = args
+    ideal = a @ b.T
+    sa = np.abs(a).max() / 127.0 if np.abs(a).max() > 0 else 1.0
+    sb = np.abs(b).max() / 127.0 if np.abs(b).max() > 0 else 1.0
+    a8 = np.clip(np.round(a / sa), -127, 127)
+    b8 = np.clip(np.round(b / sb), -127, 127)
+    out32 = np.asarray(
+        kops.int8_gemm(jnp.asarray(a8, jnp.int8), jnp.asarray(b8, jnp.int8))
+    ).astype(np.float64)
+    out = out32 * sa * sb
+    ctx.record("vta_gemm", "vta-kernel", out, ideal, 0)
+    return out.astype(np.float32)
+
+
+def plan_gemm(ctx, x, args):
+    a, b = args
+    ideal = a @ b.T
+    sa = np.abs(a).max() / 127.0 if np.abs(a).max() > 0 else 1.0
+    sb = np.abs(b).max() / 127.0 if np.abs(b).max() > 0 else 1.0
+    a8 = np.clip(np.round(a / sa), -127, 127)
+    b8 = np.clip(np.round(b / sb), -127, 127)
+    # tile rows so SRAM limits hold: mt*kt <= N_INP etc.
+    kt = (a8.shape[1] + T - 1) // T
+    max_m = max(1, (N_INP // kt)) * T
+    max_n = max(1, (N_WGT // kt)) * T
+    mt_layout = (min(max_m, a8.shape[0]) + T - 1) // T
+    jobs, layout = [], []
+    for mi in range(0, a8.shape[0], max_m):
+        a_chunk = a8[mi : mi + max_m]
+        row = []
+        for nj in range(0, b8.shape[0], max_n):
+            b_chunk = b8[nj : nj + max_n]
+            frag = gemm_fragment(b_chunk, mt_layout)
+            jobs.append(
+                SimJob(frag, pack_gemm_data(frag, a_chunk), read_gemm_full(frag),
+                       (slice(0, a_chunk.shape[0]), slice(0, b_chunk.shape[0])))
+            )
+            row.append(len(jobs) - 1)
+        layout.append(row)
+
+    def assemble(outs):
+        out32 = np.concatenate(
+            [np.concatenate([outs[i] for i in row], axis=1) for row in layout],
+            axis=0,
+        ).astype(np.float64)
+        out = out32 * sa * sb
+        ctx.record("vta_gemm", "vta", out, ideal, ctx.ncmds(jobs))
+        return out.astype(np.float32)
+
+    return jobs, assemble
+
+
+def plan_add(ctx, x, args):
+    a, b = args
+    # elementwise adds stay in the accumulator's wide fixed point; the
+    # driver scales both operands onto a shared int grid
+    s = max(np.abs(a).max(), np.abs(b).max(), 1e-9) / (2 ** 20)
+    ai = np.round(np.broadcast_to(a, np.broadcast_shapes(a.shape, b.shape)) / s)
+    bi = np.round(np.broadcast_to(b, ai.shape) / s)
+    a2 = ai.reshape(-1, ai.shape[-1]) if ai.ndim > 1 else ai.reshape(1, -1)
+    b2 = bi.reshape(a2.shape)
+    ct = (a2.shape[1] + T - 1) // T
+    max_r = max(1, (N_ACC // 2) // ct) * T
+    jobs = []
+    for ri in range(0, a2.shape[0], max_r):
+        ac, bc = a2[ri : ri + max_r], b2[ri : ri + max_r]
+        rt = (ac.shape[0] + T - 1) // T
+        frag = alu_fragment(rt, ct, "add")
+        jobs.append(
+            SimJob(frag, pack_alu_data(frag, ac, bc), read_alu_full(frag),
+                   (slice(0, ac.shape[0]), slice(0, ac.shape[1])))
+        )
+
+    def assemble(outs):
+        out = (np.concatenate(outs, axis=0) * s).reshape(ai.shape).astype(np.float32)
+        ctx.record("vta_add", "vta", out, np.asarray(a) + np.asarray(b),
+                   ctx.ncmds(jobs))
+        return out
+
+    return jobs, assemble
+
+
+def plan_relu(ctx, x, args):
+    (a,) = args
+    s = max(np.abs(a).max(), 1e-9) / (2 ** 20)
+    ai = np.round(a / s)
+    a2 = ai.reshape(-1, ai.shape[-1]) if ai.ndim > 1 else ai.reshape(1, -1)
+    ct = (a2.shape[1] + T - 1) // T
+    max_r = max(1, (N_ACC // 2) // ct) * T
+    jobs = []
+    for ri in range(0, a2.shape[0], max_r):
+        ac = a2[ri : ri + max_r]
+        rt = (ac.shape[0] + T - 1) // T
+        frag = alu_fragment(rt, ct, "relu")
+        jobs.append(
+            SimJob(frag, pack_alu_data(frag, ac), read_alu_full(frag),
+                   (slice(0, ac.shape[0]), slice(0, ac.shape[1])))
+        )
+
+    def assemble(outs):
+        out = (np.concatenate(outs, axis=0) * s).reshape(a.shape).astype(np.float32)
+        ctx.record("vta_relu", "vta", out, np.maximum(a, 0), ctx.ncmds(jobs))
+        return out
+
+    return jobs, assemble
+
+
+def _sample_gemm(r):
+    M, K, N = int(r.integers(1, 21)), int(r.integers(1, 41)), int(r.integers(1, 21))
+    return [
+        r.integers(-120, 120, (M, K)).astype(np.float32),
+        r.integers(-120, 120, (N, K)).astype(np.float32),
+    ], {}
+
+
+def _sample_add(r):
+    R, C = int(r.integers(1, 21)), int(r.integers(1, 25))
+    return [
+        r.standard_normal((R, C)).astype(np.float32),
+        r.standard_normal((R, C)).astype(np.float32),
+    ], {}
+
+
+def _sample_relu(r):
+    R, C = int(r.integers(1, 21)), int(r.integers(1, 25))
+    return [r.standard_normal((R, C)).astype(np.float32)], {}
+
+
+def _vt2(dim_t, dim_d):
+    a = ir.Var("a", (dim_t, dim_d))
+    w = ir.Var("w", (dim_d, dim_d))
+    return [
+        VT2Case(
+            "vta-gemm",
+            ir.dense(a, w),
+            ir.call("vta_gemm", a, w),
+            {"a": (dim_t, dim_d), "w": (dim_d, dim_d)},
+        ),
+    ]
+
+
+def _vt3_gemm(n: int = 3, seed: int = 0):
+    """VTA ILA GEMM vs the int8_gemm Pallas kernel: exact equality."""
+    from ..kernels import ops as kops
+
+    rng = np.random.default_rng(seed)
+    worst = 0.0
+    for _ in range(n):
+        a = rng.integers(-100, 100, (24, 48)).astype(np.float32)
+        b = rng.integers(-100, 100, (20, 48)).astype(np.float32)
+        cmds, rd = build_gemm_fragment(a, b)
+        ila_out = np.asarray(rd(vta.simulate(cmds)))
+        kern_out = np.asarray(
+            kops.int8_gemm(jnp.asarray(a, jnp.int8), jnp.asarray(b, jnp.int8))
+        ).astype(np.float32)
+        worst = max(worst, float(np.abs(ila_out - kern_out).max()))
+    return worst == 0.0, worst
+
+
+def _mapping_cases(rng):
+    def gemm_case():
+        a = rng.integers(-100, 100, (16, 64)).astype(np.float32)
+        b = rng.integers(-100, 100, (16, 64)).astype(np.float32)
+        cmds, rd = build_gemm_fragment(a, b)
+        out = rd(vta.simulate(cmds))
+        return a @ b.T, out
+
+    return [("GEMM", gemm_case)]
+
+
+TARGET.add_intrinsic(Intrinsic(
+    "vta_gemm", planner=plan_gemm, kernel=kernel_gemm, sample=_sample_gemm,
+    tol=0.02, doc="tiled int8 GEMM on the 16x16 core"))
+TARGET.add_intrinsic(Intrinsic(
+    "vta_add", planner=plan_add, sample=_sample_add, tol=1e-4,
+    doc="vector ALU elementwise add"))
+TARGET.add_intrinsic(Intrinsic(
+    "vta_relu", planner=plan_relu, sample=_sample_relu, tol=1e-4,
+    doc="vector ALU relu (max with 0)"))
+TARGET.add_rewrites(_rewrites)
+TARGET.add_vt2_cases(_vt2)
+TARGET.add_vt3_check("gemm_ila_vs_int8_gemm_kernel", _vt3_gemm)
+TARGET.add_mapping_cases(_mapping_cases)
+register_target(TARGET)

@@ -9,12 +9,15 @@ Figure 5d) and either
   accelerator's custom numerics (the application-level co-simulation path,
   Section 2.3.2), or
 * ``mode="kernel"``  — executed on the TPU-native Pallas fast path with the
-  same numeric semantics (deployment path), or
+  same numeric semantics where the target declares one (deployment path), or
 * ``mode="ideal"``   — fp32 reference (the IR interpreter; oracle).
 
-The driver layer tiles tensors that exceed device SRAM (row-chunking for
-FlexASR, 16x16 tiling for VTA is inside its fragment builder) — the same
-job a real device driver does.
+The Executor is **target-agnostic**: every intrinsic dispatches through the
+:data:`~repro.core.ila.TARGETS` registry to the planner its
+``AcceleratorTarget`` declared (``repro/accel/target.py``). Planners own the
+driver-layer tiling (row-chunking, 16x16 tiles, column splits) and return
+``SimJob`` lists; this module only schedules and batches them. Adding an
+accelerator therefore never touches this file.
 
 Execution engine
 ----------------
@@ -24,10 +27,8 @@ the fragment-compiler fast path of :mod:`..core.ila`: each op is *planned*
 into simulation jobs (CompiledFragment + per-sample DataStream + output
 window), jobs sharing a fragment and stream signature are batched through
 one ``vmap``-ed simulator call, and fragment setup (weight load) is
-simulated once per parameter set and cached. The batch/head/tile loops that
-previously ran fragments one at a time — LSTM batch, attention heads,
-conv2d batch, VTA/pool row tiles — all flow through this path, as does
-minibatched evaluation via :meth:`Executor.run_many`.
+simulated once per parameter set and cached in the owning target's
+fragment cache. Minibatched evaluation flows through :meth:`Executor.run_many`.
 
 ``engine="jit"`` re-derives and scans the full command stream per invocation
 (the pre-fragment-compiler behavior); ``engine="eager"`` interprets commands
@@ -35,7 +36,10 @@ one by one. Both exist as bit-exact references for the compiled path.
 
 Per-invocation statistics (op, rel-error vs ideal, value ranges) are
 collected — the "handy debugging information" the paper's authors gave the
-accelerator developers to diagnose the HLSCNN weight-quantization bug.
+accelerator developers to diagnose the HLSCNN weight-quantization bug —
+and aggregated per target by :meth:`Executor.stats_summary`;
+:meth:`Executor.cache_info` surfaces per-target warm-cache health for the
+serving path.
 """
 from __future__ import annotations
 
@@ -43,16 +47,11 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from . import ir
-from .ila import CompiledFragment, DataStream
-from ..accel import flexasr as fa
-from ..accel import hlscnn as hc
-from ..accel import vta as vt
-from ..accel import numerics
-from ..kernels import ops as kops
+from .ila import TARGETS
+from ..accel.target import PlanContext, SimJob  # importing registers bundled targets
 
 
 @dataclasses.dataclass
@@ -65,34 +64,29 @@ class InvocationStat:
     n_commands: int
 
 
-@dataclasses.dataclass
-class SimJob:
-    """One fragment invocation: a data stream to run against a compiled
-    fragment, a vmap-safe full-region read, and the valid output window."""
-
-    frag: CompiledFragment
-    data: DataStream
-    read: Callable
-    window: Tuple
-
-
 class Executor:
-    """Executes an extracted IR program, offloading accelerator intrinsics."""
+    """Executes an extracted IR program, offloading accelerator intrinsics.
+
+    ``target_options`` carries per-target execution options keyed by target
+    name (e.g. a weight-datatype selection for a backend with configurable
+    numerics); planners read them through their
+    :class:`~repro.accel.target.PlanContext`.
+    """
 
     def __init__(
         self,
         mode: str = "ila",
-        hlscnn_wgt_bits: int = 8,
         collect_stats: bool = True,
         jit_sim: bool = True,
         engine: Optional[str] = None,
+        target_options: Optional[Dict[str, Dict[str, Any]]] = None,
     ):
         assert mode in ("ila", "kernel", "ideal")
         self.mode = mode
-        self.hlscnn_wgt_bits = hlscnn_wgt_bits
         self.collect_stats = collect_stats
         self.engine = engine or ("compiled" if jit_sim else "eager")
         assert self.engine in ("compiled", "jit", "eager")
+        self.target_options = {k: dict(v) for k, v in (target_options or {}).items()}
         self.stats: List[InvocationStat] = []
 
     # ------------------------------------------------------------------
@@ -131,7 +125,11 @@ class Executor:
                     [np.asarray(args_b[k][s]) for k in range(len(args_b))]
                     for s in range(B)
                 ]
-                if self.mode == "ila" and self.engine == "compiled" and x.op in self._PLANNERS:
+                if (
+                    self.mode == "ila"
+                    and self.engine == "compiled"
+                    and TARGETS.has_planner(x.op)
+                ):
                     plans, jobs = [], []
                     for s in range(B):
                         s_jobs, assemble = self._plan(x, sample_args[s])
@@ -163,16 +161,19 @@ class Executor:
             InvocationStat(op, backend, err, float(out.min()), float(out.max()), ncmds)
         )
 
+    def _ctx(self, target) -> PlanContext:
+        return PlanContext(
+            record=self._record, options=self.target_options.get(target.name, {})
+        )
+
     def _exec_accel(self, x: ir.Call, args: List[np.ndarray]):
-        op = x.op
         if self.mode == "ideal":
             return self._ideal(x, args)
-        if op in ("fasr_store", "fasr_load"):
+        target, intr = TARGETS.intrinsic(x.op)
+        if intr.passthrough:
             return args[0]
-        if self.mode == "kernel" and op == "fasr_linear":
-            return self._fasr_linear_kernel(x, args)
-        if self.mode == "kernel" and op == "vta_gemm":
-            return self._vta_gemm_kernel(x, args)
+        if self.mode == "kernel" and intr.kernel is not None:
+            return intr.kernel(self._ctx(target), x, args)
         jobs, assemble = self._plan(x, args)
         return assemble(self._execute_jobs(jobs))
 
@@ -180,6 +181,14 @@ class Executor:
         vs = [ir.Var(f"_{i}", np.shape(a)) for i, a in enumerate(args)]
         env = {f"_{i}": a for i, a in enumerate(args)}
         return ir.interpret(ir.Call(x.op, tuple(vs), x.attrs), env)
+
+    def _plan(self, x: ir.Call, args) -> Tuple[List[SimJob], Callable]:
+        target, intr = TARGETS.intrinsic(x.op)
+        if intr.planner is None:
+            raise NotImplementedError(
+                f"target {target.name!r} declares no planner for {x.op!r}"
+            )
+        return intr.planner(self._ctx(target), x, args)
 
     # -- job execution ---------------------------------------------------
     def _execute_jobs(self, jobs: List[SimJob]) -> List[np.ndarray]:
@@ -209,289 +218,25 @@ class Executor:
                     results[i] = fulls[bi][jobs[i].window]
         return results
 
-    def _plan(self, x: ir.Call, args) -> Tuple[List[SimJob], Callable]:
-        return self._PLANNERS[x.op](self, x, args)
+    # -- statistics & cache surfacing ------------------------------------
+    def reset_stats(self) -> None:
+        self.stats.clear()
 
-    def _chunk_rows(self, x, max_rows):
-        return [x[i : i + max_rows] for i in range(0, x.shape[0], max_rows)]
-
-    def _ncmds(self, jobs: List[SimJob]) -> int:
-        return sum(len(j.frag.setup) + len(j.data) for j in jobs)
-
-    # -- FlexASR ---------------------------------------------------------
-    def _fasr_linear_kernel(self, x: ir.Call, args):
-        a, w, b = args
-        orig_shape = a.shape
-        a2 = a.reshape(-1, a.shape[-1])
-        ideal_full = a2 @ w.T + b
-        out = np.asarray(kops.af_linear(jnp.asarray(a2), jnp.asarray(w), jnp.asarray(b)))
-        self._record("fasr_linear", "flexasr-kernel", out, ideal_full, 0)
-        return out.reshape(orig_shape[:-1] + (w.shape[0],))
-
-    def _plan_fasr_linear(self, x: ir.Call, args):
-        a, w, b = args
-        orig_shape = a.shape
-        a2 = a.reshape(-1, a.shape[-1])
-        O = w.shape[0]
-        ideal_full = a2 @ w.T + b
-        frag = fa.linear_fragment(w, b)
-        jobs = [
-            SimJob(frag, fa.pack_linear_data(frag, chunk), fa.read_full,
-                   (slice(0, chunk.shape[0]), slice(0, O)))
-            for chunk in self._chunk_rows(a2, fa.MAX_TS)
-        ]
-
-        def assemble(outs):
-            out = np.concatenate(outs, axis=0)
-            self._record("fasr_linear", "flexasr", out, ideal_full, self._ncmds(jobs))
-            return out.reshape(orig_shape[:-1] + (O,))
-
-        return jobs, assemble
-
-    def _plan_fasr_lstm(self, x: ir.Call, args):
-        xs, wi, wh, b = args
-        T, B, I = xs.shape
-        H = wh.shape[1]
-        ideal = np.asarray(
-            ir._lstm(jnp.asarray(xs), jnp.asarray(wi), jnp.asarray(wh), jnp.asarray(b))
-        )
-        frag = fa.lstm_fragment(wi, wh, b)
-        jobs = [
-            SimJob(frag, fa.pack_lstm_data(frag, xs[:, bi]), fa.read_full,
-                   (slice(0, T), slice(0, H)))
-            for bi in range(B)
-        ]
-
-        def assemble(outs):
-            out = np.stack(outs, axis=1)
-            self._record("fasr_lstm", "flexasr", out, ideal, self._ncmds(jobs))
-            return out
-
-        return jobs, assemble
-
-    def _plan_fasr_pool(self, x: ir.Call, args, kind):
-        (a,) = args
-        T = a.shape[0]
-        pairs = a[: T - T % 2].reshape(T // 2, 2, *a.shape[1:])
-        ideal = pairs.max(1) if kind == "max" else pairs.mean(1)
-        jobs, layout = [], []
-        for chunk in self._chunk_rows(a, fa.MAX_TS):
-            # pooling is elementwise across features: chunk wide matrices
-            # column-wise to fit the device's MAX_IN lanes
-            cols = []
-            for c0 in range(0, chunk.shape[1], fa.MAX_IN):
-                piece = chunk[:, c0 : c0 + fa.MAX_IN]
-                frag = fa.pool_fragment(piece.shape[1], kind)
-                jobs.append(
-                    SimJob(frag, fa.pack_pool_data(frag, piece), fa.read_full,
-                           (slice(0, piece.shape[0] // 2), slice(0, piece.shape[1])))
-                )
-                cols.append(len(jobs) - 1)
-            layout.append(cols)
-
-        def assemble(outs):
-            rows = [np.concatenate([outs[i] for i in cols], axis=1) for cols in layout]
-            out = np.concatenate(rows, axis=0)
-            self._record(f"fasr_{kind}pool", "flexasr", out, ideal, self._ncmds(jobs))
-            return out
-
-        return jobs, assemble
-
-    def _plan_fasr_layernorm(self, x: ir.Call, args):
-        a, g, b = args
-        orig = a.shape
-        a2 = a.reshape(-1, a.shape[-1])
-        mu = a2.mean(-1, keepdims=True)
-        va = a2.var(-1, keepdims=True)
-        ideal = (a2 - mu) / np.sqrt(va + 1e-5) * g + b
-        frag = fa.layernorm_fragment(g, b)
-        D = a2.shape[1]
-        jobs = [
-            SimJob(frag, fa.pack_layernorm_data(frag, chunk), fa.read_full,
-                   (slice(0, chunk.shape[0]), slice(0, D)))
-            for chunk in self._chunk_rows(a2, fa.MAX_TS)
-        ]
-
-        def assemble(outs):
-            out = np.concatenate(outs, axis=0).reshape(orig)
-            self._record("fasr_layernorm", "flexasr", out, ideal, self._ncmds(jobs))
-            return out
-
-        return jobs, assemble
-
-    def _plan_fasr_attention(self, x: ir.Call, args):
-        q, k, v = args
-        ideal = np.asarray(ir._attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)))
-        D = q.shape[-1]
-        frag = fa.attention_fragment(D)
-        if q.ndim == 2:
-            jobs = [
-                SimJob(frag, fa.pack_attention_data(frag, q, k, v), fa.read_full,
-                       (slice(0, q.shape[0]), slice(0, v.shape[-1])))
-            ]
-
-            def assemble(outs):
-                self._record("fasr_attention", "flexasr", outs[0], ideal, self._ncmds(jobs))
-                return outs[0]
-
-            return jobs, assemble
-        # batch of heads: one invocation per (batch) slice, batched in sim
-        q2 = q.reshape(-1, q.shape[-2], q.shape[-1])
-        k2 = k.reshape(-1, k.shape[-2], k.shape[-1])
-        v2 = v.reshape(-1, v.shape[-2], v.shape[-1])
-        jobs = [
-            SimJob(frag, fa.pack_attention_data(frag, q2[i], k2[i], v2[i]), fa.read_full,
-                   (slice(0, q2.shape[1]), slice(0, v2.shape[2])))
-            for i in range(q2.shape[0])
-        ]
-
-        def assemble(outs):
-            out = np.stack(outs).reshape(q.shape[:-1] + (v.shape[-1],))
-            self._record("fasr_attention", "flexasr", out, ideal, self._ncmds(jobs))
-            return out
-
-        return jobs, assemble
-
-    # -- HLSCNN -----------------------------------------------------------
-    def _plan_hlscnn_conv2d(self, x: ir.Call, args):
-        a, w = args
-        strides = x.attr("strides")
-        padding = x.attr("padding")
-        ideal = np.asarray(ir._conv2d(jnp.asarray(a), jnp.asarray(w), strides, padding))
-        if padding != (0, 0):
-            a = np.pad(
-                a, ((0, 0), (padding[0], padding[0]), (padding[1], padding[1]), (0, 0))
+    def stats_summary(self) -> Dict[str, Dict[str, float]]:
+        """Aggregate invocation stats per target: invocation count, total
+        interface commands, worst relative error vs the fp32 oracle."""
+        out: Dict[str, Dict[str, float]] = {}
+        for s in self.stats:
+            tname = ir.accel_op_target(s.op) or s.backend
+            d = out.setdefault(
+                tname, {"invocations": 0, "commands": 0, "max_rel_err": 0.0}
             )
-        frag = hc.conv2d_fragment(
-            w, a.shape[1:], strides, wgt_bits=self.hlscnn_wgt_bits
-        )
-        window = hc.out_slice(frag)
-        jobs = [
-            SimJob(frag, hc.pack_conv2d_data(frag, a[ni : ni + 1]), hc.read_full, window)
-            for ni in range(a.shape[0])
-        ]
+            d["invocations"] += 1
+            d["commands"] += s.n_commands
+            d["max_rel_err"] = max(d["max_rel_err"], s.rel_err)
+        return out
 
-        def assemble(outs):
-            out = np.concatenate(outs, axis=0)
-            self._record("hlscnn_conv2d", "hlscnn", out, ideal, self._ncmds(jobs))
-            return out
-
-        return jobs, assemble
-
-    # -- VTA ---------------------------------------------------------------
-    def _vta_gemm_kernel(self, x: ir.Call, args):
-        a, b = args
-        ideal = a @ b.T
-        sa = np.abs(a).max() / 127.0 if np.abs(a).max() > 0 else 1.0
-        sb = np.abs(b).max() / 127.0 if np.abs(b).max() > 0 else 1.0
-        a8 = np.clip(np.round(a / sa), -127, 127)
-        b8 = np.clip(np.round(b / sb), -127, 127)
-        out32 = np.asarray(
-            kops.int8_gemm(jnp.asarray(a8, jnp.int8), jnp.asarray(b8, jnp.int8))
-        ).astype(np.float64)
-        out = out32 * sa * sb
-        self._record("vta_gemm", "vta", out, ideal, 0)
-        return out.astype(np.float32)
-
-    def _plan_vta_gemm(self, x: ir.Call, args):
-        a, b = args
-        ideal = a @ b.T
-        sa = np.abs(a).max() / 127.0 if np.abs(a).max() > 0 else 1.0
-        sb = np.abs(b).max() / 127.0 if np.abs(b).max() > 0 else 1.0
-        a8 = np.clip(np.round(a / sa), -127, 127)
-        b8 = np.clip(np.round(b / sb), -127, 127)
-        # tile rows so SRAM limits hold: mt*kt <= N_INP etc.
-        kt = (a8.shape[1] + vt.T - 1) // vt.T
-        max_m = max(1, (vt.N_INP // kt)) * vt.T
-        max_n = max(1, (vt.N_WGT // kt)) * vt.T
-        mt_layout = (min(max_m, a8.shape[0]) + vt.T - 1) // vt.T
-        jobs, layout = [], []
-        for mi in range(0, a8.shape[0], max_m):
-            a_chunk = a8[mi : mi + max_m]
-            row = []
-            for nj in range(0, b8.shape[0], max_n):
-                b_chunk = b8[nj : nj + max_n]
-                frag = vt.gemm_fragment(b_chunk, mt_layout)
-                jobs.append(
-                    SimJob(frag, vt.pack_gemm_data(frag, a_chunk), vt.read_gemm_full(frag),
-                           (slice(0, a_chunk.shape[0]), slice(0, b_chunk.shape[0])))
-                )
-                row.append(len(jobs) - 1)
-            layout.append(row)
-
-        def assemble(outs):
-            out32 = np.concatenate(
-                [np.concatenate([outs[i] for i in row], axis=1) for row in layout],
-                axis=0,
-            ).astype(np.float64)
-            out = out32 * sa * sb
-            self._record("vta_gemm", "vta", out, ideal, self._ncmds(jobs))
-            return out.astype(np.float32)
-
-        return jobs, assemble
-
-    def _plan_vta_add(self, x: ir.Call, args):
-        a, b = args
-        # elementwise adds stay in the accumulator's wide fixed point; the
-        # driver scales both operands onto a shared int grid
-        s = max(np.abs(a).max(), np.abs(b).max(), 1e-9) / (2 ** 20)
-        ai = np.round(np.broadcast_to(a, np.broadcast_shapes(a.shape, b.shape)) / s)
-        bi = np.round(np.broadcast_to(b, ai.shape) / s)
-        a2 = ai.reshape(-1, ai.shape[-1]) if ai.ndim > 1 else ai.reshape(1, -1)
-        b2 = bi.reshape(a2.shape)
-        ct = (a2.shape[1] + vt.T - 1) // vt.T
-        max_r = max(1, (vt.N_ACC // 2) // ct) * vt.T
-        jobs = []
-        for ri in range(0, a2.shape[0], max_r):
-            ac, bc = a2[ri : ri + max_r], b2[ri : ri + max_r]
-            rt = (ac.shape[0] + vt.T - 1) // vt.T
-            frag = vt.alu_fragment(rt, ct, "add")
-            jobs.append(
-                SimJob(frag, vt.pack_alu_data(frag, ac, bc), vt.read_alu_full(frag),
-                       (slice(0, ac.shape[0]), slice(0, ac.shape[1])))
-            )
-
-        def assemble(outs):
-            out = (np.concatenate(outs, axis=0) * s).reshape(ai.shape).astype(np.float32)
-            self._record("vta_add", "vta", out, np.asarray(a) + np.asarray(b),
-                         self._ncmds(jobs))
-            return out
-
-        return jobs, assemble
-
-    def _plan_vta_relu(self, x: ir.Call, args):
-        (a,) = args
-        s = max(np.abs(a).max(), 1e-9) / (2 ** 20)
-        ai = np.round(a / s)
-        a2 = ai.reshape(-1, ai.shape[-1]) if ai.ndim > 1 else ai.reshape(1, -1)
-        ct = (a2.shape[1] + vt.T - 1) // vt.T
-        max_r = max(1, (vt.N_ACC // 2) // ct) * vt.T
-        jobs = []
-        for ri in range(0, a2.shape[0], max_r):
-            ac = a2[ri : ri + max_r]
-            rt = (ac.shape[0] + vt.T - 1) // vt.T
-            frag = vt.alu_fragment(rt, ct, "relu")
-            jobs.append(
-                SimJob(frag, vt.pack_alu_data(frag, ac), vt.read_alu_full(frag),
-                       (slice(0, ac.shape[0]), slice(0, ac.shape[1])))
-            )
-
-        def assemble(outs):
-            out = (np.concatenate(outs, axis=0) * s).reshape(a.shape).astype(np.float32)
-            self._record("vta_relu", "vta", out, np.maximum(a, 0), self._ncmds(jobs))
-            return out
-
-        return jobs, assemble
-
-    _PLANNERS = {
-        "fasr_linear": _plan_fasr_linear,
-        "fasr_lstm": _plan_fasr_lstm,
-        "fasr_maxpool": lambda self, x, a: self._plan_fasr_pool(x, a, "max"),
-        "fasr_meanpool": lambda self, x, a: self._plan_fasr_pool(x, a, "mean"),
-        "fasr_layernorm": _plan_fasr_layernorm,
-        "fasr_attention": _plan_fasr_attention,
-        "hlscnn_conv2d": _plan_hlscnn_conv2d,
-        "vta_gemm": _plan_vta_gemm,
-        "vta_add": _plan_vta_add,
-        "vta_relu": _plan_vta_relu,
-    }
+    def cache_info(self, targets: Optional[Sequence[str]] = None) -> Dict[str, Dict]:
+        """Per-target warm-cache health: fragment-cache hits/misses plus jit
+        trace / compiled-runner counts (serving-path observability)."""
+        return {t.name: t.cache_info() for t in TARGETS.all(targets)}

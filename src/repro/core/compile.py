@@ -25,13 +25,18 @@ class CompileResult:
 
 def compile_program(
     e: ir.Expr,
-    targets: Sequence[str] = ("flexasr", "hlscnn", "vta"),
+    targets: Optional[Sequence[str]] = None,
     flexible: bool = True,
     iters: int = 12,
     node_limit: int = 40_000,
     cost_fn=default_cost,
 ) -> CompileResult:
-    """Run flexible (or exact) matching and extract the best program."""
+    """Run flexible (or exact) matching and extract the best program.
+
+    ``targets`` selects registered accelerator targets by name; the default
+    (None) compiles against *every* registered target — a newly registered
+    backend starts receiving offloads with no compiler change.
+    """
     eg = EGraph()
     root = eg.add_expr(e)
     stats = run_rewrites(eg, R.all_rewrites(targets, flexible), iters, node_limit)

@@ -362,7 +362,23 @@ def _op_shape(op, attrs, child_shapes):
         return cs[0][:-1] + (cs[2][-1],)
     if op in ("fasr_maxpool", "fasr_meanpool"):
         return (cs[0][0] // 2,) + tuple(cs[0][1:])
+    ext = ir.accel_op_shape_fn(op)
+    if ext is not None:
+        return tuple(ext(dict(attrs), list(cs)))
     return None
+
+
+# -- helpers for rewrite guards/appliers (used by plugin targets too) -------
+
+
+def shape_of(eg: EGraph, cid: int) -> Tuple[int, ...]:
+    """The e-class shape analysis value for ``cid`` (canonicalized)."""
+    return eg.shape[eg.find(cid)]
+
+
+def add_op(eg: EGraph, op: str, children, **attrs) -> int:
+    """Add an op e-node with sorted static attrs; returns its e-class id."""
+    return eg.add(ENode(op_head(op, tuple(sorted(attrs.items()))), tuple(children)))
 
 
 # --------------------------------------------------------------------------
@@ -377,6 +393,7 @@ class Rewrite:
     rhs: Any = None                       # template, or None if applier used
     applier: Optional[Callable] = None    # fn(egraph, cid, subst) -> new cid | None
     guard: Optional[Callable] = None      # fn(egraph, cid, subst) -> bool
+    target: str = "ir"                    # owning accelerator target ("ir" = generic)
 
 
 def run_rewrites(
@@ -385,16 +402,36 @@ def run_rewrites(
     iters: int = 12,
     node_limit: int = 40_000,
 ) -> Dict[str, Any]:
-    """Equality saturation: apply rules to fixpoint / limits. Returns stats."""
-    stats = {"iterations": 0, "applications": 0, "saturated": False}
+    """Equality saturation: apply rules to fixpoint / limits. Returns stats.
+
+    ``stats["match_counts"]`` tallies pattern matches per rewrite, keyed by
+    the owning target; ``stats["truncated"]`` / ``stats["dropped_matches"]``
+    flag node-limit truncation explicitly — a truncated run is *not* the same
+    as "no match found", and silent truncation used to look exactly like it.
+    """
+    stats: Dict[str, Any] = {
+        "iterations": 0,
+        "applications": 0,
+        "saturated": False,
+        "truncated": False,
+        "dropped_matches": 0,
+        "match_counts": {},
+    }
+    counts: Dict[str, Dict[str, int]] = stats["match_counts"]
     for it in range(iters):
         matches = []
         for r in rules:
-            for cid, subst in eg.search(r.lhs):
+            found = eg.search(r.lhs)
+            if found:
+                per = counts.setdefault(r.target, {})
+                per[r.name] = per.get(r.name, 0) + len(found)
+            for cid, subst in found:
                 matches.append((r, cid, subst))
         changed = False
-        for r, cid, subst in matches:
+        for mi, (r, cid, subst) in enumerate(matches):
             if eg.n_nodes > node_limit:
+                stats["truncated"] = True
+                stats["dropped_matches"] += len(matches) - mi
                 break
             cid = eg.find(cid)
             if r.guard is not None and not r.guard(eg, cid, subst):
@@ -415,6 +452,7 @@ def run_rewrites(
             stats["saturated"] = True
             break
         if eg.n_nodes > node_limit:
+            stats["truncated"] = True
             break
     return stats
 

@@ -620,40 +620,62 @@ class FragmentCache:
         return {"size": len(self._entries), "hits": self.hits, "misses": self.misses}
 
 
-#: process-wide fragment cache shared by all Executors (keys are content
-#: fingerprints, so distinct parameter sets never collide)
-FRAGMENTS = FragmentCache()
+# --------------------------------------------------------------------------
+# Target registry (the AcceleratorTarget plugin surface)
+# --------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class IRAccelMapping:
-    """An IR-accelerator mapping (Figure 3): the compiler-IR pattern (as an
-    IR op name + arity) on one side, and a fragment *builder* on the other.
-
-    ``build_fragment(inputs...) -> (commands, read_out)`` assembles the
-    command stream for concrete operand values and returns a function
-    extracting the result from final architectural state.
+class TargetRegistry:
+    """Process-wide registry of :class:`~repro.accel.target.AcceleratorTarget`
+    plugins. The core compile/codegen/validate layers are written against
+    this registry only — they never name a backend. Registering a target
+    (``repro.accel.target.register_target``) is the whole integration step:
+    its rewrites join flexible matching, its planners join the Executor, its
+    declared validation cases join VT1–VT3 and the conformance suite.
     """
 
-    name: str
-    accelerator: str
-    ir_op: str
-    build_fragment: Callable[..., Tuple[List[Command], Callable[[State], jnp.ndarray]]]
-    doc: str = ""
-
-
-class MappingRegistry:
     def __init__(self):
-        self._maps: Dict[str, IRAccelMapping] = {}
+        self._targets: "OrderedDict[str, Any]" = OrderedDict()
+        self._by_op: Dict[str, Tuple[Any, Any]] = {}
 
-    def register(self, m: IRAccelMapping):
-        self._maps[m.ir_op] = m
+    def register(self, target) -> None:
+        for op in target.intrinsics:
+            claimed = self._by_op.get(op)
+            if claimed is not None and claimed[0].name != target.name:
+                raise ValueError(
+                    f"intrinsic {op!r} of target {target.name!r} is already "
+                    f"claimed by target {claimed[0].name!r}; intrinsic op "
+                    "names must be unique across targets"
+                )
+        self._targets[target.name] = target
+        for op, intr in target.intrinsics.items():
+            self._by_op[op] = (target, intr)
 
-    def get(self, ir_op: str) -> Optional[IRAccelMapping]:
-        return self._maps.get(ir_op)
+    def names(self) -> List[str]:
+        return list(self._targets)
 
-    def all(self):
-        return list(self._maps.values())
+    def get(self, name: str):
+        if name not in self._targets:
+            raise KeyError(
+                f"unknown accelerator target {name!r}; registered: {self.names()}"
+            )
+        return self._targets[name]
+
+    def all(self, names: Optional[Sequence[str]] = None) -> List[Any]:
+        if names is None:
+            return list(self._targets.values())
+        return [self.get(n) for n in names]
+
+    def intrinsic(self, op: str) -> Tuple[Any, Any]:
+        """(target, intrinsic) owning intrinsic op ``op``; KeyError if none."""
+        if op not in self._by_op:
+            raise KeyError(f"no registered target declares intrinsic {op!r}")
+        return self._by_op[op]
+
+    def has_planner(self, op: str) -> bool:
+        entry = self._by_op.get(op)
+        return entry is not None and entry[1].planner is not None
 
 
-REGISTRY = MappingRegistry()
+#: the process-wide target registry; populated by importing ``repro.accel``
+TARGETS = TargetRegistry()

@@ -32,6 +32,13 @@ Accelerator ops (targets of IR-accelerator rewrites; opaque to IR rewrites):
   fasr_attention / fasr_store / fasr_load
   hlscnn_conv2d
   vta_gemm / vta_add / vta_relu
+
+The vocabulary above is the *bundled* set. Plugin accelerator targets extend
+it at registration time through :func:`register_accel_op`, which attaches a
+shape rule and an ideal (fp32 oracle) evaluation rule for each new intrinsic
+— shape inference, the interpreter, the e-graph shape analysis and
+``accelerator_calls`` all consult the extension table, so a new backend never
+needs to edit this module.
 """
 from __future__ import annotations
 
@@ -40,6 +47,61 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+# --------------------------------------------------------------------------
+# Accelerator-op extension registry (the plugin-target hook)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelOpSpec:
+    """How the IR layer understands one plugin accelerator intrinsic.
+
+    ``shape(attrs, child_shapes) -> shape`` and ``ideal(attrs, args) -> array``
+    may be None for the bundled vocabulary (whose rules are built in below);
+    ``counts`` is False for pass-through data-movement markers (store/load)
+    that must not be tallied as accelerator invocations.
+    """
+
+    target: str
+    shape: Optional[Callable] = None
+    ideal: Optional[Callable] = None
+    counts: bool = True
+
+
+_ACCEL_EXT: Dict[str, AccelOpSpec] = {}
+
+
+def register_accel_op(
+    op: str,
+    target: str,
+    shape_fn: Optional[Callable] = None,
+    eval_fn: Optional[Callable] = None,
+    counts: bool = True,
+) -> None:
+    """Register an accelerator intrinsic op for ``target``.
+
+    Makes the op a member of :data:`ACCEL_OPS` (cost model + Executor
+    dispatch), attributes it to ``target`` in :func:`accelerator_calls`, and
+    — when ``shape_fn``/``eval_fn`` are given — teaches shape inference and
+    the ideal interpreter its semantics.
+    """
+    _ACCEL_EXT[op] = AccelOpSpec(target, shape_fn, eval_fn, counts)
+    ACCEL_OPS.add(op)
+
+
+def accel_op_shape_fn(op: str) -> Optional[Callable]:
+    spec = _ACCEL_EXT.get(op)
+    return spec.shape if spec is not None else None
+
+
+def accel_op_target(op: str) -> Optional[str]:
+    """The target an intrinsic op invokes, or None for non-invoking ops."""
+    spec = _ACCEL_EXT.get(op)
+    if spec is not None:
+        return spec.target if spec.counts else None
+    return _BUILTIN_TRIGGER.get(op)
+
 
 # --------------------------------------------------------------------------
 # Expressions
@@ -266,6 +328,9 @@ def _infer(x: Expr, rec, env) -> Tuple[int, ...]:
         return tuple(np.broadcast_shapes(a, b))
     if op in ("vta_relu",):
         return rec(args[0])
+    spec = _ACCEL_EXT.get(op)
+    if spec is not None and spec.shape is not None:
+        return tuple(spec.shape(dict(x.attrs), [rec(a) for a in args]))
     raise ShapeError(f"unknown op {op}")
 
 
@@ -470,6 +535,9 @@ def _eval(x: Expr, rec, env):
         return _fasr_pool(a[0], "max")
     if op == "fasr_meanpool":
         return _fasr_pool(a[0], "mean")
+    spec = _ACCEL_EXT.get(op)
+    if spec is not None and spec.ideal is not None:
+        return spec.ideal(dict(x.attrs), a)
     raise ShapeError(f"interpret: unknown op {op}")
 
 
@@ -500,39 +568,36 @@ def count_ops(e: Expr, pred: Callable[[Call], bool] = lambda c: True) -> int:
 
 
 def accelerator_calls(e: Expr) -> Dict[str, int]:
-    """Count accelerator invocations by backend (Table 1 statistic)."""
-    out: Dict[str, int] = {"flexasr": 0, "hlscnn": 0, "vta": 0}
-    trigger = {
-        "fasr_linear": "flexasr",
-        "fasr_lstm": "flexasr",
-        "fasr_maxpool": "flexasr",
-        "fasr_meanpool": "flexasr",
-        "fasr_layernorm": "flexasr",
-        "fasr_attention": "flexasr",
-        "hlscnn_conv2d": "hlscnn",
-        "vta_gemm": "vta",
-        "vta_add": "vta",
-        "vta_relu": "vta",
-    }
+    """Count accelerator invocations by backend (Table 1 statistic).
+
+    Keys cover every target known to the registry (bundled + plugins), so a
+    target that received zero offloads still reports an explicit 0.
+    """
+    targets = set(_BUILTIN_TRIGGER.values())
+    targets.update(s.target for s in _ACCEL_EXT.values())
+    out: Dict[str, int] = {t: 0 for t in sorted(targets)}
     for x in postorder(e):
-        if isinstance(x, Call) and x.op in trigger:
-            out[trigger[x.op]] += 1
+        if isinstance(x, Call):
+            t = accel_op_target(x.op)
+            if t is not None:
+                out[t] += 1
     return out
 
 
-ACCEL_OPS = frozenset(
-    [
-        "fasr_linear",
-        "fasr_lstm",
-        "fasr_maxpool",
-        "fasr_meanpool",
-        "fasr_layernorm",
-        "fasr_attention",
-        "fasr_store",
-        "fasr_load",
-        "hlscnn_conv2d",
-        "vta_gemm",
-        "vta_add",
-        "vta_relu",
-    ]
-)
+# Bundled intrinsic -> target attribution (pass-through fasr_store/fasr_load
+# deliberately absent: data movement is not an invocation).
+_BUILTIN_TRIGGER: Dict[str, str] = {
+    "fasr_linear": "flexasr",
+    "fasr_lstm": "flexasr",
+    "fasr_maxpool": "flexasr",
+    "fasr_meanpool": "flexasr",
+    "fasr_layernorm": "flexasr",
+    "fasr_attention": "flexasr",
+    "hlscnn_conv2d": "hlscnn",
+    "vta_gemm": "vta",
+    "vta_add": "vta",
+    "vta_relu": "vta",
+}
+
+#: Mutable: plugin targets extend this via :func:`register_accel_op`.
+ACCEL_OPS = set(_BUILTIN_TRIGGER) | {"fasr_store", "fasr_load"}

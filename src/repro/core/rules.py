@@ -8,35 +8,25 @@ Two families, exactly as in the paper:
   "emergent effect" that lets VTA run convolutions), and the 2D-maxpool
   decomposition into FlexASR temporal (2,1)/(2,1) poolings of Figure 7.
 
-* **IR-accelerator rewrites** — derived from the IR-accelerator mappings:
-  each replaces a compiler-IR pattern by the corresponding accelerator
-  intrinsic (which codegen later lowers to an ILA command stream).
-
-* **Data-transfer cancellation** — (fasr_store (fasr_load ?x)) -> ?x of
-  Section 5.1, removing redundant HBM<->accelerator round trips.
+* **IR-accelerator rewrites** — each replaces a compiler-IR pattern by the
+  corresponding accelerator intrinsic (which codegen later lowers to an ILA
+  command stream). These are *owned by the targets*: every registered
+  ``AcceleratorTarget`` declares its own (pattern + capacity guard + data-
+  transfer cancellations, cf. Section 5.1), and this module enumerates the
+  registry. Adding an accelerator adds rewrites without editing this file.
 """
 from __future__ import annotations
 
 import math
-from typing import List
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from . import ir
-from .egraph import EGraph, ENode, P, PatVar, Rewrite, V, op_head
-
-
-# --------------------------------------------------------------------------
-# helpers for appliers
-# --------------------------------------------------------------------------
-
-
-def _shape(eg: EGraph, cid: int):
-    return eg.shape[eg.find(cid)]
-
-
-def _add_op(eg: EGraph, op: str, children, **attrs) -> int:
-    return eg.add(ENode(op_head(op, tuple(sorted(attrs.items()))), tuple(children)))
+from .egraph import (
+    EGraph, ENode, P, PatVar, Rewrite, V, add_op as _add_op, op_head,
+    shape_of as _shape,
+)
 
 
 # --------------------------------------------------------------------------
@@ -189,154 +179,28 @@ def compiler_ir_rewrites() -> List[Rewrite]:
 
 
 # --------------------------------------------------------------------------
-# IR-accelerator rewrites
+# IR-accelerator rewrites: registry-driven
 # --------------------------------------------------------------------------
+#
+# Each registered AcceleratorTarget owns its IR -> intrinsic rewrites
+# (pattern + capacity guard, attributed to the target for saturation
+# statistics). This module only enumerates the registry — adding an
+# accelerator never touches this file.
+
+from .ila import TARGETS
+from .. import accel as _accel  # noqa: F401  (registers the bundled targets)
 
 
-def _conv_to_hlscnn_applier(eg, cid, s):
-    return _add_op(
-        eg,
-        "hlscnn_conv2d",
-        [s["x"], s["w"]],
-        strides=tuple(s["strides"]),
-        padding=tuple(s["padding"]),
-    )
-
-
-def _ln_to_fasr_applier(eg, cid, s):
-    return _add_op(eg, "fasr_layernorm", [s["x"], s["g"], s["b"]], eps=s["eps"])
-
-
-# Device capacity limits (instruction-selection legality): a mapping only
-# applies when operands fit the accelerator's architectural state. Row
-# dimensions are driver-chunkable (codegen tiles them), so only feature
-# dims are constrained.
-FASR_MAX_D = 128   # flexasr.MAX_IN
-FASR_MAX_T = 128   # flexasr.MAX_TS (attention KV length; not chunkable)
-FASR_MAX_H = 64    # flexasr.MAX_H
-HLSCNN_MAX_HW = 16
-HLSCNN_MAX_C = 32
-HLSCNN_MAX_K = 32
-HLSCNN_MAX_KHW = 5
-
-
-def _fasr_linear_guard(eg, cid, s):
-    b = _shape(eg, s["b"])
-    return len(_shape(eg, s["c"])) == 1 and b[1] <= FASR_MAX_D and b[0] <= FASR_MAX_D
-
-
-def _fasr_lstm_guard(eg, cid, s):
-    wi = _shape(eg, s["wi"])
-    wh = _shape(eg, s["wh"])
-    return wi[1] <= FASR_MAX_D and wh[1] <= FASR_MAX_H
-
-
-def _fasr_attn_guard(eg, cid, s):
-    q = _shape(eg, s["q"])
-    k = _shape(eg, s["k"])
-    return q[-1] <= FASR_MAX_D and q[-2] <= FASR_MAX_T and k[-2] <= FASR_MAX_T
-
-
-def flexasr_rewrites() -> List[Rewrite]:
-    return [
-        Rewrite(
-            "fasr-linear",
-            P("bias_add", P("dense", V("a"), V("b")), V("c")),
-            P("fasr_linear", V("a"), V("b"), V("c")),
-            guard=_fasr_linear_guard,
-        ),
-        Rewrite(
-            "fasr-lstm",
-            P("lstm", V("x"), V("wi"), V("wh"), V("b")),
-            P("fasr_lstm", V("x"), V("wi"), V("wh"), V("b")),
-            guard=_fasr_lstm_guard,
-        ),
-        Rewrite(
-            "fasr-attention",
-            P("attention", V("q"), V("k"), V("v")),
-            P("fasr_attention", V("q"), V("k"), V("v")),
-            guard=_fasr_attn_guard,
-        ),
-        Rewrite(
-            "fasr-layernorm",
-            P("layer_norm", V("x"), V("g"), V("b"), attr_binds=("eps",)),
-            guard=lambda eg, cid, s: _shape(eg, s["x"])[-1] <= FASR_MAX_D,
-            applier=_ln_to_fasr_applier,
-        ),
-        Rewrite(
-            "fasr-maxpool",
-            P(
-                "reduce_max",
-                P("windows", V("T"), attrs=(("wh", 2), ("ww", 1), ("sh", 2), ("sw", 1))),
-                attrs=(("axis", (2, 3)),),
-            ),
-            # no width guard: pooling is elementwise across features, so the
-            # driver chunks wide matrices column-wise (codegen._fasr_pool)
-            P("fasr_load", P("fasr_maxpool", P("fasr_store", V("T")))),
-        ),
-        Rewrite(
-            "fasr-meanpool",
-            P(
-                "reduce_mean",
-                P("windows", V("T"), attrs=(("wh", 2), ("ww", 1), ("sh", 2), ("sw", 1))),
-                attrs=(("axis", (2, 3)),),
-            ),
-            P("fasr_load", P("fasr_meanpool", P("fasr_store", V("T")))),
-        ),
-        # Section 5.1: cancel redundant accelerator<->host round trips
-        Rewrite(
-            "fasr-store-load-cancel",
-            P("fasr_store", P("fasr_load", V("x"))),
-            V("x"),
-        ),
-    ]
-
-
-def _hlscnn_guard(eg, cid, s):
-    n, h, w, c = _shape(eg, s["x"])
-    kh, kw, ci, k = _shape(eg, s["w"])
-    ph, pw = s["padding"]
-    return (
-        h + 2 * ph <= HLSCNN_MAX_HW
-        and w + 2 * pw <= HLSCNN_MAX_HW
-        and c <= HLSCNN_MAX_C
-        and k <= HLSCNN_MAX_K
-        and kh <= HLSCNN_MAX_KHW
-        and kw <= HLSCNN_MAX_KHW
-    )
-
-
-def hlscnn_rewrites() -> List[Rewrite]:
-    return [
-        Rewrite(
-            "hlscnn-conv2d",
-            P("conv2d", V("x"), V("w"), attr_binds=("strides", "padding")),
-            guard=_hlscnn_guard,
-            applier=_conv_to_hlscnn_applier,
-        ),
-    ]
-
-
-def vta_rewrites() -> List[Rewrite]:
-    return [
-        Rewrite("vta-gemm", P("dense", V("a"), V("b")), P("vta_gemm", V("a"), V("b"))),
-        Rewrite("vta-add", P("add", V("a"), V("b")), P("vta_add", V("a"), V("b"))),
-        Rewrite("vta-relu", P("relu", V("x")), P("vta_relu", V("x"))),
-    ]
-
-
-def accelerator_rewrites(targets=("flexasr", "hlscnn", "vta")) -> List[Rewrite]:
+def accelerator_rewrites(targets: Optional[Sequence[str]] = None) -> List[Rewrite]:
+    """The IR-accelerator rewrites of every selected target (None = all
+    registered, in registration order)."""
     out: List[Rewrite] = []
-    if "flexasr" in targets:
-        out += flexasr_rewrites()
-    if "hlscnn" in targets:
-        out += hlscnn_rewrites()
-    if "vta" in targets:
-        out += vta_rewrites()
+    for t in TARGETS.all(targets):
+        out += t.rewrites()
     return out
 
 
-def all_rewrites(targets=("flexasr", "hlscnn", "vta"), flexible=True) -> List[Rewrite]:
+def all_rewrites(targets: Optional[Sequence[str]] = None, flexible: bool = True) -> List[Rewrite]:
     """flexible=False == the paper's *exact matching* baseline (only the
     IR-accelerator rewrites); flexible=True adds the compiler-IR rewrites."""
     out = accelerator_rewrites(targets)

@@ -12,30 +12,30 @@ Three verification tasks (Figure 3), adapted as recorded in DESIGN.md §3:
   The finite-domain *exhaustive* variant (Table 3 analogue) enumerates the
   whole input lattice for small shapes — a decidable, complete check.
 * **VT3** — accelerator ILA vs implementation. With no RTL available, the
-  implementation is the TPU Pallas fast path; both are bit-accurate in the
-  custom numeric and must agree.
+  implementation is whatever numerics-matched fast path (TPU Pallas kernel)
+  the target ships; both are bit-accurate in the custom numeric and must
+  agree.
 
 Plus **simulation-based mapping validation** (Table 2): relative Frobenius
 error of the ILA simulation (custom numerics) against the fp32 IR
 interpreter over N random inputs.
+
+All three tasks (and Table 2) run **generically over the target registry**:
+each ``AcceleratorTarget`` declares its VT2 fragment pairs, VT3 checks and
+mapping cases, and the runners here enumerate them — a newly registered
+backend is validated with no edits to this module.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from . import ir
-from .codegen import Executor
-from ..accel import flexasr as fa
-from ..accel import hlscnn as hc
-from ..accel import vta as vt
-from ..accel import numerics
-from ..kernels import ops as kops
+from .ila import TARGETS
+from ..accel.target import VT2Case  # noqa: F401  (re-export; registers targets)
 
 
 def frob_rel_err(ref: np.ndarray, out: np.ndarray) -> float:
@@ -128,56 +128,14 @@ def vt1_check(op: str, n: int = 20, seed: int = 0, tol: float = 1e-4) -> bool:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class VT2Case:
-    """A compiler-IR fragment and its accelerator fragment, as IR exprs over
-    shared Vars — both interpreted with ideal (abstract-datatype) semantics."""
-
-    name: str
-    ir_fragment: ir.Expr
-    accel_fragment: ir.Expr
-    var_shapes: Dict[str, Tuple[int, ...]]
-
-
-def vt2_cases(dim_t: int = 16, dim_d: int = 64) -> List[VT2Case]:
-    a = ir.Var("a", (dim_t, dim_d))
-    w = ir.Var("w", (dim_d, dim_d))
-    c = ir.Var("c", (dim_d,))
-    lin = VT2Case(
-        "linear",
-        ir.bias_add(ir.dense(a, w), c),
-        ir.call("fasr_linear", a, w, c),
-        {"a": (dim_t, dim_d), "w": (dim_d, dim_d), "c": (dim_d,)},
-    )
-    T = ir.Var("T", (dim_t, dim_d))
-    pool_ir = ir.call(
-        "reduce_max", ir.call("windows", T, wh=2, ww=1, sh=2, sw=1), axis=(2, 3)
-    )
-    pool_acc = ir.call("fasr_load", ir.call("fasr_maxpool", ir.call("fasr_store", T)))
-    pool = VT2Case("maxpool", pool_ir, pool_acc, {"T": (dim_t, dim_d)})
-    x = ir.Var("x", (1, 8, 8, 4))
-    wc = ir.Var("wc", (3, 3, 4, 8))
-    conv = VT2Case(
-        "conv2d",
-        ir.conv2d(x, wc, (1, 1), (0, 0)),
-        ir.call("hlscnn_conv2d", x, wc, strides=(1, 1), padding=(0, 0)),
-        {"x": (1, 8, 8, 4), "wc": (3, 3, 4, 8)},
-    )
-    g = ir.Var("g", (dim_d,))
-    be = ir.Var("be", (dim_d,))
-    ln = VT2Case(
-        "layernorm",
-        ir.call("layer_norm", a, g, be, eps=1e-5),
-        ir.call("fasr_layernorm", a, g, be, eps=1e-5),
-        {"a": (dim_t, dim_d), "g": (dim_d,), "be": (dim_d,)},
-    )
-    d2 = VT2Case(
-        "vta-gemm",
-        ir.dense(a, w),
-        ir.call("vta_gemm", a, w),
-        {"a": (dim_t, dim_d), "w": (dim_d, dim_d)},
-    )
-    return [lin, pool, conv, ln, d2]
+def vt2_cases(dim_t: int = 16, dim_d: int = 64, targets=None) -> List[VT2Case]:
+    """Every VT2 fragment-equivalence case the selected targets declare
+    (None = all registered). Case shapes are parameterized by (dim_t, dim_d)
+    where the target's operand geometry allows it."""
+    out: List[VT2Case] = []
+    for t in TARGETS.all(targets):
+        out.extend(t.vt2_cases(dim_t, dim_d))
+    return out
 
 
 def vt2_check(case: VT2Case, n: int = 20, seed: int = 0, tol: float = 1e-5) -> bool:
@@ -219,40 +177,21 @@ def vt2_exhaustive(case: VT2Case, lattice: Sequence[float], max_vars: int = 64) 
 
 
 # ---------------------------------------------------------------------------
-# VT3: accelerator ILA vs implementation (Pallas kernels)
+# VT3: accelerator ILA vs implementation
 # ---------------------------------------------------------------------------
+#
+# With no RTL available, each target declares its own implementation checks
+# (ILA vs the numerics-matched Pallas kernel it ships); this runner just
+# enumerates whatever the registry declares.
 
 
-def vt3_linear(n: int = 5, seed: int = 0) -> float:
-    """FlexASR ILA LinearLayer vs the af_gemm Pallas kernel: both project
-    onto the same AdaptivFloat lattice — max abs deviation returned."""
-    rng = np.random.default_rng(seed)
-    worst = 0.0
-    for _ in range(n):
-        x = rng.standard_normal((16, 64)).astype(np.float32)
-        w = (rng.standard_normal((32, 64)) * 0.1).astype(np.float32)
-        b = (rng.standard_normal((32,)) * 0.1).astype(np.float32)
-        cmds, rd = fa.build_linear_fragment(x, w, b)
-        ila_out = np.asarray(rd(fa.flexasr.simulate(cmds)))
-        kern_out = np.asarray(kops.af_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
-        worst = max(worst, float(np.abs(ila_out - kern_out).max()))
-    return worst
-
-
-def vt3_gemm(n: int = 5, seed: int = 0) -> bool:
-    """VTA ILA GEMM vs the int8_gemm Pallas kernel: exact equality."""
-    rng = np.random.default_rng(seed)
-    for _ in range(n):
-        a = rng.integers(-100, 100, (24, 48)).astype(np.float32)
-        b = rng.integers(-100, 100, (20, 48)).astype(np.float32)
-        cmds, rd = vt.build_gemm_fragment(a, b)
-        ila_out = np.asarray(rd(vt.vta.simulate(cmds)))
-        kern_out = np.asarray(
-            kops.int8_gemm(jnp.asarray(a, jnp.int8), jnp.asarray(b, jnp.int8))
-        )
-        if not np.array_equal(ila_out, kern_out.astype(np.float32)):
-            return False
-    return True
+def vt3_results(targets=None) -> Dict[str, Dict[str, Tuple[bool, float]]]:
+    """Run every declared VT3 check: {target: {check: (ok, worst_abs_dev)}}.
+    Targets with no separate implementation declare no checks (empty dict)."""
+    out: Dict[str, Dict[str, Tuple[bool, float]]] = {}
+    for t in TARGETS.all(targets):
+        out[t.name] = {name: fn() for name, fn in t.vt3_checks.items()}
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -269,91 +208,20 @@ class MappingValidation:
     n_inputs: int
 
 
-def _table2_ops(seed=0):
-    rng = np.random.default_rng(seed)
-
-    def gemm_case():
-        a = rng.integers(-100, 100, (16, 64)).astype(np.float32)
-        b = rng.integers(-100, 100, (16, 64)).astype(np.float32)
-        cmds, rd = vt.build_gemm_fragment(a, b)
-        out = rd(vt.vta.simulate(cmds))
-        return a @ b.T, out
-
-    def conv_case():
-        x = rng.standard_normal((1, 12, 12, 8)).astype(np.float32)
-        w = (rng.standard_normal((3, 3, 8, 16)) * 0.1).astype(np.float32)
-        cmds, rd = hc.build_conv2d_fragment(x, w, (1, 1), (0, 0), wgt_bits=16)
-        out = rd(hc.hlscnn.simulate(cmds))
-        ref = ir._conv2d(jnp.asarray(x), jnp.asarray(w), (1, 1), (0, 0))
-        return ref, out
-
-    def linear_case():
-        x = rng.standard_normal((16, 64)).astype(np.float32)
-        w = (rng.standard_normal((64, 64)) * 0.1).astype(np.float32)
-        b = (rng.standard_normal((64,)) * 0.1).astype(np.float32)
-        cmds, rd = fa.build_linear_fragment(x, w, b)
-        return x @ w.T + b, rd(fa.flexasr.simulate(cmds))
-
-    def lstm_case():
-        x = (rng.standard_normal((16, 32)) * 0.5).astype(np.float32)
-        wi = (rng.standard_normal((64, 32)) * 0.3).astype(np.float32)
-        wh = (rng.standard_normal((64, 16)) * 0.3).astype(np.float32)
-        b = (rng.standard_normal((64,)) * 0.1).astype(np.float32)
-        cmds, rd = fa.build_lstm_fragment(x, wi, wh, b)
-        ref = ir._lstm(jnp.asarray(x[:, None]), jnp.asarray(wi), jnp.asarray(wh), jnp.asarray(b))[:, 0]
-        return ref, rd(fa.flexasr.simulate(cmds))
-
-    def ln_case():
-        x = rng.standard_normal((16, 64)).astype(np.float32)
-        g = rng.standard_normal((64,)).astype(np.float32)
-        be = (rng.standard_normal((64,)) * 0.1).astype(np.float32)
-        cmds, rd = fa.build_layernorm_fragment(x, g, be)
-        mu = x.mean(-1, keepdims=True)
-        va = x.var(-1, keepdims=True)
-        return (x - mu) / np.sqrt(va + 1e-5) * g + be, rd(fa.flexasr.simulate(cmds))
-
-    def maxpool_case():
-        # device-representable inputs (written into the AF8 buffer), as the
-        # paper's 0.00% row implies
-        x = np.asarray(numerics.af_quantize(
-            jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32)), fa.AF))
-        cmds, rd = fa.build_pool_fragment(x, "max")
-        return x.reshape(8, 2, 64).max(1), rd(fa.flexasr.simulate(cmds))
-
-    def meanpool_case():
-        x = rng.standard_normal((16, 64)).astype(np.float32)
-        cmds, rd = fa.build_pool_fragment(x, "mean")
-        return x.reshape(8, 2, 64).mean(1), rd(fa.flexasr.simulate(cmds))
-
-    def attn_case():
-        q = rng.standard_normal((8, 64)).astype(np.float32)
-        k = rng.standard_normal((16, 64)).astype(np.float32)
-        v = rng.standard_normal((16, 64)).astype(np.float32)
-        cmds, rd = fa.build_attention_fragment(q, k, v)
-        ref = ir._attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
-        return ref, rd(fa.flexasr.simulate(cmds))
-
-    return [
-        ("VTA", "GEMM", gemm_case),
-        ("HLSCNN", "Conv2D", conv_case),
-        ("FlexASR", "LinearLayer", linear_case),
-        ("FlexASR", "LSTM", lstm_case),
-        ("FlexASR", "LayerNorm", ln_case),
-        ("FlexASR", "MaxPool", maxpool_case),
-        ("FlexASR", "MeanPool", meanpool_case),
-        ("FlexASR", "Attention", attn_case),
-    ]
-
-
-def validate_mappings(n_inputs: int = 100, seed: int = 0) -> List[MappingValidation]:
-    """Table 2: per-mapping relative error statistics over random inputs."""
+def validate_mappings(n_inputs: int = 100, seed: int = 0, targets=None) -> List[MappingValidation]:
+    """Table 2: per-mapping relative error statistics over random inputs,
+    for every (accelerator, operation) case the selected targets declare."""
     out = []
-    for accel, opname, case in _table2_ops(seed):
-        errs = []
-        for _ in range(n_inputs):
-            ref, got = case()
-            errs.append(frob_rel_err(np.asarray(ref), np.asarray(got)))
-        out.append(
-            MappingValidation(accel, opname, float(np.mean(errs)), float(np.std(errs)), n_inputs)
-        )
+    for t in TARGETS.all(targets):
+        rng = np.random.default_rng(seed)
+        for opname, case in t.mapping_cases(rng):
+            errs = []
+            for _ in range(n_inputs):
+                ref, got = case()
+                errs.append(frob_rel_err(np.asarray(ref), np.asarray(got)))
+            out.append(
+                MappingValidation(
+                    t.display_name, opname, float(np.mean(errs)), float(np.std(errs)), n_inputs
+                )
+            )
     return out

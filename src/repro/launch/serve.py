@@ -16,6 +16,15 @@ from ..configs import get_config, get_smoke_config
 from ..models import api
 
 
+def _force(*trees):
+    """Block until every array in the pytrees is computed — JAX dispatch is
+    async, so timing without this measures enqueue, not compute."""
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -36,25 +45,27 @@ def main():
     if cfg.family == "audio":
         frames = jnp.asarray(
             rng.standard_normal((B, api.AUDIO_ENC_FRAMES, cfg.d_model)), jnp.bfloat16)
-        t0 = time.time()
+        t0 = time.perf_counter()
         _, cache = api.prefill(cfg, params, frames, cache)
         tok = jnp.zeros((B, 1), jnp.int32)
         start = 0
     else:
         prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, args.prompt)), jnp.int32)
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = api.prefill(cfg, params, prompt, cache)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         start = args.prompt
-    print(f"prefill: {time.time()-t0:.2f}s")
+    _force(tok, cache)
+    print(f"prefill: {time.perf_counter()-t0:.2f}s")
 
     outs = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.gen - 1):
         logits, cache = api.decode_step(cfg, params, cache, tok, start + i)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         outs.append(tok)
-    dt = time.time() - t0
+    _force(tok, cache)
+    dt = time.perf_counter() - t0
     gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
     print(f"decode: {args.gen-1} steps x{B} in {dt:.2f}s ({dt/(args.gen-1)*1e3:.0f} ms/step)")
     print(gen)

@@ -167,14 +167,14 @@ def test_data_runner_cache_bounded_across_repeats():
 
 
 def test_fragment_cache_reuses_setup():
-    from repro.core.ila import FRAGMENTS
+    cache = fa.TARGET.fragments   # per-target cache owned by the plugin
 
     w = (rng.standard_normal((8, 16)) * 0.1).astype(np.float32)
     b = np.zeros((8,), np.float32)
     f1 = fa.linear_fragment(w, b)
-    hits_before = FRAGMENTS.hits
+    hits_before = cache.hits
     f2 = fa.linear_fragment(w, b)
-    assert f1 is f2 and FRAGMENTS.hits == hits_before + 1
+    assert f1 is f2 and cache.hits == hits_before + 1
     # distinct parameters -> distinct fragment (content fingerprint key)
     f3 = fa.linear_fragment(w + 1.0, b)
     assert f3 is not f1

@@ -47,9 +47,10 @@ class TestAfGemm:
 
     def test_vt3_ila_vs_kernel(self):
         """VT3: the Pallas fast path agrees with the ILA simulator."""
-        from repro.core.validate import vt3_linear
+        from repro.accel.flexasr import TARGET
 
-        assert vt3_linear(n=2) == 0.0
+        ok, worst = TARGET.vt3_checks["linear_ila_vs_af_gemm_kernel"]()
+        assert ok and worst == 0.0
 
 
 class TestFlashAttention:

@@ -48,7 +48,7 @@ def test_invocation_stats_collected():
     rng = np.random.default_rng(0)
     env = dict(params)
     env["x"] = rng.standard_normal((1, 12, 12, 8)).astype(np.float32)
-    ex = Executor("ila", hlscnn_wgt_bits=8)
+    ex = Executor("ila", target_options={"hlscnn": {"wgt_bits": 8}})
     ex.run(res.program, env)
     convs = [s for s in ex.stats if s.op == "hlscnn_conv2d"]
     assert convs and all(s.rel_err > 0 for s in convs)

@@ -1,0 +1,127 @@
+"""Registry conformance suite: every registered AcceleratorTarget, zero
+bespoke per-backend tests.
+
+Parameterized over **all** targets in ``repro.core.ila.TARGETS`` and every
+intrinsic they declare (via each intrinsic's ``sample`` generator, which
+draws random operands within the target's declared capability limits):
+
+* ideal-vs-numerics (VT1-style): the ILA co-simulation of each intrinsic
+  tracks the fp32 IR-interpreter oracle within the intrinsic's declared
+  tolerance;
+* engine parity: eager per-command simulation == jit scan == compiled
+  fragment fast path == batched ``run_many``, bit-for-bit;
+* rewrite soundness: each target-declared VT2 fragment pair agrees under
+  ideal semantics, and compiling the compiler-IR side against that target
+  alone extracts the intrinsic while preserving interpretation;
+* coverage: every registered target receives >= 1 offload from at least one
+  of the stock applications under a default (all-targets) compile.
+
+A new backend that registers through ``repro.accel.target`` is covered here
+automatically — this file never names a target.
+"""
+import numpy as np
+import pytest
+
+from repro.core import apps, ir, validate
+from repro.core.codegen import Executor
+from repro.core.compile import compile_program
+from repro.core.ila import TARGETS
+
+
+def _intrinsic_params():
+    out = []
+    for t in TARGETS.all():
+        for op, intr in t.intrinsics.items():
+            if intr.sample is not None:
+                out.append(pytest.param(t, intr, id=f"{t.name}:{op}"))
+    return out
+
+
+def _case(t, intr, seed):
+    rng = np.random.default_rng(seed)
+    args, attrs = intr.sample(rng)
+    vs = tuple(ir.Var(f"_{i}", a.shape) for i, a in enumerate(args))
+    expr = ir.call(intr.op, *vs, **attrs)
+    env = {f"_{i}": a for i, a in enumerate(args)}
+    return expr, env
+
+
+def _executor(t, intr, **kw):
+    return Executor("ila", target_options={t.name: intr.options}, **kw)
+
+
+@pytest.mark.parametrize("t,intr", _intrinsic_params())
+def test_ideal_vs_numerics_within_declared_tol(t, intr):
+    """Custom-numerics co-simulation tracks the fp32 oracle (VT1-style)."""
+    for seed in (0, 1):
+        expr, env = _case(t, intr, seed)
+        ideal = np.asarray(Executor("ideal").run(expr, env))
+        got = np.asarray(_executor(t, intr).run(expr, env))
+        assert got.shape == ideal.shape
+        err = validate.frob_rel_err(ideal, got)
+        assert err <= intr.tol, f"{t.name}:{intr.op} rel err {err} > tol {intr.tol}"
+
+
+@pytest.mark.parametrize("t,intr", _intrinsic_params())
+def test_engines_bit_exact(t, intr):
+    """eager per-command == jit scan == compiled fast path == run_many."""
+    expr, env = _case(t, intr, 2)
+    _, env2 = _case(t, intr, 3)
+    out_c = np.asarray(_executor(t, intr, engine="compiled").run(expr, env))
+    out_j = np.asarray(_executor(t, intr, engine="jit").run(expr, env))
+    out_e = np.asarray(_executor(t, intr, engine="eager").run(expr, env))
+    np.testing.assert_array_equal(out_c, out_j, err_msg=f"{t.name}:{intr.op} compiled != jit")
+    np.testing.assert_array_equal(out_c, out_e, err_msg=f"{t.name}:{intr.op} compiled != eager")
+    # batched path: same env twice through one vmapped call per node
+    outs_m = _executor(t, intr, engine="compiled").run_many(expr, [env, env])
+    for o in outs_m:
+        np.testing.assert_array_equal(
+            out_c, np.asarray(o), err_msg=f"{t.name}:{intr.op} run_many != run"
+        )
+    # a second distinct sample keeps its own numerics when batched
+    ref2 = np.asarray(_executor(t, intr).run(expr, env2))
+    outs_m2 = _executor(t, intr).run_many(expr, [env, env2])
+    np.testing.assert_array_equal(ref2, np.asarray(outs_m2[1]))
+
+
+def _vt2_params():
+    out = []
+    for t in TARGETS.all():
+        for case in t.vt2_cases(8, 32):
+            out.append(pytest.param(t, case, id=f"{t.name}:{case.name}"))
+    return out
+
+
+@pytest.mark.parametrize("t,case", _vt2_params())
+def test_rewrite_soundness_vt2_and_extraction(t, case):
+    """VT2 over abstract types + interpret-before/after compile equality."""
+    assert validate.vt2_check(case, n=5)
+    res = compile_program(case.ir_fragment, targets=(t.name,), flexible=True)
+    assert res.accelerator_calls.get(t.name, 0) >= 1, (
+        f"{t.name}:{case.name} did not extract an intrinsic"
+    )
+    rng = np.random.default_rng(0)
+    env = {k: rng.standard_normal(s).astype(np.float32)
+           for k, s in case.var_shapes.items()}
+    np.testing.assert_allclose(
+        np.asarray(ir.interpret(case.ir_fragment, env)),
+        np.asarray(ir.interpret(res.program, env)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.fixture(scope="module")
+def app_offloads():
+    out = {}
+    for name, (builder, _) in apps.APPLICATIONS.items():
+        expr, _params = builder()
+        out[name] = compile_program(expr).accelerator_calls
+    return out
+
+
+@pytest.mark.parametrize("tname", TARGETS.names())
+def test_every_target_offloaded_by_some_app(app_offloads, tname):
+    """Default (all-targets) compiles exercise every registered backend —
+    a new target starts receiving offloads with zero compiler edits."""
+    hits = {app: calls.get(tname, 0) for app, calls in app_offloads.items()}
+    assert any(n >= 1 for n in hits.values()), f"{tname} never offloaded: {hits}"
