@@ -50,6 +50,23 @@ def _time(fn, n=10, warmup=1):
     return min(ts), statistics.median(ts)
 
 
+def batch_crossover(frag, make_data, sizes=(1, 2, 4, 8, 16, 32), n=8):
+    """Batch-vs-sequential break-even: per-sample time of B sequential
+    ``frag.run`` calls vs one vmapped ``frag.run_batch`` over B streams,
+    per batch size. Returns (rows, crossover_B or None)."""
+    rows = []
+    crossover = None
+    for B in sizes:
+        datas = [make_data() for _ in range(B)]
+        seq_min, _ = _time(lambda: [_force(frag.run(d)) for d in datas], n=n)
+        bat_min, _ = _time(lambda: frag.run_batch(datas), n=n)
+        seq_ps, bat_ps = seq_min / B, bat_min / B
+        rows.append((B, seq_ps, bat_ps))
+        if crossover is None and bat_ps < seq_ps:
+            crossover = B
+    return rows, crossover
+
+
 def run():
     print("\n== ILA simulator speed (fragment compiler vs jit scan vs eager) ==")
     rng = np.random.default_rng(0)
@@ -120,7 +137,26 @@ def run():
     print(f"bit-exact vs eager reference: {exact}")
     print(f"flexasr target caches: {fa.TARGET.cache_info()}")
     assert exact, "compiled tiers must match the eager reference bit-for-bit"
+
+    # batch-vs-sequential break-even (the ROADMAP claim, measured): at which
+    # batch size does one vmapped run_batch beat B sequential frag.run calls?
+    print("\n-- batch vs sequential crossover (FlexASR linear data streams) --")
+    print(f"{'B':>4s} {'seq us/sample':>14s} {'batch us/sample':>16s} {'winner':>8s}")
+    cross_rows, crossover = batch_crossover(
+        frag, lambda: fa.pack_linear_data(
+            frag, rng.standard_normal((64, 128)).astype(np.float32))
+    )
+    for B, seq_ps, bat_ps in cross_rows:
+        winner = "batch" if bat_ps < seq_ps else "seq"
+        print(f"{B:4d} {seq_ps*1e6:14.1f} {bat_ps*1e6:16.1f} {winner:>8s}")
+    print("crossover: "
+          + (f"vmapped batching wins from B={crossover} on this backend"
+             if crossover is not None else
+             "batching never wins on this backend (dispatch already amortized)"))
+
     return [
+        ("sim_batch_crossover", float(crossover or 0),
+         f"batch wins from B={crossover}" if crossover else "no crossover <= 32"),
         ("sim_steady_compiled", warm_min * 1e6, f"speedup={speedup:.1f}x"),
         ("sim_cold_compiled", cold_min * 1e6, "includes setup sim"),
         ("sim_batched_per_sample", per_sample_min * 1e6, "batch of 8"),

@@ -16,12 +16,14 @@ def main() -> None:
         os.environ.setdefault("REPRO_TABLE4_N", "10")
         os.environ.setdefault("REPRO_TABLE4_STEPS", "150")
 
-    from benchmarks import (bench_kernels, bench_sim_speed, roofline_report,
-                            table1_matching, table2_mapping_validation,
-                            table3_formal, table4_cosim)
+    from benchmarks import (bench_extraction, bench_kernels, bench_sim_speed,
+                            roofline_report, table1_matching,
+                            table2_mapping_validation, table3_formal,
+                            table4_cosim)
 
     rows = []
     rows += table1_matching.run()
+    rows += bench_extraction.run()
     rows += table2_mapping_validation.run()
     rows += table3_formal.run()
     rows += bench_sim_speed.run()

@@ -57,7 +57,7 @@ from ..core.ila import (
 from . import numerics
 from .numerics import AdaptivFloatSpec
 from .target import (
-    AcceleratorTarget, Intrinsic, SimJob, VT2Case, register_target,
+    AcceleratorTarget, CostModel, Intrinsic, SimJob, VT2Case, register_target,
 )
 
 V = 16            # interface lanes (128-bit MMIO word of 8-bit AF values)
@@ -936,6 +936,85 @@ def plan_attention(ctx, x, args):
 
 
 # --------------------------------------------------------------------------
+# Cost model: analytic commands / bytes / cycles from operand shapes
+# --------------------------------------------------------------------------
+#
+# Commands mirror the fragment builders above (setup weight load + per-row
+# data stream over V lanes, config/trigger tails per MAX_TS chunk); compute
+# cycles assume the PE array retires V MACs per cycle. CostModel.calibrate
+# trims the command predictions against what the planners actually emit.
+
+COSTS = CostModel("flexasr", cycles_per_command=1.0)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-int(a) // int(b))
+
+
+def _nrows(shape) -> int:
+    return int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+
+
+@COSTS.op("fasr_linear")
+def _cost_linear(attrs, shapes):
+    a, w = shapes[0], shapes[1]
+    rows, I, O = _nrows(a), a[-1], w[0]
+    setup = O * _cdiv(I, V) + _cdiv(O, V) + 4
+    data = rows * _cdiv(I, V) + 5 * _cdiv(rows, MAX_TS)
+    return setup + data, 4 * (rows * I + O * I + O + rows * O), rows * O * I / V
+
+
+@COSTS.op("fasr_lstm")
+def _cost_lstm(attrs, shapes):
+    (T, B, I), wi, wh = shapes[0], shapes[1], shapes[2]
+    gates, H = wi[0], wh[1]
+    setup = gates * _cdiv(I, V) + gates * _cdiv(H, V) + _cdiv(gates, V) + 4
+    data = B * (T * _cdiv(I, V) + 5)
+    moved = 4 * (T * B * I + gates * (I + H + 1) + T * B * H)
+    return setup + data, moved, T * B * gates * (I + H) / V
+
+
+def _cost_pool(attrs, shapes):
+    T = shapes[0][0]
+    D = int(np.prod(shapes[0][1:])) if len(shapes[0]) > 1 else 1
+    chunks = _cdiv(T, MAX_TS) * _cdiv(D, MAX_IN)
+    return T * _cdiv(D, V) + 5 * chunks, 4 * T * D * 3 // 2, T * D / V
+
+
+COSTS.op("fasr_maxpool")(_cost_pool)
+COSTS.op("fasr_meanpool")(_cost_pool)
+
+
+@COSTS.op("fasr_layernorm")
+def _cost_layernorm(attrs, shapes):
+    rows, D = _nrows(shapes[0]), shapes[0][-1]
+    setup = 2 * _cdiv(D, V) + 4
+    data = rows * _cdiv(D, V) + 5 * _cdiv(rows, MAX_TS)
+    return setup + data, 4 * (2 * rows * D + 2 * D), 3 * rows * D / V
+
+
+@COSTS.op("fasr_attention")
+def _cost_attention(attrs, shapes):
+    q, k, v = shapes
+    heads = int(np.prod(q[:-2])) if len(q) > 2 else 1
+    Tq, D, Tk = q[-2], q[-1], k[-2]
+    cmds = heads * ((Tq + 2 * Tk) * _cdiv(D, V) + 6)
+    moved = 4 * heads * (Tq * D + 2 * Tk * D + Tq * v[-1])
+    return cmds, moved, heads * Tq * Tk * (2 * D + 1) / V
+
+
+def _cost_transfer(attrs, shapes):
+    n = int(np.prod(shapes[0])) if shapes and shapes[0] else 1
+    # pure data-movement marker: no interface commands of its own; one
+    # V-word per cycle across the interface
+    return 0, 4 * n, max(1.0, n / V)
+
+
+COSTS.op("fasr_store")(_cost_transfer)
+COSTS.op("fasr_load")(_cost_transfer)
+
+
+# --------------------------------------------------------------------------
 # Validation declarations (conformance samples, VT2 cases, VT3, Table 2)
 # --------------------------------------------------------------------------
 
@@ -1117,6 +1196,7 @@ TARGET.add_intrinsic(Intrinsic(
 TARGET.add_intrinsic(Intrinsic(
     "fasr_load", passthrough=True, doc="accelerator -> HBM transfer marker"))
 TARGET.add_rewrites(_rewrites)
+TARGET.add_cost_model(COSTS)
 TARGET.add_vt2_cases(_vt2)
 TARGET.add_vt3_check("linear_ila_vs_af_gemm_kernel", _vt3_linear)
 TARGET.add_mapping_cases(_mapping_cases)

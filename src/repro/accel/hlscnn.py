@@ -38,7 +38,7 @@ from ..core.ila import (
 from . import numerics
 from .numerics import FixedPointSpec
 from .target import (
-    AcceleratorTarget, Intrinsic, SimJob, VT2Case, register_target,
+    AcceleratorTarget, CostModel, Intrinsic, SimJob, VT2Case, register_target,
 )
 
 V = 16
@@ -347,11 +347,31 @@ def _mapping_cases(rng):
     return [("Conv2D", conv_case)]
 
 
+COSTS = CostModel("hlscnn", cycles_per_command=1.0)
+
+
+@COSTS.op("hlscnn_conv2d")
+def _cost_conv2d(attrs, shapes):
+    """Analytic conv cost: weight SRAM load (setup) + per-sample activation
+    stream over V lanes + the MAC volume retired V lanes per cycle."""
+    (n, h, w, c), (kh, kw, ci, co) = shapes[0], shapes[1]
+    (sh, sw) = attrs.get("strides", (1, 1))
+    (ph, pw) = attrs.get("padding", (0, 0))
+    hp, wp = h + 2 * ph, w + 2 * pw
+    oh, ow = (hp - kh) // sh + 1, (wp - kw) // sw + 1
+    setup = -(-kh * kw * ci * co // V) + 6
+    data = n * (-(-hp * wp * c // V) + 4)
+    macs = n * oh * ow * kh * kw * ci * co
+    moved = 4 * (n * hp * wp * c + kh * kw * ci * co + n * oh * ow * co)
+    return setup + data, moved, macs / V
+
+
 TARGET.add_intrinsic(Intrinsic(
     "hlscnn_conv2d", planner=plan_conv2d, sample=_sample_conv2d,
     tol=0.05, options={"wgt_bits": 16},
     doc="non-grouped 2D convolution in 8/16-bit fixed point"))
 TARGET.add_rewrites(_rewrites)
+TARGET.add_cost_model(COSTS)
 TARGET.add_vt2_cases(_vt2)
 TARGET.add_mapping_cases(_mapping_cases)
 register_target(TARGET)

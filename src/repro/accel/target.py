@@ -12,6 +12,9 @@ This module is that thesis as an API: one object per accelerator owning
   setup/data-stream split and driver chunking),
 * its numerics/ideal reference hooks (shape + fp32-oracle semantics fed to
   the IR layer) and optional deployment kernels,
+* its :class:`CostModel` — per-intrinsic analytic costs (interface command
+  count, bytes moved, estimated cycles) derived from operand shapes, which
+  drive cost-based extraction and the Executor's multi-device scheduler,
 * its VT1–VT3 validation declarations (conformance samples, VT2 fragment
   pairs, VT3 ILA-vs-kernel checks, Table-2 mapping cases).
 
@@ -62,6 +65,122 @@ class PlanContext:
     @staticmethod
     def ncmds(jobs: Sequence[SimJob]) -> int:
         return sum(len(j.frag.setup) + len(j.data) for j in jobs)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Predicted cost of one intrinsic invocation (or one SimJob batch).
+
+    ``commands``     interface commands issued (MMIO writes), after any
+                     per-op calibration scale;
+    ``bytes_moved``  host<->device traffic in bytes;
+    ``cycles``       estimated device cycles (command issue + compute);
+    ``raw_commands`` the uncalibrated analytic command prediction —
+                     what ``CostModel.calibrate`` fits against, so repeated
+                     calibration converges regardless of the scale in
+                     effect when the estimate was recorded.
+    """
+
+    commands: float
+    bytes_moved: float
+    cycles: float
+    raw_commands: float = 0.0
+
+    def __add__(self, other: "CostEstimate") -> "CostEstimate":
+        return CostEstimate(
+            self.commands + other.commands,
+            self.bytes_moved + other.bytes_moved,
+            self.cycles + other.cycles,
+            self.raw_commands + other.raw_commands,
+        )
+
+
+class CostModel:
+    """A target's declared analytic cost model, one pricing rule per
+    intrinsic: ``fn(attrs, child_shapes) -> (commands, bytes_moved,
+    compute_cycles)``. ILA models every accelerator through one uniform
+    command interface, so cost decomposes uniformly too:
+
+        cycles = cycles_per_command * commands + compute_cycles
+
+    ``commands`` is the analytically predicted interface command count for
+    the shapes at hand; :meth:`calibrate` fits a per-op correction from the
+    *observed* command counts the Executor records (``Executor.stats``), so
+    the analytic model converges on what the planners actually emit.
+    Extraction (``core/compile.make_cost_fn``) and the Executor's device
+    scheduler consume :meth:`estimate` / :meth:`job_cycles`.
+    """
+
+    def __init__(self, target: str, cycles_per_command: float = 1.0):
+        self.target = target
+        self.cycles_per_command = float(cycles_per_command)
+        self._ops: Dict[str, Callable] = {}
+        #: per-op multiplicative correction on the predicted command count,
+        #: fitted by :meth:`calibrate` (1.0 = uncalibrated analytic model)
+        self.command_scale: Dict[str, float] = {}
+
+    def op(self, name: str):
+        """Decorator registering the pricing rule for intrinsic ``name``."""
+
+        def deco(fn):
+            self._ops[name] = fn
+            return fn
+
+        return deco
+
+    def covers(self, op: str) -> bool:
+        return op in self._ops
+
+    def ops(self) -> List[str]:
+        return list(self._ops)
+
+    def estimate(self, op: str, attrs, child_shapes) -> CostEstimate:
+        """Price one invocation of ``op`` on operands of ``child_shapes``."""
+        fn = self._ops[op]
+        raw, nbytes, compute = fn(
+            dict(attrs or {}), [tuple(s) for s in child_shapes]
+        )
+        commands = float(raw) * self.command_scale.get(op, 1.0)
+        cycles = self.cycles_per_command * commands + float(compute)
+        return CostEstimate(commands, float(nbytes), cycles, float(raw))
+
+    def job_cycles(self, n_commands: float) -> float:
+        """Scheduler estimate for a SimJob batch of ``n_commands`` interface
+        commands (the compute term is already proportional to the data
+        stream for every bundled fragment, so commands dominate ranking)."""
+        return self.cycles_per_command * float(n_commands)
+
+    def calibrate(self, stats) -> Dict[str, float]:
+        """Fit per-op command-count scales from ``Executor.stats``.
+
+        Each :class:`~repro.core.codegen.InvocationStat` carries the
+        analytic prediction made at plan time (``stat.est``) and the
+        observed interface command count (``stat.n_commands``); the fit is
+        the per-op ratio of total observed to total predicted commands
+        (so invocations weigh in proportion to their command volume),
+        against the *raw* (uncalibrated) predictions — re-calibrating over
+        stats recorded under any mix of earlier scales converges instead
+        of compounding. Invocations that issued no interface commands
+        (deployment-kernel fast paths record ``n_commands == 0``) are
+        skipped: they observed nothing to fit against. Returns the fitted
+        scales (also stored on the model, so subsequent :meth:`estimate`
+        calls are calibrated).
+        """
+        pred: Dict[str, float] = {}
+        obs: Dict[str, float] = {}
+        for s in stats:
+            if (
+                getattr(s, "est", None) is None
+                or not self.covers(s.op)
+                or s.n_commands <= 0
+            ):
+                continue
+            pred[s.op] = pred.get(s.op, 0.0) + s.est.raw_commands
+            obs[s.op] = obs.get(s.op, 0.0) + float(s.n_commands)
+        for op, p in pred.items():
+            if p > 0:
+                self.command_scale[op] = obs[op] / p
+        return dict(self.command_scale)
 
 
 @dataclasses.dataclass
@@ -123,6 +242,8 @@ class AcceleratorTarget:
         self.capabilities = dict(capabilities or {})
         self.doc = doc
         self.intrinsics: Dict[str, Intrinsic] = {}
+        #: declared analytic cost model (None until ``add_cost_model``)
+        self.cost_model: Optional[CostModel] = None
         #: per-target LRU of CompiledFragments (setup streams + cached state)
         self.fragments = FragmentCache()
         self._rewrite_fns: List[Callable[[], List[Rewrite]]] = []
@@ -135,6 +256,14 @@ class AcceleratorTarget:
     def add_intrinsic(self, intr: Intrinsic) -> Intrinsic:
         self.intrinsics[intr.op] = intr
         return intr
+
+    def add_cost_model(self, model: CostModel) -> CostModel:
+        """Declare this target's cost model. Extraction falls back to a
+        uniform accelerator-op cost for targets without one, but the
+        conformance suite requires every registered target to price every
+        intrinsic it claims."""
+        self.cost_model = model
+        return model
 
     def add_rewrites(self, fn: Callable[[], List[Rewrite]]) -> None:
         """Register a thunk producing this target's IR->intrinsic rewrites
@@ -195,3 +324,12 @@ def register_target(target: AcceleratorTarget) -> AcceleratorTarget:
             counts=not intr.passthrough,
         )
     return target
+
+
+def unregister_target(target: AcceleratorTarget) -> None:
+    """Remove ``target`` from the registry and the IR extension table (the
+    inverse of :func:`register_target`; used by tests that register
+    synthetic targets and must leave the process-wide registry clean)."""
+    TARGETS.unregister(target.name)
+    for op in target.intrinsics:
+        ir.unregister_accel_op(op)

@@ -41,7 +41,7 @@ from ..core.ila import (
     ILA, BulkWrite, CompiledFragment, DataStream, PackedStream,
 )
 from .target import (
-    AcceleratorTarget, Intrinsic, SimJob, VT2Case, register_target,
+    AcceleratorTarget, CostModel, Intrinsic, SimJob, VT2Case, register_target,
 )
 
 V = 16              # interface lanes
@@ -349,6 +349,27 @@ def _mapping_cases(rng):
     return [("EwMul", mul_case), ("Sigmoid", sigmoid_case)]
 
 
+# Cost model: operand row streams + config tail per chunk; the 16-lane ALU
+# retires V elements per cycle (sigmoid takes a few iterations per element).
+COSTS = CostModel("vecunit", cycles_per_command=1.0)
+
+
+def _cost_ew(n_operands):
+    def cost(attrs, shapes):
+        n = int(np.prod(np.broadcast_shapes(*shapes))) if shapes else 1
+        rows = max(1, -(-n // MAX_COLS))
+        chunks = -(-rows // MAX_ROWS)
+        words = rows * (MAX_COLS // V)
+        lanes = 1.0 if n_operands == 2 else 4.0   # sigmoid iterates per element
+        return n_operands * words + 3 * chunks, 4 * (n_operands + 1) * n, lanes * n / V
+
+    return cost
+
+
+COSTS.op("veu_mul")(_cost_ew(2))
+COSTS.op("veu_sigmoid")(_cost_ew(1))
+
+
 TARGET.add_intrinsic(Intrinsic(
     "veu_mul", planner=lambda ctx, x, a: plan_ew(ctx, x, a, "mul"),
     shape=_shape_mul, ideal=_ideal_mul, sample=_sample_mul, tol=1e-3,
@@ -358,6 +379,7 @@ TARGET.add_intrinsic(Intrinsic(
     shape=_shape_unary, ideal=_ideal_sigmoid, sample=_sample_sigmoid, tol=1e-3,
     doc="element-wise logistic sigmoid"))
 TARGET.add_rewrites(_rewrites)
+TARGET.add_cost_model(COSTS)
 TARGET.add_vt2_cases(_vt2)
 TARGET.add_mapping_cases(_mapping_cases)
 register_target(TARGET)

@@ -34,7 +34,7 @@ from ..core.ila import (
 )
 from . import numerics
 from .target import (
-    AcceleratorTarget, Intrinsic, SimJob, VT2Case, register_target,
+    AcceleratorTarget, CostModel, Intrinsic, SimJob, VT2Case, register_target,
 )
 
 T = 16               # tile side (the 16x16 GEMM core)
@@ -561,6 +561,32 @@ def _mapping_cases(rng):
     return [("GEMM", gemm_case)]
 
 
+COSTS = CostModel("vta", cycles_per_command=1.0)
+
+
+def _numel(shapes):
+    return int(np.prod(np.broadcast_shapes(*shapes))) if shapes else 1
+
+
+@COSTS.op("vta_gemm")
+def _cost_gemm(attrs, shapes):
+    (m, k), (n, _) = shapes[0], shapes[1]
+    setup = -(-n * k // T) + 4          # weight tiles resident in wgt SRAM
+    data = m * -(-k // T) + 4           # activation tile stream + launch
+    moved = 4 * (m * k + n * k + m * n)
+    return setup + data, moved, m * n * k / (T * T)
+
+
+def _cost_alu(attrs, shapes):
+    n = _numel(shapes)
+    ops = len(shapes)                   # one tile stream per operand
+    return ops * -(-n // T) + 4, 4 * (ops + 1) * n, n / T
+
+
+COSTS.op("vta_add")(_cost_alu)
+COSTS.op("vta_relu")(_cost_alu)
+
+
 TARGET.add_intrinsic(Intrinsic(
     "vta_gemm", planner=plan_gemm, kernel=kernel_gemm, sample=_sample_gemm,
     tol=0.02, doc="tiled int8 GEMM on the 16x16 core"))
@@ -571,6 +597,7 @@ TARGET.add_intrinsic(Intrinsic(
     "vta_relu", planner=plan_relu, sample=_sample_relu, tol=1e-4,
     doc="vector ALU relu (max with 0)"))
 TARGET.add_rewrites(_rewrites)
+TARGET.add_cost_model(COSTS)
 TARGET.add_vt2_cases(_vt2)
 TARGET.add_vt3_check("gemm_ila_vs_int8_gemm_kernel", _vt3_gemm)
 TARGET.add_mapping_cases(_mapping_cases)

@@ -34,24 +34,41 @@ fragment cache. Minibatched evaluation flows through :meth:`Executor.run_many`.
 (the pre-fragment-compiler behavior); ``engine="eager"`` interprets commands
 one by one. Both exist as bit-exact references for the compiled path.
 
-Per-invocation statistics (op, rel-error vs ideal, value ranges) are
-collected — the "handy debugging information" the paper's authors gave the
-accelerator developers to diagnose the HLSCNN weight-quantization bug —
-and aggregated per target by :meth:`Executor.stats_summary`;
+Multi-device scheduling
+-----------------------
+
+The Executor owns a :class:`DeviceRegistry`: ``devices_per_target`` simulated
+device instances per registered target, each with its **own fragment cache**
+(its own "SRAM" — setup streams re-simulate per device, exactly as a real
+driver loads weights into each physical accelerator). Signature-grouped
+SimJob batches are assigned to devices by estimated cycles with greedy LPT
+(longest processing time first onto the least-loaded device), the classic
+2-approximation for makespan. Cycle estimates come from the owning target's
+declared :class:`~repro.accel.target.CostModel`. Because ILA simulation is a
+pure function of architectural state, device placement never changes
+results — all engines stay bit-exact for any device count.
+
+Per-invocation statistics (op, rel-error vs ideal, value ranges, predicted
+cost) are collected — the "handy debugging information" the paper's authors
+gave the accelerator developers to diagnose the HLSCNN weight-quantization
+bug — and aggregated per target by :meth:`Executor.stats_summary`, which
+also reports per-device utilization and estimated-cycle columns;
 :meth:`Executor.cache_info` surfaces per-target warm-cache health for the
 serving path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
 from . import ir
-from .ila import TARGETS
-from ..accel.target import PlanContext, SimJob  # importing registers bundled targets
+from .ila import CompiledFragment, FragmentCache, TARGETS
+from ..accel.target import (  # importing registers bundled targets
+    CostEstimate, PlanContext, SimJob,
+)
 
 
 @dataclasses.dataclass
@@ -62,6 +79,109 @@ class InvocationStat:
     out_min: float
     out_max: float
     n_commands: int
+    #: CostModel prediction made at plan time (None if the target declares
+    #: no model); ``CostModel.calibrate`` fits command scales from these
+    est: Optional[CostEstimate] = None
+
+
+class _NullDeviceType:
+    """Placement stand-in for fragments of unregistered ILAs (no device
+    pool): index 0 means "setup already cached", so no cold-load term."""
+
+    index = 0
+
+
+_NullDevice = _NullDeviceType()
+
+
+class SimDevice:
+    """One simulated accelerator instance of a target.
+
+    Device 0 shares the target's process-wide fragment cache (the planners
+    already build fragments there), so the single-device default is
+    bit-and-cost-identical to the pre-device Executor. Devices >= 1 own a
+    private :class:`~repro.core.ila.FragmentCache`: their setup streams
+    re-simulate on first use — each device loads its own weights, like
+    distinct physical accelerators — and stay warm per device thereafter.
+    """
+
+    def __init__(self, target, index: int):
+        self.target = target
+        self.index = index
+        self.name = f"{target.name}[{index}]"
+        self.fragments = target.fragments if index == 0 else FragmentCache()
+        self.busy_cycles = 0.0
+        self.n_jobs = 0
+        self.n_groups = 0
+
+    def resolve(self, frag: CompiledFragment) -> CompiledFragment:
+        """This device's instance of ``frag`` (device-local setup state)."""
+        if self.index == 0:
+            return frag
+        return self.fragments.get(
+            frag.key,
+            lambda: CompiledFragment(frag.ila, frag.key, frag.setup, dict(frag.meta)),
+        )
+
+    def account(self, n_jobs: int, cycles: float) -> None:
+        self.n_groups += 1
+        self.n_jobs += n_jobs
+        self.busy_cycles += cycles
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "jobs": self.n_jobs,
+            "groups": self.n_groups,
+            "est_cycles": self.busy_cycles,
+        }
+
+
+class DeviceRegistry:
+    """N simulated device instances per registered target, created lazily
+    (targets may register after the Executor is constructed)."""
+
+    def __init__(self, devices_per_target: Union[int, Dict[str, int]] = 1):
+        self.devices_per_target = devices_per_target
+        self._devices: Dict[str, List[SimDevice]] = {}
+
+    def n_for(self, name: str) -> int:
+        if isinstance(self.devices_per_target, dict):
+            return max(1, int(self.devices_per_target.get(name, 1)))
+        return max(1, int(self.devices_per_target))
+
+    def devices(self, target) -> List[SimDevice]:
+        devs = self._devices.get(target.name)
+        if devs is None or len(devs) != self.n_for(target.name):
+            devs = [SimDevice(target, i) for i in range(self.n_for(target.name))]
+            self._devices[target.name] = devs
+        return devs
+
+    def owner(self, frag: CompiledFragment):
+        """The registered target owning ``frag`` (matched by ILA identity);
+        None for fragments of unregistered ILAs (executed unscheduled)."""
+        for t in TARGETS.all():
+            if t.ila is frag.ila:
+                return t
+        return None
+
+    def pick(self, target) -> SimDevice:
+        """Least-loaded device of ``target`` (the LPT assignment step)."""
+        return min(self.devices(target), key=lambda d: (d.busy_cycles, d.index))
+
+    def summary(self) -> Dict[str, Dict[str, Dict[str, float]]]:
+        """Per-target per-device accounting with utilization relative to the
+        target's makespan (most-loaded device = 1.0)."""
+        out: Dict[str, Dict[str, Dict[str, float]]] = {}
+        for tname, devs in self._devices.items():
+            makespan = max((d.busy_cycles for d in devs), default=0.0)
+            out[tname] = {
+                d.name: dict(
+                    d.summary(),
+                    utilization=(d.busy_cycles / makespan) if makespan > 0 else 0.0,
+                )
+                for d in devs
+            }
+        return out
 
 
 class Executor:
@@ -71,6 +191,12 @@ class Executor:
     name (e.g. a weight-datatype selection for a backend with configurable
     numerics); planners read them through their
     :class:`~repro.accel.target.PlanContext`.
+
+    ``devices_per_target`` sizes the :class:`DeviceRegistry`: an int applies
+    to every target, a dict keys per-target counts by name. With more than
+    one device per target, signature-grouped SimJob batches are scheduled
+    greedy-LPT by CostModel cycle estimates (see the module docstring);
+    results are bit-identical for any count.
     """
 
     def __init__(
@@ -80,6 +206,7 @@ class Executor:
         jit_sim: bool = True,
         engine: Optional[str] = None,
         target_options: Optional[Dict[str, Dict[str, Any]]] = None,
+        devices_per_target: Union[int, Dict[str, int]] = 1,
     ):
         assert mode in ("ila", "kernel", "ideal")
         self.mode = mode
@@ -87,6 +214,7 @@ class Executor:
         self.engine = engine or ("compiled" if jit_sim else "eager")
         assert self.engine in ("compiled", "jit", "eager")
         self.target_options = {k: dict(v) for k, v in (target_options or {}).items()}
+        self.devices = DeviceRegistry(devices_per_target)
         self.stats: List[InvocationStat] = []
 
     # ------------------------------------------------------------------
@@ -150,7 +278,7 @@ class Executor:
         return rec(e)
 
     # ------------------------------------------------------------------
-    def _record(self, op, backend, out, ideal, ncmds):
+    def _record(self, op, backend, out, ideal, ncmds, est=None):
         if not self.collect_stats:
             return
         out = np.asarray(out, np.float64)
@@ -158,12 +286,24 @@ class Executor:
         denom = np.linalg.norm(ideal)
         err = float(np.linalg.norm(ideal - out) / denom) if denom > 0 else 0.0
         self.stats.append(
-            InvocationStat(op, backend, err, float(out.min()), float(out.max()), ncmds)
+            InvocationStat(
+                op, backend, err, float(out.min()), float(out.max()), ncmds, est
+            )
         )
 
-    def _ctx(self, target) -> PlanContext:
+    def _estimate(self, target, x: ir.Call, args) -> Optional[CostEstimate]:
+        """CostModel prediction for one invocation (None without a model)."""
+        model = target.cost_model
+        if model is None or not model.covers(x.op):
+            return None
+        return model.estimate(x.op, dict(x.attrs), [np.shape(a) for a in args])
+
+    def _ctx(self, target, est: Optional[CostEstimate] = None) -> PlanContext:
+        record = self._record if est is None else (
+            lambda *a, _est=est, **kw: self._record(*a, est=_est, **kw)
+        )
         return PlanContext(
-            record=self._record, options=self.target_options.get(target.name, {})
+            record=record, options=self.target_options.get(target.name, {})
         )
 
     def _exec_accel(self, x: ir.Call, args: List[np.ndarray]):
@@ -173,7 +313,7 @@ class Executor:
         if intr.passthrough:
             return args[0]
         if self.mode == "kernel" and intr.kernel is not None:
-            return intr.kernel(self._ctx(target), x, args)
+            return intr.kernel(self._ctx(target, self._estimate(target, x, args)), x, args)
         jobs, assemble = self._plan(x, args)
         return assemble(self._execute_jobs(jobs))
 
@@ -188,12 +328,24 @@ class Executor:
             raise NotImplementedError(
                 f"target {target.name!r} declares no planner for {x.op!r}"
             )
-        return intr.planner(self._ctx(target), x, args)
+        return intr.planner(self._ctx(target, self._estimate(target, x, args)), x, args)
 
     # -- job execution ---------------------------------------------------
+    def _group_cycles(self, frag, idxs: List[int], jobs, target, device) -> float:
+        """Estimated cycles for one signature group on ``device``: data
+        commands for every job, plus the setup stream when this device has
+        not simulated it yet (cold weight load)."""
+        n = sum(len(jobs[i].data) for i in idxs)
+        if device.index > 0 and frag.key not in device.fragments:
+            n += len(frag.setup)
+        model = target.cost_model if target is not None else None
+        return model.job_cycles(n) if model is not None else float(n)
+
     def _execute_jobs(self, jobs: List[SimJob]) -> List[np.ndarray]:
         """Run simulation jobs, batching those that share a fragment and a
-        data-stream signature through one vmapped simulator call."""
+        data-stream signature through one vmapped simulator call, and
+        scheduling the batches over the target's simulated devices
+        (greedy LPT on CostModel cycle estimates)."""
         results: List[Optional[np.ndarray]] = [None] * len(jobs)
         if self.engine != "compiled":
             for i, j in enumerate(jobs):
@@ -205,9 +357,31 @@ class Executor:
         groups: Dict[Tuple, List[int]] = {}
         for i, j in enumerate(jobs):
             groups.setdefault((id(j.frag), j.data.sig()), []).append(i)
-        for idxs in groups.values():
+        # longest-processing-time-first over each target's device pool; a
+        # single-device pool preserves the original group order exactly
+        order = []
+        for key, idxs in groups.items():
+            frag = jobs[idxs[0]].frag
+            target = self.devices.owner(frag)
+            rank = self._group_cycles(frag, idxs, jobs, target, _NullDevice)
+            order.append((rank, idxs, target))
+        multi = any(
+            t is not None and self.devices.n_for(t.name) > 1 for _, _, t in order
+        )
+        if multi:
+            order.sort(key=lambda e: -e[0])
+        for _rank, idxs, target in order:
             frag = jobs[idxs[0]].frag
             read = jobs[idxs[0]].read
+            if target is not None:
+                device = self.devices.pick(target)
+                # book against the chosen device, including its cold-setup
+                # cost (the ranking pass above is placement-blind)
+                device.account(
+                    len(idxs),
+                    self._group_cycles(frag, idxs, jobs, target, device),
+                )
+                frag = device.resolve(frag)
             if len(idxs) == 1:
                 j = jobs[idxs[0]]
                 results[idxs[0]] = np.asarray(read(frag.run(j.data)))[j.window]
@@ -222,18 +396,42 @@ class Executor:
     def reset_stats(self) -> None:
         self.stats.clear()
 
-    def stats_summary(self) -> Dict[str, Dict[str, float]]:
+    def stats_summary(self) -> Dict[str, Dict[str, Any]]:
         """Aggregate invocation stats per target: invocation count, total
-        interface commands, worst relative error vs the fp32 oracle."""
-        out: Dict[str, Dict[str, float]] = {}
+        interface commands, worst relative error vs the fp32 oracle, total
+        CostModel-estimated cycles, and — once jobs have been scheduled —
+        per-device rows (jobs, estimated cycles, utilization relative to
+        the target's makespan)."""
+        out: Dict[str, Dict[str, Any]] = {}
         for s in self.stats:
             tname = ir.accel_op_target(s.op) or s.backend
             d = out.setdefault(
-                tname, {"invocations": 0, "commands": 0, "max_rel_err": 0.0}
+                tname,
+                {"invocations": 0, "commands": 0, "max_rel_err": 0.0,
+                 "est_cycles": 0.0},
             )
             d["invocations"] += 1
             d["commands"] += s.n_commands
             d["max_rel_err"] = max(d["max_rel_err"], s.rel_err)
+            if s.est is not None:
+                d["est_cycles"] += s.est.cycles
+        for tname, devs in self.devices.summary().items():
+            out.setdefault(
+                tname,
+                {"invocations": 0, "commands": 0, "max_rel_err": 0.0,
+                 "est_cycles": 0.0},
+            )["devices"] = devs
+        return out
+
+    def calibrate_cost_models(self) -> Dict[str, Dict[str, float]]:
+        """Run every registered target's ``CostModel.calibrate`` against the
+        invocation stats collected so far (observed interface command counts
+        vs the analytic predictions); returns the fitted per-op command
+        scales keyed by target name."""
+        out: Dict[str, Dict[str, float]] = {}
+        for t in TARGETS.all():
+            if t.cost_model is not None:
+                out[t.name] = t.cost_model.calibrate(self.stats)
         return out
 
     def cache_info(self, targets: Optional[Sequence[str]] = None) -> Dict[str, Dict]:

@@ -462,24 +462,54 @@ def run_rewrites(
 # --------------------------------------------------------------------------
 
 
-def default_cost(head: Head, child_costs: Sequence[float]) -> float:
+def host_op_cost(op: str) -> float:
+    """Extraction cost of one *host* (non-accelerator) op: heavy compute is
+    expensive, glue is cheap — make offloading win wherever a mapping
+    exists (the paper's maximize-#accelerator-ops objective)."""
+    if op in ("dense", "conv2d", "lstm", "attention", "lstm_cell"):
+        return 1000.0               # heavy compute left on host: expensive
+    if op in ("layer_norm", "softmax", "reduce_max", "reduce_mean", "reduce_sum"):
+        return 100.0
+    return 2.0                      # cheap glue
+
+
+def default_cost(head: Head, child_costs: Sequence[float], child_shapes=()) -> float:
     """Paper's proof-of-concept cost: maximize #accelerator ops == make
-    accelerator ops cheap and plain IR compute expensive."""
+    accelerator ops cheap and plain IR compute expensive. The registry
+    cost model (``core/compile.make_cost_fn``) refines the flat accel-op
+    cost with per-target CostModel cycle estimates; this remains the
+    shape-blind fallback."""
     base = sum(child_costs)
     if head[0] != "op":
         return base + 0.01
     op = head[1]
     if op in ir.ACCEL_OPS:
         return base + 1.0           # accelerator invocation: cheap
-    if op in ("dense", "conv2d", "lstm", "attention", "lstm_cell"):
-        return base + 1000.0        # heavy compute left on host: expensive
-    if op in ("layer_norm", "softmax", "reduce_max", "reduce_mean", "reduce_sum"):
-        return base + 100.0
-    return base + 2.0               # cheap glue
+    return base + host_op_cost(op)
 
 
-def extract(eg: EGraph, root: int, cost_fn=default_cost) -> ir.Expr:
-    """Bottom-up DP extraction of the min-cost expression for ``root``."""
+def _describe_class(eg: EGraph, cid: int, best) -> str:
+    """One diagnostic line for an unresolved e-class: its candidate heads
+    and, per candidate, which child e-classes never got a finite cost."""
+    parts = []
+    for n in eg.classes.get(cid, ()):
+        label = n.head[1] if n.head[0] == "op" else f"{n.head[0]}:{n.head[1]}"
+        missing = sorted({eg.find(c) for c in n.children if eg.find(c) not in best})
+        parts.append(f"{label}{'(blocked by e-classes ' + str(missing) + ')' if missing else '(infinite cost)'}")
+    return f"e-class {cid} [shape={eg.shape.get(cid)}]: " + ", ".join(parts)
+
+
+def extract_best(eg: EGraph, root: int, cost_fn=default_cost) -> Tuple[ir.Expr, float]:
+    """Bottom-up DP extraction of the min-cost expression for ``root``.
+
+    ``cost_fn(head, child_costs, child_shapes) -> float`` may return
+    ``inf`` to veto a candidate (e.g. a forbidden target's intrinsic);
+    non-finite candidates never resolve an e-class. Returns the expression
+    and its total cost. On failure, the error names the unresolved root
+    e-class, its candidate heads, which child e-classes blocked each
+    candidate, and the registered accelerator targets consulted — so a
+    mapping failure is debuggable instead of a bare "no expression".
+    """
     root = eg.find(root)
     best: Dict[int, Tuple[float, ENode]] = {}
     changed = True
@@ -491,7 +521,7 @@ def extract(eg: EGraph, root: int, cost_fn=default_cost) -> ir.Expr:
             raise RuntimeError("extract: no fixpoint")
         for cid, nodes in eg.classes.items():
             for n in nodes:
-                cc = []
+                cc, cs = [], []
                 ok = True
                 for ch in n.children:
                     ch = eg.find(ch)
@@ -499,14 +529,33 @@ def extract(eg: EGraph, root: int, cost_fn=default_cost) -> ir.Expr:
                         ok = False
                         break
                     cc.append(best[ch][0])
+                    cs.append(eg.shape.get(ch))
                 if not ok:
                     continue
-                c = cost_fn(n.head, cc)
+                c = cost_fn(n.head, cc, cs)
+                if not np.isfinite(c):
+                    continue
                 if cid not in best or c < best[cid][0]:
                     best[cid] = (c, n)
                     changed = True
     if root not in best:
-        raise RuntimeError("extract: root has no finite-cost expression")
+        from .ila import TARGETS  # local import: ila never imports egraph
+
+        unresolved = [c for c in eg.classes if c not in best]
+        lines = [_describe_class(eg, root, best)]
+        for cid in unresolved[:8]:
+            if cid != root:
+                lines.append(_describe_class(eg, cid, best))
+        raise RuntimeError(
+            "extract: root has no finite-cost expression.\n"
+            f"  resolved {len(best)}/{len(eg.classes)} e-classes; "
+            f"{len(unresolved)} unresolved.\n"
+            f"  root {lines[0]}\n"
+            + "".join(f"  also unresolved: {l}\n" for l in lines[1:])
+            + f"  registered targets consulted: {TARGETS.names()} "
+            "(an op claimed by no selected target, or forbidden by the "
+            "selection policy, prices to infinity)"
+        )
 
     memo: Dict[int, ir.Expr] = {}
 
@@ -525,4 +574,9 @@ def extract(eg: EGraph, root: int, cost_fn=default_cost) -> ir.Expr:
         memo[cid] = e
         return e
 
-    return build(root)
+    return build(root), best[root][0]
+
+
+def extract(eg: EGraph, root: int, cost_fn=default_cost) -> ir.Expr:
+    """Min-cost expression for ``root`` (see :func:`extract_best`)."""
+    return extract_best(eg, root, cost_fn)[0]

@@ -616,6 +616,9 @@ class FragmentCache:
     def __len__(self):
         return len(self._entries)
 
+    def __contains__(self, key: Tuple) -> bool:
+        return key in self._entries
+
     def info(self) -> Dict[str, int]:
         return {"size": len(self._entries), "hits": self.hits, "misses": self.misses}
 
@@ -650,6 +653,16 @@ class TargetRegistry:
         self._targets[target.name] = target
         for op, intr in target.intrinsics.items():
             self._by_op[op] = (target, intr)
+
+    def unregister(self, name: str) -> None:
+        """Remove a registered target (inverse of :meth:`register`)."""
+        target = self._targets.pop(name, None)
+        if target is None:
+            return
+        for op in target.intrinsics:
+            claimed = self._by_op.get(op)
+            if claimed is not None and claimed[0] is target:
+                del self._by_op[op]
 
     def names(self) -> List[str]:
         return list(self._targets)

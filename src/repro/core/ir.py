@@ -90,6 +90,13 @@ def register_accel_op(
     ACCEL_OPS.add(op)
 
 
+def unregister_accel_op(op: str) -> None:
+    """Inverse of :func:`register_accel_op` (synthetic-target test cleanup)."""
+    if op in _ACCEL_EXT:
+        del _ACCEL_EXT[op]
+        ACCEL_OPS.discard(op)
+
+
 def accel_op_shape_fn(op: str) -> Optional[Callable]:
     spec = _ACCEL_EXT.get(op)
     return spec.shape if spec is not None else None

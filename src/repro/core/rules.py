@@ -191,19 +191,30 @@ from .ila import TARGETS
 from .. import accel as _accel  # noqa: F401  (registers the bundled targets)
 
 
-def accelerator_rewrites(targets: Optional[Sequence[str]] = None) -> List[Rewrite]:
+def accelerator_rewrites(
+    targets: Optional[Sequence[str]] = None,
+    exclude: Sequence[str] = (),
+) -> List[Rewrite]:
     """The IR-accelerator rewrites of every selected target (None = all
-    registered, in registration order)."""
+    registered, in registration order). ``exclude`` drops named targets —
+    how a ``SelectionPolicy.forbid`` keeps a vetoed target's intrinsics out
+    of the e-graph entirely rather than merely pricing them to infinity."""
+    skip = set(exclude)
     out: List[Rewrite] = []
     for t in TARGETS.all(targets):
-        out += t.rewrites()
+        if t.name not in skip:
+            out += t.rewrites()
     return out
 
 
-def all_rewrites(targets: Optional[Sequence[str]] = None, flexible: bool = True) -> List[Rewrite]:
+def all_rewrites(
+    targets: Optional[Sequence[str]] = None,
+    flexible: bool = True,
+    exclude: Sequence[str] = (),
+) -> List[Rewrite]:
     """flexible=False == the paper's *exact matching* baseline (only the
     IR-accelerator rewrites); flexible=True adds the compiler-IR rewrites."""
-    out = accelerator_rewrites(targets)
+    out = accelerator_rewrites(targets, exclude)
     if flexible:
         out = compiler_ir_rewrites() + out
     return out

@@ -1,7 +1,23 @@
-"""Serving launcher: prefill + batched autoregressive decode.
+"""Serving launcher: prefill + batched autoregressive decode, or a
+persistent co-simulation service over the accelerator ILAs.
+
+LLM decode:
 
     python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
         [--batch 4] [--prompt 16] [--gen 16]
+
+Co-sim serving (ROADMAP: persistent Executor with warm fragment caches):
+
+    python -m repro.launch.serve --cosim resmlp --devices-per-target 2 \
+        [--requests 4] [--batch 8]
+
+compiles the named application once (cost-driven flexible matching), keeps
+one Executor alive across requests — fragment caches stay warm, compiled
+data runners stay traced — and serves minibatch requests through
+``Executor.run_many``. ``--devices-per-target`` sizes the simulated device
+fleet per accelerator; the Executor's scheduler spreads signature-grouped
+SimJob batches over it by estimated cycles (greedy LPT). After the request
+loop the per-device utilization and cache-health tables are printed.
 """
 from __future__ import annotations
 
@@ -11,9 +27,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from ..configs import get_config, get_smoke_config
-from ..models import api
 
 
 def _force(*trees):
@@ -25,15 +38,56 @@ def _force(*trees):
                 leaf.block_until_ready()
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def serve_cosim(args) -> None:
+    from ..core import apps, ir
+    from ..core.codegen import Executor
+    from ..core.compile import compile_program
+
+    by_name = {k.lower(): v for k, v in apps.APPLICATIONS.items()}
+    if args.cosim.lower() not in by_name:
+        raise SystemExit(
+            f"unknown application {args.cosim!r}; "
+            f"available: {sorted(apps.APPLICATIONS)}"
+        )
+    builder, _dsl = by_name[args.cosim.lower()]
+    expr, params = builder()
+    res = compile_program(expr)
+    print(f"compiled {args.cosim}: offloads={res.accelerator_calls} "
+          f"policy={res.stats['extraction']['policy']}")
+
+    xshape = next(v for v in ir.postorder(expr)
+                  if isinstance(v, ir.Var) and v.name == "x").shape
+    ex = Executor("ila", devices_per_target=args.devices_per_target)
+    rng = np.random.default_rng(args.seed)
+    for req in range(args.requests):
+        envs = [
+            dict(params, x=rng.standard_normal(xshape).astype(np.float32))
+            for _ in range(args.batch)
+        ]
+        t0 = time.perf_counter()
+        outs = ex.run_many(res.program, envs)
+        _force(outs)
+        dt = time.perf_counter() - t0
+        print(f"request {req}: batch={args.batch} "
+              f"{dt:.3f}s ({dt / args.batch * 1e3:.1f} ms/sample)"
+              f"{'   [cold caches]' if req == 0 else ''}")
+
+    print("\nper-target summary (devices: jobs / est cycles / utilization):")
+    for tname, row in sorted(ex.stats_summary().items()):
+        devs = row.pop("devices", {})
+        print(f"  {tname}: invocations={row['invocations']} "
+              f"commands={row['commands']} est_cycles={row['est_cycles']:.0f} "
+              f"max_rel_err={row['max_rel_err']:.4f}")
+        for dname, d in sorted(devs.items()):
+            print(f"    {dname}: jobs={d['jobs']} groups={d['groups']} "
+                  f"est_cycles={d['est_cycles']:.0f} "
+                  f"utilization={d['utilization']:.2f}")
+    print("\ncache health:", ex.cache_info())
+
+
+def serve_llm(args) -> None:
+    from ..configs import get_config, get_smoke_config
+    from ..models import api
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -69,6 +123,29 @@ def main():
     gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
     print(f"decode: {args.gen-1} steps x{B} in {dt:.2f}s ({dt/(args.gen-1)*1e3:.0f} ms/step)")
     print(gen)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="LLM decode mode: model config name")
+    ap.add_argument("--cosim", default=None,
+                    help="co-sim serving mode: application name (repro.core.apps)")
+    ap.add_argument("--devices-per-target", type=int, default=1,
+                    help="simulated device instances per accelerator target")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.cosim is not None:
+        serve_cosim(args)
+    elif args.arch is not None:
+        serve_llm(args)
+    else:
+        ap.error("one of --arch (LLM decode) or --cosim (co-sim serving) is required")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,7 @@ import pytest
 
 from repro.core import ir, rules
 from repro.core.egraph import EGraph, extract, run_rewrites
-from repro.core.compile import compile_program
+from repro.core.compile import SelectionPolicy, compile_program
 
 rng = np.random.default_rng(0)
 
@@ -112,6 +112,45 @@ class TestEGraph:
             r1 = np.asarray(ir.interpret(expr, env))
             r2 = np.asarray(ir.interpret(res.program, env))
             np.testing.assert_allclose(r1, r2, rtol=1e-3, atol=1e-3, err_msg=name)
+
+    def test_cost_driven_selection_and_policy_overrides(self):
+        """A bare dense is claimed by two targets (vta_gemm directly;
+        fasr_linear via the dense+0-bias introduction): the default policy
+        picks by CostModel, ``forbid``/``prefer`` re-route the mapping, and
+        every variant preserves semantics."""
+        a = ir.Var("a", (4, 32))
+        w = ir.Var("w", (16, 32))
+        prog = ir.dense(a, w)
+        env = _env(a=rng.standard_normal((4, 32)),
+                   w=rng.standard_normal((16, 32)))
+        ref = np.asarray(ir.interpret(prog, env))
+        cases = [
+            (None, "vta"),
+            (SelectionPolicy(forbid=("vta",)), "flexasr"),
+            (SelectionPolicy(prefer=("flexasr",)), "flexasr"),
+        ]
+        for policy, winner in cases:
+            res = compile_program(prog, targets=("flexasr", "vta"), policy=policy)
+            other = "flexasr" if winner == "vta" else "vta"
+            assert res.accelerator_calls[winner] == 1, (policy, res.accelerator_calls)
+            assert res.accelerator_calls[other] == 0, (policy, res.accelerator_calls)
+            assert res.stats["extraction"]["op_wins"].get(winner) == 1
+            np.testing.assert_allclose(
+                ref, np.asarray(ir.interpret(res.program, env)), rtol=1e-4, atol=1e-4)
+
+    def test_extract_failure_reports_diagnostics(self):
+        """The extraction error names the unresolved e-class, its candidate
+        heads, and the targets consulted (satellite: debuggable failures)."""
+        a = ir.Var("a", (4, 32))
+        w = ir.Var("w", (16, 32))
+        c = ir.Var("c", (16,))
+        prog = ir.call("fasr_linear", a, w, c)
+        with pytest.raises(RuntimeError) as exc:
+            compile_program(prog, targets=("vta",))
+        msg = str(exc.value)
+        assert "fasr_linear" in msg
+        assert "registered targets consulted" in msg
+        assert "resolved" in msg
 
     def test_guard_blocks_oversized_linear(self):
         # feature dim beyond FlexASR SRAM must NOT map to fasr_linear

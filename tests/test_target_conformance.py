@@ -14,18 +14,34 @@ draws random operands within the target's declared capability limits):
   ideal semantics, and compiling the compiler-IR side against that target
   alone extracts the intrinsic while preserving interpretation;
 * coverage: every registered target receives >= 1 offload from at least one
-  of the stock applications under a default (all-targets) compile.
+  of the stock applications under a default (all-targets) compile;
+* cost conformance: every registered target declares a CostModel pricing
+  every intrinsic it claims; costs are positive and monotone in batch size;
+  calibration fits predicted command counts to the Executor's observations;
+* selection policy: when two targets claim one op, the default policy picks
+  the target whose CostModel is cheaper and ``forbid``/``prefer`` flip the
+  mapping (checked with synthetic competing targets, registered and
+  unregistered inside the test — no bundled backend is named);
+* multi-device scheduling: with ``devices_per_target=2`` results stay
+  bit-exact and ``stats_summary`` reports per-device utilization.
+
+Set ``REPRO_DEVICES_PER_TARGET=2`` (as CI does in a dedicated step) to run
+the *whole* suite through the multi-device scheduler path.
 
 A new backend that registers through ``repro.accel.target`` is covered here
 automatically — this file never names a target.
 """
+import os
+
 import numpy as np
 import pytest
 
 from repro.core import apps, ir, validate
 from repro.core.codegen import Executor
-from repro.core.compile import compile_program
-from repro.core.ila import TARGETS
+from repro.core.compile import SelectionPolicy, compile_program
+from repro.core.ila import ILA, TARGETS
+
+_DEVICES = int(os.environ.get("REPRO_DEVICES_PER_TARGET", "1"))
 
 
 def _intrinsic_params():
@@ -47,6 +63,7 @@ def _case(t, intr, seed):
 
 
 def _executor(t, intr, **kw):
+    kw.setdefault("devices_per_target", _DEVICES)
     return Executor("ila", target_options={t.name: intr.options}, **kw)
 
 
@@ -125,3 +142,188 @@ def test_every_target_offloaded_by_some_app(app_offloads, tname):
     a new target starts receiving offloads with zero compiler edits."""
     hits = {app: calls.get(tname, 0) for app, calls in app_offloads.items()}
     assert any(n >= 1 for n in hits.values()), f"{tname} never offloaded: {hits}"
+
+
+# ---------------------------------------------------------------------------
+# CostModel conformance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t", TARGETS.all(), ids=TARGETS.names())
+def test_cost_model_prices_every_claimed_intrinsic(t):
+    """Every registered target declares a CostModel covering every intrinsic
+    it claims, and pricing realistic operands yields positive cycles.
+    Sampled intrinsics price their sample's shapes; pass-through markers
+    (no sample) price a generic tensor."""
+    assert t.cost_model is not None, f"{t.name} declares no CostModel"
+    rng = np.random.default_rng(0)
+    for op, intr in t.intrinsics.items():
+        assert t.cost_model.covers(op), f"{t.name} does not price {op!r}"
+        if intr.sample is not None:
+            args, attrs = intr.sample(rng)
+            shapes = [np.shape(a) for a in args]
+        else:
+            shapes, attrs = [(8, 8)], {}
+        est = t.cost_model.estimate(op, attrs, shapes)
+        assert est.cycles > 0, f"{t.name}:{op} non-positive cycles {est}"
+        assert est.commands >= 0 and est.bytes_moved >= 0
+
+
+@pytest.mark.parametrize("t,intr", _intrinsic_params())
+def test_cost_monotone_in_batch_size(t, intr):
+    """Scaling the data operand's leading dimension (the batch/row axis for
+    every declared intrinsic) must strictly increase estimated cycles and
+    never decrease commands or bytes."""
+    rng = np.random.default_rng(0)
+    args, attrs = intr.sample(rng)
+    shapes = [np.shape(a) for a in args]
+
+    def scaled(k):
+        # scale the data operand's leading dim; elementwise mates (operands
+        # sharing the data operand's full shape) scale with it so the op
+        # stays broadcast-legal
+        out = [
+            ((s[0] * k,) + tuple(s[1:]))
+            if (i == 0 or tuple(s) == tuple(shapes[0])) else tuple(s)
+            for i, s in enumerate(shapes)
+        ]
+        return out
+
+    e1 = t.cost_model.estimate(intr.op, attrs, scaled(1))
+    e4 = t.cost_model.estimate(intr.op, attrs, scaled(4))
+    assert e1.cycles > 0 and e1.commands > 0
+    assert e4.cycles > e1.cycles, f"{t.name}:{intr.op} cycles not monotone"
+    assert e4.commands >= e1.commands and e4.bytes_moved >= e1.bytes_moved
+
+
+@pytest.mark.parametrize("t,intr", _intrinsic_params())
+def test_calibration_fits_observed_commands(t, intr):
+    """CostModel.calibrate fits per-op command scales so predictions match
+    the interface command counts the Executor actually observed."""
+    expr, env = _case(t, intr, 5)
+    ex = _executor(t, intr)
+    ex.run(expr, env)
+    observed = sum(s.n_commands for s in ex.stats if s.op == intr.op)
+    if observed == 0:
+        pytest.skip("intrinsic records no commands")
+    saved = dict(t.cost_model.command_scale)
+    try:
+        ex.calibrate_cost_models()
+        shapes = [np.shape(env[f"_{i}"]) for i in range(len(env))]
+        attrs = dict(expr.attrs)
+        refit = t.cost_model.estimate(intr.op, attrs, shapes)
+        assert refit.commands == pytest.approx(observed, rel=1e-6), (
+            f"{t.name}:{intr.op} calibrated commands {refit.commands} "
+            f"!= observed {observed}"
+        )
+    finally:
+        t.cost_model.command_scale.clear()
+        t.cost_model.command_scale.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# Selection policy: two targets claim one op
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def competing_targets():
+    """Two synthetic targets both claiming the (otherwise unclaimed) host op
+    ``maximum``, with cost models an order of magnitude apart. Registered
+    for the duration of the test only — the registry is restored after."""
+    from repro.accel.target import (
+        AcceleratorTarget, CostModel, Intrinsic, register_target,
+        unregister_target,
+    )
+    from repro.core.egraph import P, Rewrite, V as PV
+
+    def build(name, op, cycles_per_elem):
+        target = AcceleratorTarget(name, ILA(name))
+        target.add_intrinsic(Intrinsic(
+            op,
+            shape=lambda attrs, cs: tuple(np.broadcast_shapes(cs[0], cs[1])),
+            ideal=lambda attrs, a: np.maximum(a[0], a[1]),
+        ))
+        costs = CostModel(name)
+
+        def price(attrs, shapes, c=cycles_per_elem):
+            n = int(np.prod(np.broadcast_shapes(*shapes)))
+            return 2 * n // 16 + 1, 12 * n, c * n
+
+        costs.op(op)(price)
+        target.add_cost_model(costs)
+        target.add_rewrites(lambda op=op: [
+            Rewrite(f"{name}-max", P("maximum", PV("a"), PV("b")),
+                    P(op, PV("a"), PV("b")))
+        ])
+        return register_target(target)
+
+    cheap = build("t_cheap", "tcheap_max", 1.0)
+    pricey = build("t_pricey", "tpricey_max", 50.0)
+    try:
+        yield cheap, pricey
+    finally:
+        unregister_target(cheap)
+        unregister_target(pricey)
+
+
+def test_policy_picks_cheaper_target_and_overrides_flip(competing_targets):
+    """Two targets claim one op: the default (cheapest) policy selects the
+    target whose CostModel predicts fewer cycles; ``forbid`` removes it and
+    flips the mapping; ``prefer`` overrides the cost ranking."""
+    cheap, pricey = competing_targets
+    a, b = ir.Var("a", (8, 8)), ir.Var("b", (8, 8))
+    prog = ir.call("maximum", a, b)
+    names = (cheap.name, pricey.name)
+
+    res = compile_program(prog, targets=names)
+    assert res.accelerator_calls[cheap.name] == 1
+    assert res.accelerator_calls[pricey.name] == 0
+
+    res = compile_program(prog, targets=names,
+                          policy=SelectionPolicy(forbid=(cheap.name,)))
+    assert res.accelerator_calls[cheap.name] == 0
+    assert res.accelerator_calls[pricey.name] == 1
+
+    res = compile_program(prog, targets=names,
+                          policy=SelectionPolicy(prefer=(pricey.name,)))
+    assert res.accelerator_calls[cheap.name] == 0
+    assert res.accelerator_calls[pricey.name] == 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-device scheduling
+# ---------------------------------------------------------------------------
+
+
+def _first_sampled_intrinsic(t):
+    for intr in t.intrinsics.values():
+        if intr.sample is not None and intr.planner is not None:
+            return intr
+    return None
+
+
+@pytest.mark.parametrize("t", TARGETS.all(), ids=TARGETS.names())
+def test_multi_device_bit_exact_and_utilization_reported(t):
+    """devices_per_target=2: scheduled execution stays bit-identical to the
+    single-device run, and stats_summary grows per-device rows with
+    estimated cycles and utilization."""
+    intr = _first_sampled_intrinsic(t)
+    if intr is None:
+        pytest.skip(f"{t.name} declares no runnable sampled intrinsic")
+    expr, env = _case(t, intr, 7)
+    _, env2 = _case(t, intr, 8)
+    ex1 = _executor(t, intr, devices_per_target=1)
+    ex2 = _executor(t, intr, devices_per_target=2)
+    outs1 = ex1.run_many(expr, [env, env2, env])
+    outs2 = ex2.run_many(expr, [env, env2, env])
+    for o1, o2 in zip(outs1, outs2):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    summary = ex2.stats_summary()[t.name]
+    assert summary["est_cycles"] > 0
+    devs = summary["devices"]
+    assert len(devs) == 2
+    for row in devs.values():
+        assert {"jobs", "groups", "est_cycles", "utilization"} <= set(row)
+    assert any(r["utilization"] == 1.0 for r in devs.values())
+    assert sum(r["jobs"] for r in devs.values()) >= 3
