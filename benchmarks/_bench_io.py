@@ -1,0 +1,50 @@
+"""Machine-readable benchmark output shared by the bench drivers.
+
+``write_bench_json`` merges rows into ``BENCH_cosim.json`` (schema below) so
+the co-simulation perf trajectory is tracked across PRs: each row is one
+measurement (``us_per_call``) plus a human-readable ``derived`` note. Partial
+runs (a single bench invoked as ``__main__``) update their rows in place;
+``benchmarks/run.py`` rewrites the full set.
+
+    {
+      "schema": 1,
+      "generated_unix": 1700000000.0,
+      "rows": {"<name>": {"us_per_call": 12.3, "derived": "..."}, ...}
+    }
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Sequence, Tuple
+
+BENCH_PATH = os.environ.get("REPRO_BENCH_JSON", "BENCH_cosim.json")
+
+
+def write_bench_json(
+    rows: Sequence[Tuple[str, float, str]], path: str = None, fresh: bool = False
+) -> str:
+    """Merge ``(name, us_per_call, derived)`` rows into the bench JSON.
+
+    ``fresh=True`` (the full ``run.py`` sweep) discards rows from earlier
+    runs instead of merging, so renamed/retired benchmarks don't linger.
+    Returns the path written.
+    """
+    path = path or BENCH_PATH
+    data: Dict = {"schema": 1, "rows": {}}
+    if not fresh and os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and isinstance(prev.get("rows"), dict):
+                data["rows"] = prev["rows"]
+        except (OSError, ValueError):
+            pass  # unreadable/corrupt file: rewrite from scratch
+    data["generated_unix"] = time.time()
+    for name, us, derived in rows:
+        data["rows"][str(name)] = {"us_per_call": float(us), "derived": str(derived)}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

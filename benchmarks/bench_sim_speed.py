@@ -11,12 +11,23 @@ FlexASR LinearLayer fragment:
                data packing, unrolled tail (steady state; cold = first
                invocation for a parameter set, including setup simulation)
   batched    — the same, vmapped over a stack of data streams
+  pipelined  — the Executor's async engine: host packing of chunk k+1 (pack
+               worker thread) overlaps JAX simulation of chunk k, results
+               materialize at assemble barriers (end-to-end co-sim eval on
+               the pack-heavy FlexASR LSTM workload, vs the synchronous
+               compiled engine; asserts bit-exact parity vs compiled AND
+               the eager reference first)
+  mesh       — ``run_data_batch`` with its batch axis sharded over a
+               ``jax.sharding.Mesh`` of the host's devices (skipped on
+               single-device hosts; start with
+               XLA_FLAGS=--xla_force_host_platform_device_count=N to try)
 
 Timing methodology: ``time.perf_counter``, device results forced with
 ``block_until_ready()`` inside the timed region, per-iteration min/median
 reported. Also reported: fragment-cache hit/miss counts and jit trace
 counts (retraces stay bounded — power-of-two bucketing for streams, one
-compiled executor per data-stream signature).
+compiled executor per data-stream signature). Run as __main__ this writes
+its rows into BENCH_cosim.json (benchmarks/_bench_io).
 """
 from __future__ import annotations
 
@@ -65,6 +76,105 @@ def batch_crossover(frag, make_data, sizes=(1, 2, 4, 8, 16, 32), n=8):
         if crossover is None and bat_ps < seq_ps:
             crossover = B
     return rows, crossover
+
+
+def pipelined_eval_speed(n_eval=64, batch=32, reps=5):
+    """End-to-end co-sim eval of the pack-heavy FlexASR LSTM application:
+    pipelined vs synchronous-compiled engine, bit-exactness asserted against
+    compiled AND the eager per-command reference before timing. Returns
+    benchmark rows (speedup, cold-vs-warm, optional mesh-sharded row)."""
+    from repro.core import apps, cosim, ila, ir
+    from repro.core.codegen import Executor
+    from repro.core.compile import compile_program
+
+    print("\n-- pipelined vs sync engine: FlexASR LSTM co-sim eval "
+          f"({n_eval} points, batch {batch}) --")
+    expr, params = apps.build_lstm_wlm()
+    res = compile_program(expr, targets=("flexasr",))
+    xshape = next(v for v in ir.postorder(expr)
+                  if isinstance(v, ir.Var) and v.name == "x").shape
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((n_eval,) + tuple(xshape)).astype(np.float32)
+    y = rng.integers(0, 8, n_eval)
+
+    # bit-exact parity gate: pipelined == compiled on every sample, and both
+    # == the eager per-command reference on a subset (eager is ~1000x slower)
+    envs = [dict(params, x=X[i]) for i in range(4)]
+    out_c = Executor("ila", engine="compiled").run_many(res.program, envs)
+    out_p = Executor("ila", engine="pipelined", pipeline_chunk=2).run_many(
+        res.program, envs)
+    for a, b in zip(out_c, out_p):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "pipelined engine drifted from compiled"
+    out_e = Executor("ila", engine="eager").run_many(res.program, envs[:2])
+    for a, b in zip(out_c, out_e):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "compiled engine drifted from the eager reference"
+    print("bit-exact parity (pipelined == compiled == eager): True")
+
+    ex_sync = Executor("ila", engine="compiled")
+    ex_pipe = Executor("ila", engine="pipelined")
+    t0 = time.perf_counter()
+    cosim.eval_classification(res.program, params, X, y, ex_pipe,
+                              n_eval=n_eval, batch_size=batch)
+    cold = time.perf_counter() - t0
+
+    def timed(ex):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            cosim.eval_classification(res.program, params, X, y, ex,
+                                      n_eval=n_eval, batch_size=batch)
+            ts.append(time.perf_counter() - t0)
+        return min(ts), statistics.median(ts)
+
+    timed(ex_sync)  # warm the sync engine's traces before interleaving
+    sync_min, sync_med = timed(ex_sync)
+    pipe_min, pipe_med = timed(ex_pipe)
+    speedup = sync_min / pipe_min
+    stages = ex_pipe.pipeline_summary()
+    per_pt = lambda s: s / n_eval * 1e3
+    print(f"compiled (sync):    {per_pt(sync_min):7.2f} ms/point min / "
+          f"{per_pt(sync_med):.2f} median")
+    print(f"pipelined:          {per_pt(pipe_min):7.2f} ms/point min / "
+          f"{per_pt(pipe_med):.2f} median   ({speedup:.2f}x vs sync; "
+          f"target >= 1.3x)")
+    print(f"pipelined cold:     {per_pt(cold):7.2f} ms/point (first eval, "
+          f"engine traces)")
+    print(f"pipeline stages: pack {stages['pack_s']:.2f}s / dispatch "
+          f"{stages['dispatch_s']:.2f}s / readback {stages['readback_s']:.2f}s")
+    rows = [
+        ("cosim_eval_sync", sync_min / n_eval * 1e6, "compiled engine, LSTM eval"),
+        ("cosim_eval_pipelined", pipe_min / n_eval * 1e6,
+         f"speedup={speedup:.2f}x vs sync"),
+        ("cosim_eval_pipelined_cold", cold / n_eval * 1e6,
+         "first pipelined eval (cold engine traces)"),
+    ]
+
+    # mesh-sharded batch tier: only meaningful with >1 host device
+    if len(jax.devices()) > 1:
+        frag = fa.lstm_fragment(params["lstm_wi"], params["lstm_wh"],
+                                params["lstm_b"])
+        datas = [fa.pack_lstm_data(frag, rng.standard_normal(
+            (xshape[0], xshape[2])).astype(np.float32)) for _ in range(16)]
+        ref = np.asarray(jax.vmap(fa.read_full)(frag.run_batch(datas)))[:16]
+        base_min, _ = _time(lambda: frag.run_batch(datas), n=reps)
+        mesh = ila.set_stream_mesh("auto")
+        try:
+            out = np.asarray(jax.vmap(fa.read_full)(frag.run_batch(datas)))[:16]
+            assert np.array_equal(ref, out), "mesh sharding changed results"
+            mesh_min, _ = _time(lambda: frag.run_batch(datas), n=reps)
+        finally:
+            ila.set_stream_mesh(None)
+        print(f"mesh-sharded run_data_batch ({mesh.devices.size} devices): "
+              f"{mesh_min*1e3:.2f} ms vs {base_min*1e3:.2f} ms unsharded "
+              f"({base_min/mesh_min:.2f}x), bit-exact")
+        rows.append(("cosim_batch_mesh", mesh_min * 1e6,
+                     f"{mesh.devices.size} devices, {base_min/mesh_min:.2f}x vs unsharded"))
+    else:
+        print("mesh-sharded row skipped: single-device host "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=N to enable)")
+    return rows
 
 
 def run():
@@ -154,7 +264,7 @@ def run():
              if crossover is not None else
              "batching never wins on this backend (dispatch already amortized)"))
 
-    return [
+    rows = [
         ("sim_batch_crossover", float(crossover or 0),
          f"batch wins from B={crossover}" if crossover else "no crossover <= 32"),
         ("sim_steady_compiled", warm_min * 1e6, f"speedup={speedup:.1f}x"),
@@ -163,7 +273,14 @@ def run():
         ("sim_speed_jit", jit_min * 1e6, f"n_cmds={len(cmds)}"),
         ("sim_speed_eager", eager * 1e6, f"n_cmds={len(cmds)}"),
     ]
+    rows += pipelined_eval_speed()
+    return rows
 
 
 if __name__ == "__main__":
-    run()
+    try:
+        from benchmarks._bench_io import write_bench_json
+    except ImportError:  # invoked as a script: benchmarks/ itself is on sys.path
+        from _bench_io import write_bench_json
+
+    print("wrote", write_bench_json(run()))

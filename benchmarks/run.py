@@ -1,6 +1,9 @@
 """Benchmark driver: one function per paper table + framework benches.
 
-Prints ``name,us_per_call,derived`` CSV (plus human-readable tables).
+Prints ``name,us_per_call,derived`` CSV (plus human-readable tables) and
+writes the machine-readable ``BENCH_cosim.json`` (see benchmarks/_bench_io)
+so the co-sim perf trajectory — steady-state throughput, cold-vs-warm,
+pipelined-vs-sync speedup, batch crossover — is tracked across PRs.
 Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 from __future__ import annotations
@@ -35,6 +38,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},\"{derived}\"")
+
+    from benchmarks._bench_io import write_bench_json
+
+    path = write_bench_json(rows, fresh=True)
+    print(f"\nwrote {len(rows)} rows to {path}")
 
 
 if __name__ == "__main__":

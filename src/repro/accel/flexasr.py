@@ -790,7 +790,46 @@ def _rewrites():
 
 # --------------------------------------------------------------------------
 # Intrinsic planners (op -> SimJobs; driver chunking lives here)
+#
+# Planners are the *pack* stage of the pipelined Executor: they run in a
+# pack worker thread and must stay pure numpy (GIL-releasing, no JAX
+# dispatch). The fp32 references recorded for the rel-err stats are
+# therefore computed with numpy mirrors of the IR oracle — diagnostics
+# only, never fed into the simulated numerics.
 # --------------------------------------------------------------------------
+
+
+def _np_sigmoid(x: np.ndarray) -> np.ndarray:
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def _ideal_lstm(xs: np.ndarray, wi: np.ndarray, wh: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """numpy mirror of ``ir._lstm`` (fused i,f,g,o gates) for plan-time
+    stats: ~1000x cheaper than per-sample eager-JAX dispatch on the pack
+    worker's hot path."""
+    T, B, _ = xs.shape
+    H = wh.shape[1]
+    h = np.zeros((B, H), np.float32)
+    c = np.zeros((B, H), np.float32)
+    outs = np.empty((T, B, H), np.float32)
+    for t in range(T):
+        gates = xs[t] @ wi.T + h @ wh.T + b
+        i = _np_sigmoid(gates[:, 0 * H : 1 * H])
+        f = _np_sigmoid(gates[:, 1 * H : 2 * H])
+        g = np.tanh(gates[:, 2 * H : 3 * H])
+        o = _np_sigmoid(gates[:, 3 * H : 4 * H])
+        c = f * c + i * g
+        h = o * np.tanh(c)
+        outs[t] = h
+    return outs
+
+
+def _ideal_attention(q: np.ndarray, k: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """numpy mirror of ``ir._attention`` for plan-time stats."""
+    s = (q @ np.swapaxes(k, -1, -2)) / np.sqrt(np.float32(q.shape[-1]))
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return p @ v
 
 
 def kernel_linear(ctx, x, args):
@@ -831,9 +870,7 @@ def plan_lstm(ctx, x, args):
     xs, wi, wh, b = args
     T, B, I = xs.shape
     H = wh.shape[1]
-    ideal = np.asarray(
-        ir._lstm(jnp.asarray(xs), jnp.asarray(wi), jnp.asarray(wh), jnp.asarray(b))
-    )
+    ideal = _ideal_lstm(xs, wi, wh, b)
     frag = lstm_fragment(wi, wh, b)
     jobs = [
         SimJob(frag, pack_lstm_data(frag, xs[:, bi]), read_full,
@@ -903,7 +940,7 @@ def plan_layernorm(ctx, x, args):
 
 def plan_attention(ctx, x, args):
     q, k, v = args
-    ideal = np.asarray(ir._attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)))
+    ideal = _ideal_attention(q, k, v)
     D = q.shape[-1]
     frag = attention_fragment(D)
     if q.ndim == 2:

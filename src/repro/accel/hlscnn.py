@@ -286,12 +286,36 @@ def _rewrites():
     ]
 
 
+def _ideal_conv2d(a: np.ndarray, w: np.ndarray, strides, padding) -> np.ndarray:
+    """numpy (im2col) mirror of ``ir._conv2d`` — NHWC x HWIO, for plan-time
+    stats. Planners are the pipelined Executor's pack stage and must not
+    dispatch JAX from the pack worker thread."""
+    if padding != (0, 0):
+        a = np.pad(
+            a, ((0, 0), (padding[0], padding[0]), (padding[1], padding[1]), (0, 0))
+        )
+    kh, kw, _ci, co = w.shape
+    sh, sw = strides
+    N, H, W, C = a.shape
+    oh, ow = (H - kh) // sh + 1, (W - kw) // sw + 1
+    cols = np.stack(
+        [
+            a[:, i : i + oh * sh : sh, j : j + ow * sw : sw, :]
+            for i in range(kh)
+            for j in range(kw)
+        ],
+        axis=3,
+    )  # (N, OH, OW, KH*KW, C)
+    out = cols.reshape(N * oh * ow, kh * kw * C) @ w.reshape(-1, co)
+    return out.reshape(N, oh, ow, co)
+
+
 def plan_conv2d(ctx, x, args):
     a, w = args
     strides = x.attr("strides")
     padding = x.attr("padding")
     wgt_bits = int(ctx.options.get("wgt_bits", 8))
-    ideal = np.asarray(ir._conv2d(jnp.asarray(a), jnp.asarray(w), strides, padding))
+    ideal = _ideal_conv2d(a, w, strides, padding)
     if padding != (0, 0):
         a = np.pad(
             a, ((0, 0), (padding[0], padding[0]), (padding[1], padding[1]), (0, 0))

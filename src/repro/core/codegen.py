@@ -34,6 +34,17 @@ fragment cache. Minibatched evaluation flows through :meth:`Executor.run_many`.
 (the pre-fragment-compiler behavior); ``engine="eager"`` interprets commands
 one by one. Both exist as bit-exact references for the compiled path.
 
+``engine="pipelined"`` layers an asynchronous dispatch pipeline on top of
+the compiled path: host packing (planner calls + batch stacking, vectorized
+numpy that releases the GIL) runs in a pack worker thread for chunk *k+1*
+while the main thread dispatches JAX simulation of chunk *k* (JAX dispatch
+is async, so readback of chunk *k-1* overlaps both), and results
+materialize only at ``assemble()`` barriers. Pipelining reorders
+*scheduling* only — per-sample packing, grouping semantics and simulation
+are the compiled engine's, so results stay bit-exact and deterministic
+(materialization and stat recording follow submission order). Set
+``REPRO_ENGINE=pipelined`` to make it the process default.
+
 Multi-device scheduling
 -----------------------
 
@@ -59,6 +70,9 @@ serving path.
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -67,8 +81,24 @@ import numpy as np
 from . import ir
 from .ila import CompiledFragment, FragmentCache, TARGETS
 from ..accel.target import (  # importing registers bundled targets
-    CostEstimate, PlanContext, SimJob,
+    CostEstimate, GroupTiming, PlanContext, SimJob,
 )
+
+ENGINES = ("compiled", "pipelined", "jit", "eager")
+
+#: process-wide pack worker for the pipelined engine. One thread by design:
+#: numpy packing releases the GIL and overlaps XLA compute, but multiple
+#: packing threads contend on the interpreter and run *slower* (measured).
+_PACK_POOL: Optional[ThreadPoolExecutor] = None
+
+
+def _pack_pool() -> ThreadPoolExecutor:
+    global _PACK_POOL
+    if _PACK_POOL is None:
+        _PACK_POOL = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-pack"
+        )
+    return _PACK_POOL
 
 
 @dataclasses.dataclass
@@ -82,6 +112,25 @@ class InvocationStat:
     #: CostModel prediction made at plan time (None if the target declares
     #: no model); ``CostModel.calibrate`` fits command scales from these
     est: Optional[CostEstimate] = None
+
+
+class _GroupResult:
+    """One dispatched group's (possibly still in-flight) device result with
+    memoized host materialization: ``np.asarray`` blocks until the async
+    simulation completes, and every job of the group shares the single
+    transfer."""
+
+    __slots__ = ("_dev", "_np")
+
+    def __init__(self, dev):
+        self._dev = dev
+        self._np = None
+
+    def materialize(self) -> np.ndarray:
+        if self._np is None:
+            self._np = np.asarray(self._dev)
+            self._dev = None
+        return self._np
 
 
 class _NullDeviceType:
@@ -127,6 +176,14 @@ class SimDevice:
         self.n_groups += 1
         self.n_jobs += n_jobs
         self.busy_cycles += cycles
+
+    def reset_accounting(self) -> None:
+        """Zero the scheduling accumulators (cycles/jobs/groups) without
+        touching the device's fragment cache — the warm state survives a
+        stats reset, exactly like a real device keeps its SRAM contents."""
+        self.busy_cycles = 0.0
+        self.n_jobs = 0
+        self.n_groups = 0
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -207,15 +264,35 @@ class Executor:
         engine: Optional[str] = None,
         target_options: Optional[Dict[str, Dict[str, Any]]] = None,
         devices_per_target: Union[int, Dict[str, int]] = 1,
+        pipeline_chunk: int = 8,
     ):
         assert mode in ("ila", "kernel", "ideal")
         self.mode = mode
         self.collect_stats = collect_stats
-        self.engine = engine or ("compiled" if jit_sim else "eager")
-        assert self.engine in ("compiled", "jit", "eager")
+        # explicit engine > REPRO_ENGINE env (lets CI/serving flip every
+        # Executor in the process) > jit_sim legacy default
+        self.engine = (
+            engine
+            or os.environ.get("REPRO_ENGINE")
+            or ("compiled" if jit_sim else "eager")
+        )
+        assert self.engine in ENGINES, f"unknown engine {self.engine!r}"
         self.target_options = {k: dict(v) for k, v in (target_options or {}).items()}
         self.devices = DeviceRegistry(devices_per_target)
+        #: samples planned per pack-pipeline stage in ``run_many`` (the
+        #: pipelined engine packs chunk k+1 while chunk k simulates)
+        self.pipeline_chunk = max(1, int(pipeline_chunk))
         self.stats: List[InvocationStat] = []
+        #: jit(vmap(read)) per read fn — re-vmapping per group call would
+        #: re-trace on the dispatch thread every time (holds a ref to the
+        #: read fn so the id key cannot be recycled)
+        self._batched_reads: Dict[int, Tuple[Callable, Callable]] = {}
+        #: per-group wall-clock records feeding CostModel.calibrate_from_timings
+        self.group_timings: List[GroupTiming] = []
+        #: accumulated per-stage wall clock (pack worker / dispatch / barrier)
+        self.stage_seconds: Dict[str, float] = dict.fromkeys(
+            ("pack_s", "dispatch_s", "readback_s"), 0.0
+        )
 
     # ------------------------------------------------------------------
     def run(self, e: ir.Expr, env: Dict[str, Any]):
@@ -255,16 +332,27 @@ class Executor:
                 ]
                 if (
                     self.mode == "ila"
-                    and self.engine == "compiled"
+                    and self.engine in ("compiled", "pipelined")
                     and TARGETS.has_planner(x.op)
                 ):
-                    plans, jobs = [], []
-                    for s in range(B):
-                        s_jobs, assemble = self._plan(x, sample_args[s])
-                        plans.append((len(jobs), len(s_jobs), assemble))
-                        jobs += s_jobs
-                    outs = self._execute_jobs(jobs)
-                    v = [asm(outs[o : o + n]) for (o, n, asm) in plans]
+                    if self.engine == "pipelined":
+                        v = self._node_pipelined(x, sample_args)
+                    else:
+                        plans, jobs = [], []
+                        t0 = time.perf_counter()
+                        for s in range(B):
+                            s_jobs, assemble = self._plan(x, sample_args[s])
+                            plans.append((len(jobs), len(s_jobs), assemble))
+                            jobs += s_jobs
+                        dt = time.perf_counter() - t0
+                        self.stage_seconds["pack_s"] += dt
+                        if self.collect_stats:
+                            self.group_timings.append(GroupTiming(
+                                TARGETS.intrinsic(x.op)[0].name, len(jobs),
+                                PlanContext.data_ncmds(jobs), pack_s=dt,
+                            ))
+                        outs = self._execute_jobs(jobs)
+                        v = [asm(outs[o : o + n]) for (o, n, asm) in plans]
                 else:
                     v = [self._exec_accel(x, sample_args[s]) for s in range(B)]
             else:
@@ -334,29 +422,53 @@ class Executor:
     def _group_cycles(self, frag, idxs: List[int], jobs, target, device) -> float:
         """Estimated cycles for one signature group on ``device``: data
         commands for every job, plus the setup stream when this device has
-        not simulated it yet (cold weight load)."""
+        not simulated it yet (cold weight load). Under the pipelined engine
+        a latency-calibrated CostModel prices the group ``max(pack, sim)``
+        — the stage the group actually occupies the pipeline for — instead
+        of their serial sum."""
         n = sum(len(jobs[i].data) for i in idxs)
         if device.index > 0 and frag.key not in device.fragments:
             n += len(frag.setup)
         model = target.cost_model if target is not None else None
-        return model.job_cycles(n) if model is not None else float(n)
+        if model is None:
+            return float(n)
+        return model.job_cycles(n, pipelined=self.engine == "pipelined")
 
-    def _execute_jobs(self, jobs: List[SimJob]) -> List[np.ndarray]:
-        """Run simulation jobs, batching those that share a fragment and a
-        data-stream signature through one vmapped simulator call, and
-        scheduling the batches over the target's simulated devices
-        (greedy LPT on CostModel cycle estimates)."""
-        results: List[Optional[np.ndarray]] = [None] * len(jobs)
-        if self.engine != "compiled":
-            for i, j in enumerate(jobs):
-                cmds = j.frag.full_commands(j.data)
-                ila = j.frag.ila
-                st = ila.simulate_jit(cmds) if self.engine == "jit" else ila.simulate(cmds)
-                results[i] = np.asarray(j.read(st))[j.window]
-            return results
+    @staticmethod
+    def _group_jobs(jobs: List[SimJob]) -> Dict[Tuple, List[int]]:
+        """Batchable-group partition: jobs sharing a fragment and a
+        data-stream signature run through one vmapped simulator call."""
         groups: Dict[Tuple, List[int]] = {}
         for i, j in enumerate(jobs):
             groups.setdefault((id(j.frag), j.data.sig()), []).append(i)
+        return groups
+
+    def _dispatch_jobs(
+        self,
+        jobs: List[SimJob],
+        sync: bool = False,
+        pack_ahead: bool = False,
+        preps: Optional[Dict[Tuple, Any]] = None,
+    ) -> List[Callable[[], np.ndarray]]:
+        """Group jobs by (fragment, data signature), schedule the groups
+        over the owning targets' simulated devices (greedy LPT on CostModel
+        estimates) and *dispatch* their simulations, returning one lazy
+        materializer per job (JAX dispatch is asynchronous, so the calls
+        return while simulation is still in flight).
+
+        ``sync=True`` (the compiled engine) materializes each group before
+        dispatching the next — the pre-pipeline behavior — and records a
+        :class:`~repro.accel.target.GroupTiming` with the group's exact
+        dispatch-to-materialization wall clock for latency calibration.
+        ``pack_ahead=True`` (the pipelined engine) stages each group's host
+        packing (stacking, shared-payload detection) in the pack worker so
+        it overlaps the previous group's simulation; ``preps`` passes in
+        host packings already prepared elsewhere (``_node_pipelined`` packs
+        them in the worker alongside planning), keyed like
+        :meth:`_group_jobs`.
+        """
+        handles: List[Optional[Callable[[], np.ndarray]]] = [None] * len(jobs)
+        groups = self._group_jobs(jobs)
         # longest-processing-time-first over each target's device pool; a
         # single-device pool preserves the original group order exactly
         order = []
@@ -370,31 +482,173 @@ class Executor:
         )
         if multi:
             order.sort(key=lambda e: -e[0])
+        preps = dict(preps or {})
+        if pack_ahead:
+            for _rank, idxs, _t in order:
+                if len(idxs) > 1:
+                    frag = jobs[idxs[0]].frag
+                    key = (id(frag), jobs[idxs[0]].data.sig())
+                    if key not in preps:
+                        preps[key] = _pack_pool().submit(
+                            frag.prepare_batch, [jobs[i].data for i in idxs]
+                        )
+        t_disp = time.perf_counter()
         for _rank, idxs, target in order:
             frag = jobs[idxs[0]].frag
             read = jobs[idxs[0]].read
+            n_cmds = sum(len(jobs[i].data) for i in idxs)
             if target is not None:
                 device = self.devices.pick(target)
                 # book against the chosen device, including its cold-setup
                 # cost (the ranking pass above is placement-blind)
+                if device.index > 0 and frag.key not in device.fragments:
+                    n_cmds += len(frag.setup)
                 device.account(
                     len(idxs),
                     self._group_cycles(frag, idxs, jobs, target, device),
                 )
                 frag = device.resolve(frag)
+            stack_dt = 0.0
             if len(idxs) == 1:
+                t0 = time.perf_counter()
                 j = jobs[idxs[0]]
-                results[idxs[0]] = np.asarray(read(frag.run(j.data)))[j.window]
+                out = read(frag.run(j.data))
+                group = _GroupResult(out)
+                handles[idxs[0]] = (
+                    lambda g=group, w=j.window: g.materialize()[w]
+                )
             else:
-                sts = frag.run_batch([jobs[i].data for i in idxs])
-                fulls = np.asarray(jax.vmap(read)(sts))
+                prep = preps.get((id(jobs[idxs[0]].frag), jobs[idxs[0]].data.sig()))
+                if prep is not None:
+                    prepared = prep.result() if hasattr(prep, "result") else prep
+                elif sync:
+                    # host half timed apart so the GroupTiming pack/sim
+                    # split matches what the pipelined engine's pack stage
+                    # actually covers (planner packing + group stacking)
+                    t0 = time.perf_counter()
+                    prepared = frag.prepare_batch([jobs[i].data for i in idxs])
+                    stack_dt = time.perf_counter() - t0
+                else:
+                    prepared = frag.prepare_batch([jobs[i].data for i in idxs])
+                t0 = time.perf_counter()
+                sts = frag.run_prepared(prepared)
+                entry = self._batched_reads.get(id(read))
+                if entry is None:
+                    entry = (read, jax.jit(jax.vmap(read)))
+                    self._batched_reads[id(read)] = entry
+                fulls = entry[1](sts)
+                group = _GroupResult(fulls)
                 for bi, i in enumerate(idxs):
-                    results[i] = fulls[bi][jobs[i].window]
+                    handles[i] = (
+                        lambda g=group, b=bi, w=jobs[i].window: g.materialize()[b][w]
+                    )
+            if sync:
+                group.materialize()
+                if self.collect_stats:
+                    self.group_timings.append(GroupTiming(
+                        target.name if target is not None else frag.ila.name,
+                        len(idxs), n_cmds, pack_s=stack_dt,
+                        sim_s=time.perf_counter() - t0,
+                    ))
+        self.stage_seconds["dispatch_s"] += time.perf_counter() - t_disp
+        return handles
+
+    def _execute_jobs(self, jobs: List[SimJob]) -> List[np.ndarray]:
+        """Run simulation jobs to completion. The compiled engine executes
+        group-by-group (synchronous); the pipelined engine dispatches every
+        group asynchronously — host packing staged through the pack worker
+        — and materializes at the end, in job order."""
+        if self.engine in ("jit", "eager"):
+            results = []
+            for j in jobs:
+                cmds = j.frag.full_commands(j.data)
+                ila = j.frag.ila
+                st = ila.simulate_jit(cmds) if self.engine == "jit" else ila.simulate(cmds)
+                results.append(np.asarray(j.read(st))[j.window])
+            return results
+        sync = self.engine == "compiled"
+        handles = self._dispatch_jobs(jobs, sync=sync, pack_ahead=not sync)
+        t0 = time.perf_counter()
+        results = [h() for h in handles]
+        if not sync:
+            self.stage_seconds["readback_s"] += time.perf_counter() - t0
         return results
+
+    def _node_pipelined(self, x: ir.Call, sample_args: List[List[np.ndarray]]):
+        """Pipelined execution of one accelerator IR node across the B
+        samples of a ``run_many`` minibatch: samples are planned (host
+        packing, pure numpy) in :attr:`pipeline_chunk`-sized chunks on the
+        pack worker while the main thread dispatches the previous chunk's
+        simulations to the device queues; results materialize at the final
+        assemble barrier, in submission order (deterministic stats/order).
+        Chunking only regroups the vmapped batches — per-sample numerics
+        are grouping-independent, so results match the compiled engine
+        bit-for-bit."""
+        B = len(sample_args)
+        if B == 0:
+            return []
+        spans = [
+            range(i, min(i + self.pipeline_chunk, B))
+            for i in range(0, B, self.pipeline_chunk)
+        ]
+        target, _intr = TARGETS.intrinsic(x.op)
+
+        def plan_span(span):
+            """Pack stage, on the worker: plan every sample of the span
+            (planner packing, pure numpy) AND pre-stack its batchable
+            groups, so the main thread's dispatch is jit lookup + async
+            call only."""
+            t0 = time.perf_counter()
+            planned = [self._plan(x, sample_args[s]) for s in span]
+            jobs = [j for js, _ in planned for j in js]
+            preps = {
+                key: jobs[idxs[0]].frag.prepare_batch([jobs[i].data for i in idxs])
+                for key, idxs in self._group_jobs(jobs).items()
+                if len(idxs) > 1
+            }
+            dt = time.perf_counter() - t0
+            self.stage_seconds["pack_s"] += dt
+            if self.collect_stats:
+                self.group_timings.append(GroupTiming(
+                    target.name, len(jobs), PlanContext.data_ncmds(jobs),
+                    pack_s=dt,
+                ))
+            return planned, jobs, preps
+
+        fut = _pack_pool().submit(plan_span, spans[0])
+        stages = []
+        for ci in range(len(spans)):
+            planned, jobs, preps = fut.result()
+            if ci + 1 < len(spans):
+                fut = _pack_pool().submit(plan_span, spans[ci + 1])
+            handles = self._dispatch_jobs(jobs, preps=preps)
+            stages.append((planned, handles))
+        t0 = time.perf_counter()
+        v = []
+        for planned, handles in stages:
+            outs = [h() for h in handles]
+            o = 0
+            for js, asm in planned:
+                v.append(asm(outs[o : o + len(js)]))
+                o += len(js)
+        self.stage_seconds["readback_s"] += time.perf_counter() - t0
+        return v
 
     # -- statistics & cache surfacing ------------------------------------
     def reset_stats(self) -> None:
+        """Clear every accumulated statistic: invocation stats, per-group
+        timing records, per-stage timers AND the per-device scheduling
+        accumulators (cycles/jobs/groups) — so ``stats_summary()``
+        utilization after a reset reflects only post-reset work (the
+        serving path resets between warmup and measured requests). Warm
+        state (fragment caches, compiled runners) is untouched."""
         self.stats.clear()
+        self.group_timings.clear()
+        for k in self.stage_seconds:
+            self.stage_seconds[k] = 0.0
+        for devs in self.devices._devices.values():
+            for d in devs:
+                d.reset_accounting()
 
     def stats_summary(self) -> Dict[str, Dict[str, Any]]:
         """Aggregate invocation stats per target: invocation count, total
@@ -433,6 +687,35 @@ class Executor:
             if t.cost_model is not None:
                 out[t.name] = t.cost_model.calibrate(self.stats)
         return out
+
+    def calibrate_from_timings(self) -> Dict[str, Dict[str, float]]:
+        """Fit every registered target's wall-clock latency model
+        (``CostModel.calibrate_from_timings``) from the per-group timings
+        recorded so far. Synchronous (``compiled``) runs record exact
+        per-group sim timings, so the serving path calibrates during its
+        warmup requests and the pipelined scheduler then prices groups as
+        measured ``max(pack, sim)`` microseconds. Returns the fitted models
+        keyed by target name (targets without usable timings are omitted)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for t in TARGETS.all():
+            if t.cost_model is not None:
+                fit = t.cost_model.calibrate_from_timings(self.group_timings)
+                if fit:
+                    out[t.name] = fit
+        return out
+
+    def pipeline_summary(self) -> Dict[str, float]:
+        """Per-stage accumulated wall clock plus an overlap estimate:
+        ``overlap_s`` is pack time hidden behind simulation (pack runs in
+        the worker while the main thread dispatches/blocks), the pipelined
+        engine's whole win. All values reset with :meth:`reset_stats`."""
+        packed = self.stage_seconds["pack_s"]
+        busy = self.stage_seconds["dispatch_s"] + self.stage_seconds["readback_s"]
+        return dict(
+            self.stage_seconds,
+            groups=float(len(self.group_timings)),
+            overlap_s=min(packed, busy) if self.engine == "pipelined" else 0.0,
+        )
 
     def cache_info(self, targets: Optional[Sequence[str]] = None) -> Dict[str, Dict]:
         """Per-target warm-cache health: fragment-cache hits/misses plus jit

@@ -159,12 +159,26 @@ class CosimResult:
     invocation_stats: Dict[str, float]
 
 
+def _pipeline_batch(executor: Executor, batch_size: int) -> int:
+    """Feed ``run_many`` through the pipelined engine with at least two
+    pack/sim chunks per minibatch — a single-chunk minibatch has nothing to
+    overlap, so the pack worker would idle. No-op for synchronous engines
+    (identical numerics either way: batch composition never changes
+    per-sample results)."""
+    if getattr(executor, "engine", None) == "pipelined":
+        return max(batch_size, 2 * executor.pipeline_chunk)
+    return batch_size
+
+
 def eval_classification(program, params, X, y, executor: Executor, n_eval=100, batch_size=16):
     """Co-simulated accuracy, evaluated in minibatches: each batch's
     accelerator invocations run through one vmapped simulator call per IR
     node (``Executor.run_many``), with per-sample numerics identical to
-    sample-at-a-time evaluation."""
+    sample-at-a-time evaluation. With a pipelined executor the minibatch is
+    sized to keep its pack/sim pipeline full (host packing of one chunk
+    overlaps simulation of the previous)."""
     correct = 0
+    batch_size = _pipeline_batch(executor, batch_size)
     t0 = time.perf_counter()
     for i0 in range(0, n_eval, batch_size):
         idx = range(i0, min(i0 + batch_size, n_eval))
@@ -180,6 +194,7 @@ def eval_classification(program, params, X, y, executor: Executor, n_eval=100, b
 def eval_perplexity(program, params, Xtok, Ytok, executor: Executor, n_eval=50, batch_size=16):
     emb = params["_embed"]
     nll, count = 0.0, 0
+    batch_size = _pipeline_batch(executor, batch_size)
     t0 = time.perf_counter()
     model_params = {k: v for k, v in params.items() if k != "_embed"}
     for i0 in range(0, n_eval, batch_size):

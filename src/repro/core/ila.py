@@ -40,11 +40,33 @@ retracing per distinct stream length. This module provides:
   and simulate the per-sample *data* stream;
 * ``FragmentCache``   — an LRU keyed on (op, operand shapes, params
   fingerprint) holding compiled fragments across Executor invocations.
+
+Pipelined execution support
+---------------------------
+
+The batched tiers are split into a **host half** (pure numpy: padding,
+stacking, shared-payload detection — safe to run in a pack worker thread,
+releases the GIL) and a **dispatch half** (jit lookup + the asynchronous JAX
+call, main thread). ``CompiledFragment.prepare_batch``/``run_prepared``
+expose the split to the Executor's pipelined engine, which packs group k+1
+while group k simulates and materializes results only at assemble barriers.
+
+Mesh sharding
+-------------
+
+``set_stream_mesh`` configures a ``jax.sharding.Mesh`` over the host's
+devices; the dispatch halves then shard the stacked **batch axis** of
+``simulate_batch``/``run_data_batch`` with a ``NamedSharding`` (setup state
+stays replicated — the runner is a pure pytree-in/out vmap), co-simulating a
+fleet of independent streams across all local devices. Batch dims are padded
+to a multiple of the mesh size; sharding reorders *placement*, never
+numerics, so results stay bit-exact.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -66,6 +88,75 @@ def bucket_length(n: int, min_len: int = MIN_BUCKET) -> int:
     """Next power-of-two >= max(n, min_len): the padded stream length."""
     n = max(int(n), min_len)
     return 1 << (n - 1).bit_length()
+
+
+# --------------------------------------------------------------------------
+# Stream mesh: shard the stacked batch axis over the host's devices
+# --------------------------------------------------------------------------
+
+#: process-wide mesh over which batched simulation shards its stream axis
+#: (None = single-device dispatch, the default)
+_STREAM_MESH: Optional["jax.sharding.Mesh"] = None
+
+
+def set_stream_mesh(spec: Any = "auto") -> Optional["jax.sharding.Mesh"]:
+    """Configure batch-axis sharding for ``simulate_batch``/``run_data_batch``.
+
+    ``spec`` is ``None``/``"off"`` (disable), ``"auto"`` (all local devices),
+    an int (first N devices), or a 1-D ``jax.sharding.Mesh``. Returns the
+    active mesh, or None when the host has a single device (sharding would
+    be a no-op, so it is disabled rather than building a trivial mesh).
+    Start the process with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    to expose N virtual devices on a CPU-only host.
+    """
+    global _STREAM_MESH
+    if spec is None or spec == "off":
+        _STREAM_MESH = None
+        return None
+    if isinstance(spec, jax.sharding.Mesh):
+        _STREAM_MESH = spec
+        return _STREAM_MESH
+    devs = jax.devices()
+    if spec != "auto":
+        devs = devs[: int(spec)]
+    if len(devs) <= 1:
+        _STREAM_MESH = None
+        return None
+    _STREAM_MESH = jax.sharding.Mesh(np.array(devs), ("stream",))
+    return _STREAM_MESH
+
+
+def stream_mesh() -> Optional["jax.sharding.Mesh"]:
+    return _STREAM_MESH
+
+
+def mesh_pad(n: int) -> int:
+    """Round a padded batch size up to a multiple of the stream mesh size
+    (identity without a mesh), so the NamedSharding divides evenly."""
+    if _STREAM_MESH is None:
+        return n
+    m = int(_STREAM_MESH.devices.size)
+    return -(-n // m) * m
+
+
+def _shard_batched(x: np.ndarray):
+    """Device-put a batch-leading array with its axis 0 sharded over the
+    stream mesh; plain ``jnp.asarray`` without a mesh."""
+    if _STREAM_MESH is None:
+        return jnp.asarray(x)
+    sh = jax.sharding.NamedSharding(
+        _STREAM_MESH, jax.sharding.PartitionSpec("stream")
+    )
+    return jax.device_put(x, sh)
+
+
+def _replicated(tree):
+    """Replicate an unbatched pytree (setup state, shared payload rows)
+    across the stream mesh; identity without a mesh."""
+    if _STREAM_MESH is None:
+        return tree
+    sh = jax.sharding.NamedSharding(_STREAM_MESH, jax.sharding.PartitionSpec())
+    return jax.device_put(tree, sh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -360,6 +451,33 @@ class ILA:
             st, jnp.asarray(stream.ops), jnp.asarray(stream.addrs), jnp.asarray(stream.data)
         )
 
+    def _host_stream_batch(self, streams: Sequence[PackedStream]):
+        """Host half of :meth:`simulate_batch`: NOP-pad to the common length
+        bucket, bucket the batch dim (replaying the last stream; a multiple
+        of the stream mesh size when one is active) and stack to dense
+        arrays. Pure numpy — safe in a pack worker thread."""
+        assert streams, "simulate_batch needs at least one stream"
+        L = bucket_length(max(len(s) for s in streams))
+        B = len(streams)
+        Bp = mesh_pad(bucket_length(B, min_len=1))
+        padded = [s.padded(L) for s in streams]
+        padded += [padded[-1]] * (Bp - B)
+        ops = np.stack([s.ops for s in padded])
+        addrs = np.stack([s.addrs for s in padded])
+        data = np.stack([s.data for s in padded])
+        return ops, addrs, data
+
+    def _dispatch_stream_batch(self, host, state: State) -> State:
+        """Dispatch half: jit lookup + the (async) vmapped scan call, with
+        the batch axis sharded over the stream mesh when one is active."""
+        ops, addrs, data = host
+        if not hasattr(self, "_jit_run_batch"):
+            self._jit_run_batch = self.make_batch_simulator()
+        return self._jit_run_batch(
+            _replicated(state), _shard_batched(ops), _shard_batched(addrs),
+            _shard_batched(data),
+        )
+
     def simulate_batch(
         self,
         streams: Sequence[PackedStream],
@@ -372,21 +490,8 @@ class ILA:
 
         Returns the stacked final state pytree (leading axis = padded batch).
         """
-        assert streams, "simulate_batch needs at least one stream"
         st = state if state is not None else self.init_state()
-        L = bucket_length(max(len(s) for s in streams))
-        B = len(streams)
-        Bp = bucket_length(B, min_len=1)
-        padded = [s.padded(L) for s in streams]
-        padded += [padded[-1]] * (Bp - B)
-        ops = np.stack([s.ops for s in padded])
-        addrs = np.stack([s.addrs for s in padded])
-        data = np.stack([s.data for s in padded])
-        if not hasattr(self, "_jit_run_batch"):
-            self._jit_run_batch = self.make_batch_simulator()
-        return self._jit_run_batch(
-            st, jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(data)
-        )
+        return self._dispatch_stream_batch(self._host_stream_batch(streams), st)
 
     # -- compiled data-stream execution ---------------------------------
     def _data_runner(self, sig: Tuple, shared_mask: Tuple[bool, ...]):
@@ -469,18 +574,16 @@ class ILA:
             jnp.asarray(shared), jnp.asarray(batched),
         )
 
-    def run_data_batch(self, datas: Sequence[DataStream], state: Optional[State] = None) -> State:
-        """Batched compiled execution of streams sharing one signature (same
-        bulk layout and tail command skeleton; payloads differ). The batch
-        dim is bucketed to a power of two by replaying the last stream
-        (callers slice [:B]). Payload rows that are identical across the
-        batch stay unbatched — see :meth:`_data_runner`."""
+    def _host_data_batch(self, datas: Sequence[DataStream]):
+        """Host half of :meth:`run_data_batch`: signature check, batch
+        bucketing (a multiple of the stream mesh size when one is active),
+        shared-payload detection and payload stacking. Pure numpy — safe in
+        a pack worker thread."""
         assert datas, "run_data_batch needs at least one stream"
-        st = state if state is not None else self.init_state()
         sig = datas[0].sig()
         assert all(d.sig() == sig for d in datas), "mixed signatures in one batch"
         B = len(datas)
-        Bp = bucket_length(B, min_len=1)
+        Bp = mesh_pad(bucket_length(B, min_len=1))
         datas = list(datas) + [datas[-1]] * (Bp - B)
         tail0 = datas[0].tail.data
         shared_mask = tuple(
@@ -488,14 +591,34 @@ class ILA:
             for i in range(tail0.shape[0])
         )
         rows_list = [
-            jnp.asarray(np.stack([d.bulk[i].rows for d in datas]))
+            np.stack([d.bulk[i].rows for d in datas])
             for i in range(len(sig[0]))
         ]
         splits = [self._split_rows(d.tail.data, shared_mask) for d in datas]
         shared = splits[0][0]
         batched = np.stack([s[1] for s in splits])
+        return sig, shared_mask, rows_list, shared, batched
+
+    def _dispatch_data_batch(self, host, state: State) -> State:
+        """Dispatch half: compiled-runner lookup + the (async) vmapped call.
+        Batch-leading payloads shard over the stream mesh when one is
+        active; setup state and batch-shared rows replicate."""
+        sig, shared_mask, rows_list, shared, batched = host
         _, batch = self._data_runner(sig, shared_mask)
-        return batch(st, rows_list, jnp.asarray(shared), jnp.asarray(batched))
+        return batch(
+            _replicated(state),
+            [_shard_batched(r) for r in rows_list],
+            _replicated(jnp.asarray(shared)), _shard_batched(batched),
+        )
+
+    def run_data_batch(self, datas: Sequence[DataStream], state: Optional[State] = None) -> State:
+        """Batched compiled execution of streams sharing one signature (same
+        bulk layout and tail command skeleton; payloads differ). The batch
+        dim is bucketed to a power of two by replaying the last stream
+        (callers slice [:B]). Payload rows that are identical across the
+        batch stay unbatched — see :meth:`_data_runner`."""
+        st = state if state is not None else self.init_state()
+        return self._dispatch_data_batch(self._host_data_batch(datas), st)
 
     def jit_cache_info(self) -> Dict[str, int]:
         return {
@@ -573,9 +696,25 @@ class CompiledFragment:
     def run_batch(self, streams: Sequence["DataStream | PackedStream"]) -> State:
         """Batched invocations sharing this fragment's setup state; returns
         the stacked final state (leading axis covers the padded batch)."""
+        return self.run_prepared(self.prepare_batch(streams))
+
+    def prepare_batch(self, streams: Sequence["DataStream | PackedStream"]):
+        """Host half of :meth:`run_batch` — padding, stacking and shared-
+        payload detection in pure numpy. Safe to run in a pack worker
+        thread; hand the result to :meth:`run_prepared` on the dispatch
+        thread (the pipelined Executor's pack stage)."""
         if isinstance(streams[0], DataStream):
-            return self.ila.run_data_batch(streams, state=self.setup_state())
-        return self.ila.simulate_batch(streams, state=self.setup_state())
+            return ("data", self.ila._host_data_batch(streams))
+        return ("stream", self.ila._host_stream_batch(streams))
+
+    def run_prepared(self, prepared) -> State:
+        """Dispatch half of :meth:`run_batch`: resolve the setup state and
+        issue the (async) vmapped simulator call for a prepared batch."""
+        kind, host = prepared
+        st = self.setup_state()
+        if kind == "data":
+            return self.ila._dispatch_data_batch(host, st)
+        return self.ila._dispatch_stream_batch(host, st)
 
     def full_commands(self, data: "DataStream | PackedStream") -> List[Command]:
         """setup + data as one eager-simulable Command list (parity checks)."""
@@ -586,32 +725,40 @@ class CompiledFragment:
 
 
 class FragmentCache:
-    """LRU of CompiledFragments keyed by (op, shapes, params fingerprint)."""
+    """LRU of CompiledFragments keyed by (op, shapes, params fingerprint).
+
+    Thread-safe: the pipelined Executor's pack worker builds fragments while
+    the dispatch thread resolves device-local copies, so lookup+insert (and
+    the LRU reordering they imply) run under a lock.
+    """
 
     def __init__(self, maxsize: int = 64):
         self.maxsize = maxsize
         self._entries: "OrderedDict[Tuple, CompiledFragment]" = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, key: Tuple, build: Callable[[], CompiledFragment]) -> CompiledFragment:
-        frag = self._entries.get(key)
-        if frag is not None:
-            self.hits += 1
-            self._entries.move_to_end(key)
+        with self._lock:
+            frag = self._entries.get(key)
+            if frag is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return frag
+            self.misses += 1
+            frag = build()
+            frag.key = key
+            self._entries[key] = frag
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
             return frag
-        self.misses += 1
-        frag = build()
-        frag.key = key
-        self._entries[key] = frag
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-        return frag
 
     def clear(self):
-        self._entries.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
 
     def __len__(self):
         return len(self._entries)

@@ -9,19 +9,31 @@ LLM decode:
 Co-sim serving (ROADMAP: persistent Executor with warm fragment caches):
 
     python -m repro.launch.serve --cosim resmlp --devices-per-target 2 \
-        [--requests 4] [--batch 8]
+        [--requests 4] [--batch 8] [--engine pipelined] [--mesh auto] \
+        [--warmup 1]
 
 compiles the named application once (cost-driven flexible matching), keeps
 one Executor alive across requests — fragment caches stay warm, compiled
 data runners stay traced — and serves minibatch requests through
 ``Executor.run_many``. ``--devices-per-target`` sizes the simulated device
 fleet per accelerator; the Executor's scheduler spreads signature-grouped
-SimJob batches over it by estimated cycles (greedy LPT). After the request
-loop the per-device utilization and cache-health tables are printed.
+SimJob batches over it by estimated cycles (greedy LPT).
+
+``--warmup N`` requests are excluded from the reported steady-state
+throughput (cold and warm numbers print side by side). Warmup always runs
+on the synchronous ``compiled`` engine, whose per-group timings calibrate
+every target's wall-clock CostModel (``Executor.calibrate_from_timings``);
+measured requests then run on ``--engine`` (default ``pipelined``, or
+``REPRO_ENGINE``) — the async serving path, with host packing overlapping
+device simulation and, under ``--mesh auto``, the vmapped batch axis
+sharded over the host's devices. All engines are bit-exact, so the switch
+never changes results. After the request loop the per-device utilization,
+pipeline-stage and cache-health tables are printed.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -39,7 +51,7 @@ def _force(*trees):
 
 
 def serve_cosim(args) -> None:
-    from ..core import apps, ir
+    from ..core import apps, ila, ir
     from ..core.codegen import Executor
     from ..core.compile import compile_program
 
@@ -54,12 +66,24 @@ def serve_cosim(args) -> None:
     res = compile_program(expr)
     print(f"compiled {args.cosim}: offloads={res.accelerator_calls} "
           f"policy={res.stats['extraction']['policy']}")
+    mesh = ila.set_stream_mesh(args.mesh) if args.mesh != "off" else None
+    if args.mesh != "off":
+        print(f"stream mesh: {mesh if mesh is not None else 'disabled (single device host)'}")
 
     xshape = next(v for v in ir.postorder(expr)
                   if isinstance(v, ir.Var) and v.name == "x").shape
-    ex = Executor("ila", devices_per_target=args.devices_per_target)
+    # the serving path defaults to the async engine (unlike the Executor's
+    # process-wide compiled default): --engine > REPRO_ENGINE > pipelined.
+    # The chunk size is clamped so even the default --batch splits into
+    # >= 2 pack/sim chunks per node — a single-chunk batch has nothing for
+    # the pipeline to overlap.
+    engine = args.engine or os.environ.get("REPRO_ENGINE") or "pipelined"
+    ex = Executor("ila", engine=engine,
+                  devices_per_target=args.devices_per_target,
+                  pipeline_chunk=max(1, min(8, -(-args.batch // 2))))
     rng = np.random.default_rng(args.seed)
-    for req in range(args.requests):
+
+    def request(req: int) -> float:
         envs = [
             dict(params, x=rng.standard_normal(xshape).astype(np.float32))
             for _ in range(args.batch)
@@ -67,10 +91,43 @@ def serve_cosim(args) -> None:
         t0 = time.perf_counter()
         outs = ex.run_many(res.program, envs)
         _force(outs)
-        dt = time.perf_counter() - t0
-        print(f"request {req}: batch={args.batch} "
-              f"{dt:.3f}s ({dt / args.batch * 1e3:.1f} ms/sample)"
-              f"{'   [cold caches]' if req == 0 else ''}")
+        return time.perf_counter() - t0
+
+    # Warmup: synchronous engine — fills every cache AND records exact
+    # per-group sim timings that calibrate the wall-clock cost models the
+    # pipelined scheduler prices groups with. Engines are bit-exact, so
+    # switching after warmup never changes served results.
+    warmup = max(args.warmup, 1)
+    ex.engine = "compiled"
+    cold_dts = [request(r) for r in range(warmup)]
+    for r, dt in enumerate(cold_dts):
+        print(f"warmup {r}: batch={args.batch} {dt:.3f}s "
+              f"({dt / args.batch * 1e3:.1f} ms/sample)"
+              f"{'   [cold caches]' if r == 0 else ''}")
+    fits = ex.calibrate_from_timings()
+    for tname, fit in sorted(fits.items()):
+        print(f"calibrated {tname}: "
+              f"sim {fit.get('sim_us_per_command', 0):.1f} us/cmd, "
+              f"pack {fit.get('pack_us_per_command', 0):.1f} us/cmd "
+              f"({fit.get('n_groups', 0):.0f} groups)")
+    ex.engine = engine
+    if engine != "compiled":
+        # one excluded request on the measured engine: its batch chunking
+        # traces its own vmap shapes, which must not pollute steady state
+        dt = request(warmup)
+        print(f"warmup {warmup}: engine={engine} {dt:.3f}s [engine traces]")
+    ex.reset_stats()   # measured section starts clean (incl. device rows)
+
+    warm_dts = [request(warmup + r) for r in range(args.requests)]
+    for r, dt in enumerate(warm_dts):
+        print(f"request {r}: engine={engine} batch={args.batch} {dt:.3f}s "
+              f"({dt / args.batch * 1e3:.1f} ms/sample)")
+
+    cold_ms = cold_dts[0] / args.batch * 1e3
+    warm_ms = float(np.mean(warm_dts)) / args.batch * 1e3 if warm_dts else float("nan")
+    print(f"\ncold vs steady state: {cold_ms:.1f} ms/sample (first request, "
+          f"compiled) vs {warm_ms:.1f} ms/sample (mean of {len(warm_dts)} "
+          f"measured, {engine}) -> {cold_ms / warm_ms:.1f}x")
 
     print("\nper-target summary (devices: jobs / est cycles / utilization):")
     for tname, row in sorted(ex.stats_summary().items()):
@@ -82,7 +139,15 @@ def serve_cosim(args) -> None:
             print(f"    {dname}: jobs={d['jobs']} groups={d['groups']} "
                   f"est_cycles={d['est_cycles']:.0f} "
                   f"utilization={d['utilization']:.2f}")
+    if engine == "pipelined":
+        stages = ex.pipeline_summary()
+        print("pipeline stages (measured requests): "
+              f"pack {stages['pack_s']:.3f}s / dispatch {stages['dispatch_s']:.3f}s "
+              f"/ readback {stages['readback_s']:.3f}s "
+              f"(overlap ~{stages['overlap_s']:.3f}s)")
     print("\ncache health:", ex.cache_info())
+    if mesh is not None:
+        ila.set_stream_mesh(None)
 
 
 def serve_llm(args) -> None:
@@ -132,6 +197,16 @@ def main():
                     help="co-sim serving mode: application name (repro.core.apps)")
     ap.add_argument("--devices-per-target", type=int, default=1,
                     help="simulated device instances per accelerator target")
+    ap.add_argument("--engine", default=None,
+                    choices=["compiled", "pipelined", "jit", "eager"],
+                    help="co-sim engine for measured requests (default: "
+                         "REPRO_ENGINE or pipelined); warmup always runs "
+                         "compiled to calibrate the cost models")
+    ap.add_argument("--mesh", default="off",
+                    help='"off" (default), "auto" (all host devices) or an '
+                         "int: shard the vmapped batch axis over a device mesh")
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="warmup requests excluded from steady-state stats")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

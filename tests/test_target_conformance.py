@@ -23,10 +23,18 @@ draws random operands within the target's declared capability limits):
   mapping (checked with synthetic competing targets, registered and
   unregistered inside the test — no bundled backend is named);
 * multi-device scheduling: with ``devices_per_target=2`` results stay
-  bit-exact and ``stats_summary`` reports per-device utilization.
+  bit-exact and ``stats_summary`` reports per-device utilization;
+* pipelined engine: async pack/sim pipelining is bit-exact vs the compiled
+  engine for every target and device count, deterministic across runs
+  (identical results AND stable assemble/stat order), and the mesh-sharded
+  batch tier matches unsharded execution (skipped on single-device hosts —
+  CI forces 4 virtual devices with XLA_FLAGS).
 
 Set ``REPRO_DEVICES_PER_TARGET=2`` (as CI does in a dedicated step) to run
-the *whole* suite through the multi-device scheduler path.
+the *whole* suite through the multi-device scheduler path, and/or
+``REPRO_ENGINE=pipelined`` (every Executor constructed without an explicit
+engine — including the ones inside cosim/serving helpers — picks it up) to
+run it through the async pipeline.
 
 A new backend that registers through ``repro.accel.target`` is covered here
 automatically — this file never names a target.
@@ -81,14 +89,17 @@ def test_ideal_vs_numerics_within_declared_tol(t, intr):
 
 @pytest.mark.parametrize("t,intr", _intrinsic_params())
 def test_engines_bit_exact(t, intr):
-    """eager per-command == jit scan == compiled fast path == run_many."""
+    """eager per-command == jit scan == compiled fast path == pipelined
+    == run_many."""
     expr, env = _case(t, intr, 2)
     _, env2 = _case(t, intr, 3)
     out_c = np.asarray(_executor(t, intr, engine="compiled").run(expr, env))
     out_j = np.asarray(_executor(t, intr, engine="jit").run(expr, env))
     out_e = np.asarray(_executor(t, intr, engine="eager").run(expr, env))
+    out_p = np.asarray(_executor(t, intr, engine="pipelined").run(expr, env))
     np.testing.assert_array_equal(out_c, out_j, err_msg=f"{t.name}:{intr.op} compiled != jit")
     np.testing.assert_array_equal(out_c, out_e, err_msg=f"{t.name}:{intr.op} compiled != eager")
+    np.testing.assert_array_equal(out_c, out_p, err_msg=f"{t.name}:{intr.op} compiled != pipelined")
     # batched path: same env twice through one vmapped call per node
     outs_m = _executor(t, intr, engine="compiled").run_many(expr, [env, env])
     for o in outs_m:
@@ -327,3 +338,92 @@ def test_multi_device_bit_exact_and_utilization_reported(t):
         assert {"jobs", "groups", "est_cycles", "utilization"} <= set(row)
     assert any(r["utilization"] == 1.0 for r in devs.values())
     assert sum(r["jobs"] for r in devs.values()) >= 3
+
+
+# ---------------------------------------------------------------------------
+# Pipelined engine: bit-exactness, determinism, mesh sharding
+# ---------------------------------------------------------------------------
+
+
+def _pipelined_envs(t, intr, n=5):
+    """n environments (two distinct samples interleaved) for one intrinsic,
+    plus the compiled-engine reference outputs."""
+    expr, env = _case(t, intr, 11)
+    _, env2 = _case(t, intr, 12)
+    envs = [env, env2, env, env2, env][:n]
+    ref = _executor(t, intr, engine="compiled").run_many(expr, envs)
+    return expr, envs, ref
+
+
+@pytest.mark.parametrize("ndev", (1, 2), ids=("1dev", "2dev"))
+@pytest.mark.parametrize("t,intr", _intrinsic_params())
+def test_pipelined_bit_exact_across_device_counts(t, intr, ndev):
+    """engine="pipelined" matches the compiled engine bit-for-bit through
+    run_many, for every registered target and device count (chunked
+    planning + async dispatch + LPT scheduling must not change results).
+    pipeline_chunk=2 forces several pack/sim pipeline stages."""
+    if intr.planner is None:
+        pytest.skip("pass-through intrinsic: nothing to pipeline")
+    expr, envs, ref = _pipelined_envs(t, intr)
+    ex = _executor(t, intr, engine="pipelined", devices_per_target=ndev,
+                   pipeline_chunk=2)
+    outs = ex.run_many(expr, envs)
+    for r, o in zip(ref, outs):
+        np.testing.assert_array_equal(
+            np.asarray(r), np.asarray(o),
+            err_msg=f"{t.name}:{intr.op} pipelined != compiled ({ndev} devices)",
+        )
+
+
+@pytest.mark.parametrize("t,intr", _intrinsic_params())
+def test_pipelined_deterministic_and_stable_order(t, intr):
+    """Two pipelined runs produce identical results AND identical stat
+    sequences: materialization and stat recording follow submission order
+    at the assemble barrier, never pack-worker timing."""
+    if intr.planner is None:
+        pytest.skip("pass-through intrinsic: nothing to pipeline")
+    expr, envs, _ = _pipelined_envs(t, intr)
+    ex1 = _executor(t, intr, engine="pipelined", pipeline_chunk=2)
+    ex2 = _executor(t, intr, engine="pipelined", pipeline_chunk=2)
+    outs1 = ex1.run_many(expr, envs)
+    outs2 = ex2.run_many(expr, envs)
+    for a, b in zip(outs1, outs2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    trace1 = [(s.op, s.backend, s.n_commands) for s in ex1.stats]
+    trace2 = [(s.op, s.backend, s.n_commands) for s in ex2.stats]
+    assert trace1 == trace2 and trace1, (
+        f"{t.name}:{intr.op} pipelined stat order is not stable"
+    )
+
+
+@pytest.mark.parametrize("t,intr", _intrinsic_params())
+def test_mesh_sharded_batch_parity(t, intr):
+    """run_data_batch/simulate_batch with the batch axis sharded over a
+    host-device Mesh is bit-exact vs unsharded execution. Skips gracefully
+    on single-device hosts; CI runs it with
+    XLA_FLAGS=--xla_force_host_platform_device_count=4."""
+    import jax
+
+    from repro.core import ila as ila_mod
+
+    if len(jax.devices()) < 2:
+        pytest.skip("single-device host: stream mesh disabled")
+    if intr.planner is None:
+        pytest.skip("pass-through intrinsic: nothing to batch")
+    expr, envs, ref = _pipelined_envs(t, intr)
+    mesh = ila_mod.set_stream_mesh("auto")
+    assert mesh is not None
+    try:
+        outs = _executor(t, intr, engine="compiled").run_many(expr, envs)
+        outs_p = _executor(t, intr, engine="pipelined").run_many(expr, envs)
+    finally:
+        ila_mod.set_stream_mesh(None)
+    for r, o, p in zip(ref, outs, outs_p):
+        np.testing.assert_array_equal(
+            np.asarray(r), np.asarray(o),
+            err_msg=f"{t.name}:{intr.op} mesh-sharded batch != unsharded",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r), np.asarray(p),
+            err_msg=f"{t.name}:{intr.op} mesh+pipelined != unsharded",
+        )
