@@ -1,0 +1,68 @@
+"""Fault-campaign throughput: mutants/sec, warm vs cold golden caches.
+
+The campaign engine (``repro.core.campaign``) turns the paper's one-off
+application-level-validation case study into a fleet workload: thousands of
+mutant co-simulations per campaign. Its throughput lever is the shared
+golden-side packing cache (``repro.core.faults``): mutant planners delegate
+to the golden planners, so across mutants only the *mutant-side* setup
+simulation and mutated-ILA traces are paid per mutant.
+
+This bench runs an apps-free campaign (fragment + per-op differential
+tiers — the per-mutant hot path) twice in-process and reports:
+
+  campaign_cold    us/mutant, first run (golden caches cold, all traces)
+  campaign_warm    us/mutant, second run (golden packing warm)
+
+Run as __main__ the rows merge into BENCH_cosim.json (benchmarks/_bench_io).
+"""
+from __future__ import annotations
+
+import time
+
+
+def run():
+    from repro.core.campaign import run_campaign
+
+    kwargs = dict(
+        targets=("vecunit", "hlscnn"),
+        faults=("sat_wrap", "round_floor", "drop_cfg"),
+        apps=(),                      # mutant-machinery throughput only
+        engine="pipelined", devices_per_target=2,
+        op_samples=1, vt2_n=2,
+    )
+    print("\n== fault-campaign throughput (2 targets x 3 fault classes, "
+          "pipelined, 2 devices/target) ==")
+    t0 = time.perf_counter()
+    cold = run_campaign(**kwargs)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = run_campaign(**kwargs)
+    warm_s = time.perf_counter() - t0
+    n = len(cold.reports)
+    detected = sum(1 for r in warm.reports if r.detected_at)
+    print(f"cold: {n} mutants in {cold_s:.1f}s "
+          f"({cold.mutants_per_sec:.2f} mutants/sec)")
+    print(f"warm: {n} mutants in {warm_s:.1f}s "
+          f"({warm.mutants_per_sec:.2f} mutants/sec, "
+          f"{cold_s / warm_s:.2f}x vs cold); "
+          f"{detected}/{n} mutants detected")
+    return [
+        ("campaign_cold", cold_s / n * 1e6,
+         f"{cold.mutants_per_sec:.2f} mutants/sec over {n} mutants, "
+         "cold golden caches"),
+        ("campaign_warm", warm_s / n * 1e6,
+         f"{warm.mutants_per_sec:.2f} mutants/sec over {n} mutants, "
+         f"warm golden caches ({cold_s / warm_s:.2f}x vs cold); "
+         f"{detected}/{n} detected"),
+    ]
+
+
+if __name__ == "__main__":
+    try:
+        from benchmarks._bench_io import write_bench_json
+    except ImportError:  # invoked as a script: benchmarks/ itself is on sys.path
+        from _bench_io import write_bench_json
+
+    rows = run()
+    path = write_bench_json(rows)
+    print(f"wrote {len(rows)} rows to {path}")

@@ -19,8 +19,8 @@ def main() -> None:
         os.environ.setdefault("REPRO_TABLE4_N", "10")
         os.environ.setdefault("REPRO_TABLE4_STEPS", "150")
 
-    from benchmarks import (bench_extraction, bench_kernels, bench_sim_speed,
-                            roofline_report, table1_matching,
+    from benchmarks import (bench_campaign, bench_extraction, bench_kernels,
+                            bench_sim_speed, roofline_report, table1_matching,
                             table2_mapping_validation, table3_formal,
                             table4_cosim)
 
@@ -30,6 +30,7 @@ def main() -> None:
     rows += table2_mapping_validation.run()
     rows += table3_formal.run()
     rows += bench_sim_speed.run()
+    rows += bench_campaign.run()
     rows += bench_kernels.run()
     rows += roofline_report.run()
     rows += table4_cosim.run()

@@ -286,12 +286,22 @@ class CostModel:
 class VT2Case:
     """A compiler-IR fragment and its accelerator fragment, as IR exprs over
     shared Vars — both interpreted with ideal (abstract-datatype) semantics
-    for the VT2 equivalence checks (random + exhaustive finite-domain)."""
+    for the VT2 equivalence checks (random + exhaustive finite-domain).
+
+    ``tol`` is the rel-Frobenius bound for the random-simulation check.
+    Cases may declare it explicitly; left as None it is stamped with the
+    owning target's :attr:`AcceleratorTarget.vt2_tol` when the case is
+    enumerated — so a backend whose two fragments are the *same* fp32
+    expression declares 0.0 (bit-exact, no silent over-tolerance) while
+    one whose fragments take different-but-equivalent compute paths keeps
+    a small float slack.
+    """
 
     name: str
     ir_fragment: ir.Expr
     accel_fragment: ir.Expr
     var_shapes: Dict[str, Tuple[int, ...]]
+    tol: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -334,12 +344,18 @@ class AcceleratorTarget:
         display_name: Optional[str] = None,
         capabilities: Optional[Dict[str, Any]] = None,
         doc: str = "",
+        vt2_tol: float = 1e-5,
     ):
         self.name = name
         self.ila = ila
         self.display_name = display_name or name
         self.capabilities = dict(capabilities or {})
         self.doc = doc
+        #: rel-Frobenius tolerance for this target's VT2 random-simulation
+        #: checks over abstract (fp32) semantics — part of the numerics
+        #: declaration: 0.0 where both fragment sides evaluate the same
+        #: fp32 expression, a small slack where the compute paths differ
+        self.vt2_tol = float(vt2_tol)
         self.intrinsics: Dict[str, Intrinsic] = {}
         #: declared analytic cost model (None until ``add_cost_model``)
         self.cost_model: Optional[CostModel] = None
@@ -394,8 +410,25 @@ class AcceleratorTarget:
     def vt2_cases(self, dim_t: int = 16, dim_d: int = 64) -> List[VT2Case]:
         out: List[VT2Case] = []
         for fn in self._vt2_fns:
-            out.extend(fn(dim_t, dim_d))
+            for case in fn(dim_t, dim_d):
+                if case.tol is None:
+                    case = dataclasses.replace(case, tol=self.vt2_tol)
+                out.append(case)
         return out
+
+    def cosim_tol(self, ops: Optional[Sequence[str]] = None) -> float:
+        """The declared co-simulation tolerance for a fragment touching
+        ``ops`` (None = all): the loosest per-intrinsic ideal-vs-numerics
+        bound among them. This is what fragment-level *simulation* checks
+        (the fault campaign's VT3-analogue tier) may legitimately deviate by
+        — derived from the numerics each intrinsic declares, so a
+        low-precision backend is neither over- nor under-tolerant."""
+        pool = [
+            intr.tol
+            for op, intr in self.intrinsics.items()
+            if intr.planner is not None and (ops is None or op in ops)
+        ]
+        return max(pool) if pool else 0.05
 
     def mapping_cases(self, rng) -> List[Tuple[str, Callable]]:
         out: List[Tuple[str, Callable]] = []
@@ -425,10 +458,16 @@ def register_target(target: AcceleratorTarget) -> AcceleratorTarget:
     return target
 
 
-def unregister_target(target: AcceleratorTarget) -> None:
+def unregister_target(target: AcceleratorTarget) -> Dict[str, Any]:
     """Remove ``target`` from the registry and the IR extension table (the
     inverse of :func:`register_target`; used by tests that register
-    synthetic targets and must leave the process-wide registry clean)."""
+    synthetic targets, and by the fault campaign's mutant lifecycle, both
+    of which must leave the process-wide registry bit-identical).
+
+    Returns the removed IR extension specs keyed by op — feed them to
+    :func:`repro.core.ir.restore_accel_op` after re-registering the same
+    target to reinstate the exact original spec objects (a plain
+    ``register_target`` would mint equal-but-new ones, which matters to
+    identity-based leak checks)."""
     TARGETS.unregister(target.name)
-    for op in target.intrinsics:
-        ir.unregister_accel_op(op)
+    return {op: ir.unregister_accel_op(op) for op in target.intrinsics}

@@ -70,6 +70,9 @@ TARGET = AcceleratorTarget(
         "max_rows": MAX_ROWS, "max_cols": MAX_COLS, "numerics": "int16-blockfp",
     },
     doc="element-wise vector unit (mul / sigmoid) in int16 block fixed point",
+    # the abstract fragments are the *identical* fp32 expressions on both
+    # sides — the VT2 bound is bit-exact, not the historical 1e-5 slack
+    vt2_tol=0.0,
 )
 FRAGMENTS = TARGET.fragments
 

@@ -67,6 +67,8 @@ TARGET = AcceleratorTarget(
         "numerics": "int8xint8->int32",
     },
     doc="fine-grained programmable accelerator: 16x16 int8 GEMM core + vector ALU",
+    # dense and vta_gemm interpret through the same fp32 matmul: bit-exact
+    vt2_tol=0.0,
 )
 FRAGMENTS = TARGET.fragments
 

@@ -1,0 +1,531 @@
+"""Fault-injection / differential-validation campaign driver.
+
+Enumerates (target x instruction x fault) mutants — :mod:`.faults` — and
+runs every mutant through a **tiered detection ladder**, measuring which
+validation tier first distinguishes it from the golden design:
+
+  ``vt2``       the declared VT2 fragment-equivalence checks over abstract
+                (fp32) semantics, with each target's threaded tolerance.
+                This is the formal-proof analogue: it validates the
+                *mapping*, deliberately abstracting numerics away — so a
+                fault injected into ILA instruction semantics passes it by
+                construction. Quantifying exactly that blind spot is the
+                point of running the tier.
+  ``frag_sim``  the same declared fragment pairs, but with the accelerator
+                side **co-simulated on the mutant ILA** against the fp32 IR
+                interpreter, judged by the target's declared co-simulation
+                tolerance (the loosest ideal-vs-numerics bound among the
+                fragment's intrinsics). The VT3 testing analogue: ILA vs
+                reference at fragment granularity.
+  ``op_diff``   per-intrinsic golden-vs-mutant differential test: identical
+                sampled operands through the golden and the mutant target;
+                a relative deviation beyond the intrinsic's declared
+                tolerance is a detection.
+  ``app``       full-application co-simulation: every selected application
+                that offloads work to the target is evaluated end-to-end
+                (accuracy or perplexity) on golden and mutant; a metric
+                delta beyond the campaign thresholds is a detection.
+
+The output is an **escape-analysis matrix**: per mutant, the verdict of
+every tier plus the first detecting tier. Mutants that pass the fragment
+tiers (``vt2`` + ``frag_sim``) but are caught by an application metric are
+the paper's thesis made quantitative — application-level validation
+catching what fragment-level checks miss. The ``identity`` control mutant
+must show zero detections at every tier (no false positives).
+
+Scale: mutant runs execute on the Executor's ``pipelined`` engine over
+``devices_per_target`` simulated devices by default, and all golden-side
+host packing comes out of warm shared caches (see :mod:`.faults`), so a
+campaign is thousands of co-sim invocations at steady-state cost — the
+throughput is reported as mutants/sec and benchmarked in
+``benchmarks/bench_campaign.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import apps as apps_mod, cosim, ir, validate
+from .codegen import Executor
+from .compile import compile_program
+from .faults import FaultInstance, fault_instances, make_mutant, swapped_in
+from .ila import TARGETS
+
+
+@dataclasses.dataclass
+class TierResult:
+    """One tier's verdict on one mutant. ``detected=None`` means the tier
+    did not run (not applicable, or skipped by an escalation ladder)."""
+
+    tier: str
+    detected: Optional[bool]
+    score: float = 0.0        # worst observed deviation / delta
+    threshold: float = 0.0
+    detail: str = ""
+
+    def cell(self) -> str:
+        if self.detected is None:
+            return "-"
+        return "CAUGHT" if self.detected else "pass"
+
+
+@dataclasses.dataclass
+class MutantReport:
+    target: str
+    fault: str
+    instruction: str
+    note: str
+    tiers: Dict[str, TierResult]
+    seconds: float = 0.0
+
+    @property
+    def key(self) -> str:
+        return f"{self.target}:{self.fault}@{self.instruction}"
+
+    @property
+    def detected_at(self) -> Optional[str]:
+        for name in TIER_ORDER:
+            t = self.tiers.get(name)
+            if t is not None and t.detected:
+                return name
+        return None
+
+    @property
+    def escaped_fragment_checks(self) -> bool:
+        """Passed both fragment tiers (vt2 abstract + co-simulated)."""
+        return all(
+            self.tiers[n].detected is not True for n in ("vt2", "frag_sim")
+        )
+
+    @property
+    def app_only(self) -> bool:
+        """The paper's thesis case: every pre-application tier passed (or
+        could not run), and an application metric caught the fault."""
+        app = self.tiers.get("app")
+        return (
+            app is not None and bool(app.detected)
+            and all(self.tiers[n].detected is not True
+                    for n in ("vt2", "frag_sim", "op_diff"))
+        )
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    reports: List[MutantReport]
+    golden: Dict[str, Dict[str, Any]]      # app -> {metric, value, offloads}
+    config: Dict[str, Any]
+    seconds: float = 0.0
+
+    @property
+    def mutants_per_sec(self) -> float:
+        return len(self.reports) / self.seconds if self.seconds > 0 else 0.0
+
+    def summary(self) -> Dict[str, Any]:
+        per_tier = {t: 0 for t in TIER_ORDER}
+        for r in self.reports:
+            d = r.detected_at
+            if d is not None:
+                per_tier[d] += 1
+        return {
+            "mutants": len(self.reports),
+            "detected": sum(1 for r in self.reports if r.detected_at),
+            "undetected": [
+                r.key for r in _nonidentity(self.reports) if not r.detected_at
+            ],
+            "first_detection_by_tier": per_tier,
+            "app_only": [r.key for r in self.reports if r.app_only],
+            "mutants_per_sec": self.mutants_per_sec,
+        }
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "schema": 1,
+            "config": self.config,
+            "golden": self.golden,
+            "mutants": [
+                {
+                    "target": r.target,
+                    "fault": r.fault,
+                    "instruction": r.instruction,
+                    "note": r.note,
+                    "seconds": r.seconds,
+                    "detected_at": r.detected_at,
+                    "escaped_fragment_checks": r.escaped_fragment_checks,
+                    "app_only": r.app_only,
+                    "tiers": {
+                        n: {
+                            "detected": t.detected,
+                            "score": t.score,
+                            "threshold": t.threshold,
+                            "detail": t.detail,
+                        }
+                        for n, t in r.tiers.items()
+                    },
+                }
+                for r in self.reports
+            ],
+            "summary": self.summary(),
+            "seconds": self.seconds,
+        }
+
+
+def _nonidentity(reports):
+    return [r for r in reports if r.fault != "identity"]
+
+
+TIER_ORDER = ("vt2", "frag_sim", "op_diff", "app")
+
+
+# ---------------------------------------------------------------------------
+# Applications: build + train once, evaluate many mutants
+# ---------------------------------------------------------------------------
+
+#: campaign-facing app registry: name -> (builder kwargs shim, metric kind)
+_APP_BUILDERS: Dict[str, Tuple[Callable, str]] = {
+    "resmlp": (lambda seed=0: apps_mod.build_resmlp(seed=seed, layers=2), "acc"),
+    "lstm-wlm": (apps_mod.build_lstm_wlm, "ppl"),
+    "efficientnet": (apps_mod.build_efficientnet, "acc"),
+    "resnet-20": (apps_mod.build_resnet20, "acc"),
+    "mobilenet-v2": (apps_mod.build_mobilenet_v2, "acc"),
+    "transformer": (lambda seed=0: apps_mod.build_transformer(seed=seed, layers=1), "acc"),
+}
+
+
+@dataclasses.dataclass
+class _App:
+    name: str
+    kind: str                  # "acc" | "ppl"
+    program: ir.Expr
+    offloads: Dict[str, int]
+    evaluate: Callable[[Executor], float]
+    golden_metric: float = float("nan")
+
+
+def _prepare_app(name: str, n_eval: int, train_steps: int, seed: int) -> _App:
+    builder, kind = _APP_BUILDERS[name]
+    expr, params = builder(seed=seed)
+    if kind == "ppl":
+        Xtok, Ytok, _ = cosim.make_char_task(n=max(n_eval, 64), seed=seed)
+        embed_dim = next(
+            v for v in ir.postorder(expr)
+            if isinstance(v, ir.Var) and v.name == "x"
+        ).shape[-1]
+        vocab = int(Xtok.max()) + 1
+        trained = cosim.train_app(
+            expr, params, Xtok, Ytok, steps=train_steps, seed=seed,
+            embed=(max(vocab, 32), embed_dim),
+        )
+        res = compile_program(expr)
+
+        def evaluate(ex: Executor, program=res.program, p=trained) -> float:
+            ppl, _dt = cosim.eval_perplexity(program, p, Xtok, Ytok, ex, n_eval)
+            return ppl
+
+    else:
+        xshape = next(
+            v for v in ir.postorder(expr)
+            if isinstance(v, ir.Var) and v.name == "x"
+        ).shape
+        X, y = cosim.make_teacher_task(builder, xshape, n=max(4 * n_eval, 128), seed=seed)
+        trained = cosim.train_app(
+            expr, params, X, y, steps=train_steps, lr=3e-3, seed=seed
+        )
+        res = compile_program(expr)
+
+        def evaluate(ex: Executor, program=res.program, p=trained) -> float:
+            acc, _dt = cosim.eval_classification(program, p, X, y, ex, n_eval)
+            return acc
+
+    return _App(name, kind, res.program, dict(res.accelerator_calls), evaluate)
+
+
+# ---------------------------------------------------------------------------
+# Tier runners
+# ---------------------------------------------------------------------------
+
+
+def _target_options() -> Dict[str, Dict[str, Any]]:
+    """Per-target execution options recommended by the declared intrinsics
+    (e.g. HLSCNN's updated 16-bit weight datatype)."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for t in TARGETS.all():
+        merged: Dict[str, Any] = {}
+        for intr in t.intrinsics.values():
+            merged.update(intr.options)
+        if merged:
+            out[t.name] = merged
+    return out
+
+
+def _executor(engine: str, devices: int) -> Executor:
+    return Executor(
+        "ila", engine=engine, devices_per_target=devices,
+        target_options=_target_options(), collect_stats=False,
+    )
+
+
+def _fragment_ops(e: ir.Expr) -> List[str]:
+    return [
+        x.op for x in ir.postorder(e)
+        if isinstance(x, ir.Call) and x.op in ir.ACCEL_OPS
+    ]
+
+
+def _tier_vt2(target, cases, n: int, seed: int) -> TierResult:
+    worst_name = ""
+    for case in cases:
+        if not validate.vt2_check(case, n=n, seed=seed):
+            worst_name = case.name
+            break
+    if not cases:
+        return TierResult("vt2", None, detail="target declares no VT2 cases")
+    return TierResult(
+        "vt2", bool(worst_name), threshold=target.vt2_tol,
+        detail=(f"failed case {worst_name!r}" if worst_name
+                else f"{len(cases)} cases pass (abstract semantics)"),
+    )
+
+
+def _tier_frag_sim(target, cases, engine: str, devices: int, seed: int,
+                   n_envs: int = 2) -> TierResult:
+    if not cases:
+        return TierResult("frag_sim", None, detail="no declared fragments")
+    worst, worst_name, thr_used = 0.0, "", 0.0
+    ex = _executor(engine, devices)   # shared: device caches warm across cases
+    for case in cases:
+        thr = target.cosim_tol(_fragment_ops(case.accel_fragment))
+        rng = np.random.default_rng(seed)
+        for _ in range(n_envs):
+            env = {
+                k: rng.standard_normal(s).astype(np.float32)
+                for k, s in case.var_shapes.items()
+            }
+            ideal = np.asarray(ir.interpret(case.ir_fragment, env))
+            got = np.asarray(ex.run(case.accel_fragment, env))
+            err = validate.frob_rel_err(ideal, got)
+            if err / max(thr, 1e-12) > worst / max(thr_used, 1e-12):
+                worst, worst_name, thr_used = err, case.name, thr
+    return TierResult(
+        "frag_sim", worst > thr_used, score=worst, threshold=thr_used,
+        detail=f"worst fragment {worst_name!r} rel err {worst:.4f} "
+               f"(tol {thr_used:g})",
+    )
+
+
+def _golden_op_outputs(target, n_samples: int, seed: int,
+                       engine: str, devices: int) -> Dict[str, List]:
+    """Reference outputs of every sampled intrinsic on the *golden* target,
+    cached per campaign so every mutant diffs against the same baselines."""
+    out: Dict[str, List] = {}
+    ex = _executor(engine, devices)
+    for op, intr in target.intrinsics.items():
+        if intr.planner is None or intr.sample is None:
+            continue
+        runs = []
+        # stable across processes (str hash() is PYTHONHASHSEED-randomized)
+        rng = np.random.default_rng(
+            zlib.crc32(f"{target.name}:{op}:{seed}".encode())
+        )
+        for _ in range(n_samples):
+            args, attrs = intr.sample(rng)
+            vs = tuple(ir.Var(f"_{i}", a.shape) for i, a in enumerate(args))
+            expr = ir.call(op, *vs, **attrs)
+            env = {f"_{i}": a for i, a in enumerate(args)}
+            runs.append((expr, env, np.asarray(ex.run(expr, env))))
+        out[op] = runs
+    return out
+
+
+def _tier_op_diff(target, golden_runs: Dict[str, List],
+                  engine: str, devices: int) -> TierResult:
+    worst, worst_op, thr_used = 0.0, "", 0.0
+    detected = False
+    ex = _executor(engine, devices)   # shared: device caches warm across ops
+    for op, runs in golden_runs.items():
+        tol = target.intrinsics[op].tol
+        for expr, env, golden_out in runs:
+            got = np.asarray(ex.run(expr, env))
+            err = validate.frob_rel_err(golden_out, got)
+            if err / max(tol, 1e-12) > worst / max(thr_used, 1e-12):
+                worst, worst_op, thr_used = err, op, tol
+            detected = detected or err > tol
+    if not golden_runs:
+        return TierResult("op_diff", None, detail="no sampled intrinsics")
+    return TierResult(
+        "op_diff", detected, score=worst, threshold=thr_used,
+        detail=f"worst op {worst_op!r} golden-vs-mutant rel diff "
+               f"{worst:.4f} (tol {thr_used:g})",
+    )
+
+
+def _tier_app(target, campaign_apps: List[_App], engine: str, devices: int,
+              acc_delta: float, ppl_ratio: float) -> TierResult:
+    relevant = [a for a in campaign_apps if a.offloads.get(target.name, 0) > 0]
+    if not relevant:
+        return TierResult(
+            "app", None, detail="no selected application offloads to target"
+        )
+    detected, details, worst, thr_used = False, [], 0.0, acc_delta
+    for app in relevant:
+        mutant_metric = app.evaluate(_executor(engine, devices))
+        if app.kind == "acc":
+            delta = abs(app.golden_metric - mutant_metric)
+            hit = delta > acc_delta
+            details.append(
+                f"{app.name}: acc {app.golden_metric:.3f}->{mutant_metric:.3f}"
+                f" (|d|={delta:.3f}{'*' if hit else ''})"
+            )
+            score, thr = delta, acc_delta
+        else:
+            ratio = max(mutant_metric, 1e-9) / max(app.golden_metric, 1e-9)
+            ratio = max(ratio, 1.0 / ratio)
+            hit = ratio > ppl_ratio
+            details.append(
+                f"{app.name}: ppl {app.golden_metric:.3f}->{mutant_metric:.3f}"
+                f" (x{ratio:.3f}{'*' if hit else ''})"
+            )
+            score, thr = ratio, ppl_ratio
+        if score / thr > worst / thr_used:
+            worst, thr_used = score, thr
+        detected = detected or hit
+    return TierResult(
+        "app", detected, score=worst, threshold=thr_used,
+        detail="; ".join(details),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The campaign
+# ---------------------------------------------------------------------------
+
+
+def run_campaign(
+    targets: Optional[Sequence[str]] = None,
+    faults: Optional[Sequence[str]] = None,
+    apps: Sequence[str] = ("resmlp", "lstm-wlm"),
+    engine: str = "pipelined",
+    devices_per_target: int = 2,
+    ladder: str = "full",
+    n_eval: int = 32,
+    train_steps: int = 120,
+    op_samples: int = 2,
+    vt2_n: int = 4,
+    acc_delta: float = 0.02,
+    ppl_ratio: float = 1.02,
+    seed: int = 0,
+    progress: Optional[Callable[[str], None]] = None,
+) -> CampaignResult:
+    """Run the full campaign; see the module docstring.
+
+    ``ladder="full"`` runs every tier on every mutant (the complete escape
+    matrix); ``"escalate"`` stops at the first detecting tier (cheaper —
+    the first-detection statistics are identical). All randomness is seeded:
+    golden and mutant evaluations see identical inputs, so every reported
+    delta is a real semantic difference, not sampling noise.
+    """
+    assert ladder in ("full", "escalate"), ladder
+    say = progress or (lambda s: None)
+    t_start = time.perf_counter()
+    selected = TARGETS.all(targets)
+
+    # -- golden baselines (compiled + trained + evaluated once) ------------
+    say(f"preparing {len(apps)} application(s): build, train({train_steps} "
+        f"steps), compile, golden eval({n_eval})")
+    campaign_apps = [_prepare_app(a, n_eval, train_steps, seed) for a in apps]
+    golden_info: Dict[str, Dict[str, Any]] = {}
+    for app in campaign_apps:
+        app.golden_metric = app.evaluate(_executor(engine, devices_per_target))
+        golden_info[app.name] = {
+            "metric": app.kind, "value": app.golden_metric,
+            "offloads": app.offloads,
+        }
+        say(f"  golden {app.name}: {app.kind}={app.golden_metric:.4f} "
+            f"offloads={app.offloads}")
+    golden_ops = {
+        t.name: _golden_op_outputs(t, op_samples, seed, engine,
+                                   devices_per_target)
+        for t in selected
+    }
+
+    # -- the mutant loop ---------------------------------------------------
+    reports: List[MutantReport] = []
+    for t in selected:
+        cases = t.vt2_cases(8, 32)
+        for inst in fault_instances(t, faults):
+            t0 = time.perf_counter()
+            mutant = make_mutant(t, inst)
+            tiers: Dict[str, TierResult] = {}
+            with swapped_in(mutant):
+                tiers["vt2"] = _tier_vt2(mutant, mutant.vt2_cases(8, 32),
+                                         vt2_n, seed)
+                runner = [
+                    ("frag_sim", lambda: _tier_frag_sim(
+                        mutant, cases, engine, devices_per_target, seed)),
+                    ("op_diff", lambda: _tier_op_diff(
+                        t, golden_ops[t.name], engine, devices_per_target)),
+                    ("app", lambda: _tier_app(
+                        t, campaign_apps, engine, devices_per_target,
+                        acc_delta, ppl_ratio)),
+                ]
+                for name, run in runner:
+                    if ladder == "escalate" and any(
+                        r.detected for r in tiers.values() if r.detected
+                    ):
+                        tiers[name] = TierResult(
+                            name, None, detail="skipped (caught earlier)")
+                        continue
+                    tiers[name] = run()
+            rep = MutantReport(
+                t.name, inst.fault, inst.instruction, inst.note, tiers,
+                seconds=time.perf_counter() - t0,
+            )
+            reports.append(rep)
+            say(f"  {rep.key}: detected_at={rep.detected_at or 'never'} "
+                f"({rep.seconds:.1f}s)")
+
+    config = dict(
+        targets=[t.name for t in selected], faults=list(faults or []),
+        apps=list(apps), engine=engine,
+        devices_per_target=devices_per_target, ladder=ladder,
+        n_eval=n_eval, train_steps=train_steps, op_samples=op_samples,
+        acc_delta=acc_delta, ppl_ratio=ppl_ratio, seed=seed,
+    )
+    return CampaignResult(
+        reports, golden_info, config, seconds=time.perf_counter() - t_start
+    )
+
+
+def format_matrix(result: CampaignResult) -> str:
+    """The human-readable escape-analysis matrix."""
+    rows = [
+        f"{'target':9s} {'fault':12s} {'instruction':13s} "
+        + " ".join(f"{t:>9s}" for t in TIER_ORDER)
+        + "  detected_at"
+    ]
+    rows.append("-" * len(rows[0]))
+    for r in result.reports:
+        cells = " ".join(f"{r.tiers[t].cell():>9s}" for t in TIER_ORDER)
+        flag = " [app-only escape]" if r.app_only else ""
+        rows.append(
+            f"{r.target:9s} {r.fault:12s} {r.instruction:13s} {cells}"
+            f"  {r.detected_at or 'never'}{flag}"
+        )
+    s = result.summary()
+    rows.append("")
+    rows.append(
+        f"{s['mutants']} mutants in {result.seconds:.1f}s "
+        f"({s['mutants_per_sec']:.2f} mutants/sec); "
+        f"first detection by tier: {s['first_detection_by_tier']}"
+    )
+    if s["app_only"]:
+        rows.append(
+            "caught ONLY at application level (the paper's thesis, "
+            f"quantified): {s['app_only']}"
+        )
+    if s["undetected"]:
+        rows.append(f"undetected non-identity mutants: {s['undetected']}")
+    return "\n".join(rows)

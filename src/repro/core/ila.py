@@ -229,6 +229,18 @@ class PackedStream:
             for o, a, d in zip(self.ops, self.addrs, self.data)
         ]
 
+    def sig(self) -> Tuple:
+        """Batching signature: the command skeleton (opcodes + addresses as
+        static values). Mirrors :meth:`DataStream.sig` so fully-packed
+        streams — e.g. a fault-campaign mutant whose write instructions no
+        longer satisfy the bulk slice-update lowering — group and batch
+        through ``simulate_batch`` exactly like compiled data streams."""
+        return (
+            ("stream",),
+            tuple(int(o) for o in self.ops),
+            tuple(int(a) for a in self.addrs),
+        )
+
     def padded(self, length: int, nop_opcode: int = NOP_OPCODE) -> "PackedStream":
         """Pad with NOPs to ``length`` (identity updates: semantics-free)."""
         n = len(self)
@@ -801,15 +813,40 @@ class TargetRegistry:
         for op, intr in target.intrinsics.items():
             self._by_op[op] = (target, intr)
 
-    def unregister(self, name: str) -> None:
-        """Remove a registered target (inverse of :meth:`register`)."""
+    def unregister(self, name: str):
+        """Remove a registered target (inverse of :meth:`register`).
+        Returns the removed target (None if ``name`` was not registered) so
+        callers that must leave the registry bit-identical — the fault
+        campaign, synthetic-target tests — can reinstate it."""
         target = self._targets.pop(name, None)
         if target is None:
-            return
+            return None
         for op in target.intrinsics:
             claimed = self._by_op.get(op)
             if claimed is not None and claimed[0] is target:
                 del self._by_op[op]
+        return target
+
+    def replace(self, target):
+        """Swap ``target`` in under an existing registration of the same
+        name, preserving registry order and requiring the same intrinsic op
+        set (the fault campaign's mutant swap: same accelerator, mutated
+        semantics). Returns the displaced target so the caller can swap it
+        back, leaving the registry bit-identical."""
+        old = self._targets.get(target.name)
+        if old is None:
+            raise KeyError(
+                f"replace: no registered target named {target.name!r}"
+            )
+        if set(old.intrinsics) != set(target.intrinsics):
+            raise ValueError(
+                f"replace: target {target.name!r} intrinsic set changed "
+                f"({sorted(set(old.intrinsics) ^ set(target.intrinsics))})"
+            )
+        self._targets[target.name] = target  # same key: order preserved
+        for op, intr in target.intrinsics.items():
+            self._by_op[op] = (target, intr)
+        return old
 
     def names(self) -> List[str]:
         return list(self._targets)

@@ -78,23 +78,43 @@ def register_accel_op(
     shape_fn: Optional[Callable] = None,
     eval_fn: Optional[Callable] = None,
     counts: bool = True,
-) -> None:
+) -> Optional[AccelOpSpec]:
     """Register an accelerator intrinsic op for ``target``.
 
     Makes the op a member of :data:`ACCEL_OPS` (cost model + Executor
     dispatch), attributes it to ``target`` in :func:`accelerator_calls`, and
     — when ``shape_fn``/``eval_fn`` are given — teaches shape inference and
-    the ideal interpreter its semantics.
+    the ideal interpreter its semantics. Returns the spec this registration
+    displaced (None for a first registration), so a transient re-registration
+    — the fault campaign's mutant swap — can restore it exactly.
     """
+    prev = _ACCEL_EXT.get(op)
     _ACCEL_EXT[op] = AccelOpSpec(target, shape_fn, eval_fn, counts)
     ACCEL_OPS.add(op)
+    return prev
 
 
-def unregister_accel_op(op: str) -> None:
-    """Inverse of :func:`register_accel_op` (synthetic-target test cleanup)."""
-    if op in _ACCEL_EXT:
-        del _ACCEL_EXT[op]
+def unregister_accel_op(op: str) -> Optional[AccelOpSpec]:
+    """Inverse of :func:`register_accel_op` (synthetic-target and mutant
+    cleanup). Returns the removed spec (None if ``op`` was unknown) so the
+    caller can later :func:`restore_accel_op` it, leaving the extension
+    table bit-identical."""
+    spec = _ACCEL_EXT.pop(op, None)
+    if spec is not None:
         ACCEL_OPS.discard(op)
+    return spec
+
+
+def restore_accel_op(op: str, spec: Optional[AccelOpSpec]) -> None:
+    """Reinstate the exact spec object a register/unregister displaced
+    (``spec=None`` removes the op). With :func:`unregister_accel_op`'s
+    return value this makes transient registrations — fault-campaign mutant
+    swaps, synthetic test targets — leave the table bit-identical."""
+    if spec is None:
+        unregister_accel_op(op)
+    else:
+        _ACCEL_EXT[op] = spec
+        ACCEL_OPS.add(op)
 
 
 def accel_op_shape_fn(op: str) -> Optional[Callable]:

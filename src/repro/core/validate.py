@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -138,10 +138,18 @@ def vt2_cases(dim_t: int = 16, dim_d: int = 64, targets=None) -> List[VT2Case]:
     return out
 
 
-def vt2_check(case: VT2Case, n: int = 20, seed: int = 0, tol: float = 1e-5) -> bool:
+def vt2_check(case: VT2Case, n: int = 20, seed: int = 0, tol: Optional[float] = None) -> bool:
     """Random simulation over the abstract (fp32) semantics: both fragments
     must agree to float tolerance (the SMT proof's sound-but-incomplete
-    testing analogue; the exhaustive variant below is complete)."""
+    testing analogue; the exhaustive variant below is complete).
+
+    ``tol=None`` (the default) resolves the bound from the case itself:
+    each target stamps its declared :attr:`AcceleratorTarget.vt2_tol` onto
+    the cases it enumerates (0.0 where both fragments evaluate the same
+    fp32 expression), replacing the historical hard-coded ``1e-5`` that was
+    silently over-tolerant for bit-equal low-precision backends."""
+    if tol is None:
+        tol = case.tol if case.tol is not None else 1e-5
     rng = np.random.default_rng(seed)
     for _ in range(n):
         env = {k: rng.standard_normal(s).astype(np.float32) for k, s in case.var_shapes.items()}
