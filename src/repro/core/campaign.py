@@ -25,6 +25,18 @@ validation tier first distinguishes it from the golden design:
                 that offloads work to the target is evaluated end-to-end
                 (accuracy or perplexity) on golden and mutant; a metric
                 delta beyond the campaign thresholds is a detection.
+  ``stat``      the calibrated statistical tier, sharing the ``app`` tier's
+                evaluation pass: **paired per-example** golden-vs-mutant
+                output deltas. The statistic is the mean relative logit
+                displacement over the (seeded) evaluation subset; because
+                golden and mutant see byte-identical inputs, the identity
+                mutant scores *exactly* zero, and the detection threshold
+                ``max(stat_floor, 2 x worst identity-null shift)`` is
+                calibrated per (target, app) by evaluating the identity
+                mutant on ``stat_calib_seeds`` independently seeded subsets
+                — a measured false-positive budget. This is what catches
+                distribution-shifting faults (``round_floor``'s half-step
+                bias) that never flip a top-1 label.
 
 The output is an **escape-analysis matrix**: per mutant, the verdict of
 every tier plus the first detecting tier. Mutants that pass the fragment
@@ -33,16 +45,33 @@ the paper's thesis made quantitative — application-level validation
 catching what fragment-level checks miss. The ``identity`` control mutant
 must show zero detections at every tier (no false positives).
 
+Robustness: a mutant that *raises* during its ladder is recorded with
+outcome ``crash`` (partial tiers kept, registries restored) instead of
+killing the campaign; under the sharded runner a mutant that *hangs* is
+terminated at ``mutant_timeout`` and recorded as ``timeout``. Campaign
+state checkpoints to ``CAMPAIGN.json`` after every mutant (atomic
+replace), and ``resume=True`` skips already-completed mutants after
+verifying the config fingerprint — an interrupted campaign continues
+instead of restarting. :func:`matrix_digest` hashes the deterministic
+fields of the escape matrix so a resumed run can be proven bit-identical
+to an uninterrupted one.
+
 Scale: mutant runs execute on the Executor's ``pipelined`` engine over
 ``devices_per_target`` simulated devices by default, and all golden-side
 host packing comes out of warm shared caches (see :mod:`.faults`), so a
-campaign is thousands of co-sim invocations at steady-state cost — the
-throughput is reported as mutants/sec and benchmarked in
-``benchmarks/bench_campaign.py``.
+campaign is thousands of co-sim invocations at steady-state cost.
+:func:`run_campaign_sharded` additionally fans mutants out across worker
+*subprocesses* (each owning its private device fleet and registries), with
+bounded retry + backoff for transient failures — throughput is reported as
+mutants/sec and benchmarked in ``benchmarks/bench_campaign.py``.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
+import queue as queue_mod
 import time
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -54,6 +83,12 @@ from .codegen import Executor
 from .compile import compile_program
 from .faults import FaultInstance, fault_instances, make_mutant, swapped_in
 from .ila import TARGETS
+
+TIER_ORDER = ("vt2", "frag_sim", "op_diff", "app", "stat")
+
+#: mutant outcomes beyond a clean ladder: the mutant raised mid-ladder
+#: (crash isolation) or exceeded the sharded runner's per-mutant timeout
+FAILURE_OUTCOMES = ("crash", "timeout")
 
 
 @dataclasses.dataclass
@@ -81,6 +116,9 @@ class MutantReport:
     note: str
     tiers: Dict[str, TierResult]
     seconds: float = 0.0
+    outcome: str = "ok"       # "ok" | "crash" | "timeout"
+    error: str = ""
+    attempts: int = 1
 
     @property
     def key(self) -> str:
@@ -88,6 +126,8 @@ class MutantReport:
 
     @property
     def detected_at(self) -> Optional[str]:
+        if self.outcome in FAILURE_OUTCOMES:
+            return self.outcome
         for name in TIER_ORDER:
             t = self.tiers.get(name)
             if t is not None and t.detected:
@@ -98,18 +138,73 @@ class MutantReport:
     def escaped_fragment_checks(self) -> bool:
         """Passed both fragment tiers (vt2 abstract + co-simulated)."""
         return all(
-            self.tiers[n].detected is not True for n in ("vt2", "frag_sim")
+            (self.tiers.get(n) is None or self.tiers[n].detected is not True)
+            for n in ("vt2", "frag_sim")
+        )
+
+    def _only(self, tier: str, earlier: Tuple[str, ...]) -> bool:
+        caught = self.tiers.get(tier)
+        return (
+            self.outcome == "ok"
+            and caught is not None and bool(caught.detected)
+            and all(
+                (self.tiers.get(n) is None
+                 or self.tiers[n].detected is not True)
+                for n in earlier
+            )
         )
 
     @property
     def app_only(self) -> bool:
         """The paper's thesis case: every pre-application tier passed (or
         could not run), and an application metric caught the fault."""
-        app = self.tiers.get("app")
-        return (
-            app is not None and bool(app.detected)
-            and all(self.tiers[n].detected is not True
-                    for n in ("vt2", "frag_sim", "op_diff"))
+        return self._only("app", ("vt2", "frag_sim", "op_diff"))
+
+    @property
+    def stat_only(self) -> bool:
+        """The calibrated statistical tier's marginal value: every other
+        tier — including the coarse app-metric threshold — passed, and only
+        the paired per-example statistic caught the fault."""
+        return self._only("stat", ("vt2", "frag_sim", "op_diff", "app"))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "target": self.target,
+            "fault": self.fault,
+            "instruction": self.instruction,
+            "note": self.note,
+            "seconds": self.seconds,
+            "outcome": self.outcome,
+            "error": self.error,
+            "attempts": self.attempts,
+            "detected_at": self.detected_at,
+            "escaped_fragment_checks": self.escaped_fragment_checks,
+            "app_only": self.app_only,
+            "stat_only": self.stat_only,
+            "tiers": {
+                n: {
+                    "detected": t.detected,
+                    "score": t.score,
+                    "threshold": t.threshold,
+                    "detail": t.detail,
+                }
+                for n, t in self.tiers.items()
+            },
+        }
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "MutantReport":
+        return MutantReport(
+            d["target"], d["fault"], d["instruction"], d.get("note", ""),
+            {
+                n: TierResult(n, tv.get("detected"), tv.get("score", 0.0),
+                              tv.get("threshold", 0.0), tv.get("detail", ""))
+                for n, tv in d.get("tiers", {}).items()
+            },
+            seconds=d.get("seconds", 0.0),
+            outcome=d.get("outcome", "ok"),
+            error=d.get("error", ""),
+            attempts=d.get("attempts", 1),
         )
 
 
@@ -118,6 +213,7 @@ class CampaignResult:
     reports: List[MutantReport]
     golden: Dict[str, Dict[str, Any]]      # app -> {metric, value, offloads}
     config: Dict[str, Any]
+    stat_calibration: Dict[str, Any] = dataclasses.field(default_factory=dict)
     seconds: float = 0.0
 
     @property
@@ -128,46 +224,33 @@ class CampaignResult:
         per_tier = {t: 0 for t in TIER_ORDER}
         for r in self.reports:
             d = r.detected_at
-            if d is not None:
+            if d in per_tier:
                 per_tier[d] += 1
         return {
             "mutants": len(self.reports),
             "detected": sum(1 for r in self.reports if r.detected_at),
             "undetected": [
-                r.key for r in _nonidentity(self.reports) if not r.detected_at
+                r.key for r in _nonidentity(self.reports)
+                if r.outcome == "ok" and not r.detected_at
             ],
             "first_detection_by_tier": per_tier,
             "app_only": [r.key for r in self.reports if r.app_only],
+            "stat_only": [r.key for r in self.reports if r.stat_only],
+            "crashes": [r.key for r in self.reports if r.outcome == "crash"],
+            "timeouts": [r.key for r in self.reports
+                         if r.outcome == "timeout"],
             "mutants_per_sec": self.mutants_per_sec,
         }
 
     def to_json(self) -> Dict[str, Any]:
         return {
-            "schema": 1,
+            "schema": 2,
+            "partial": False,
+            "fingerprint": config_fingerprint(self.config),
             "config": self.config,
             "golden": self.golden,
-            "mutants": [
-                {
-                    "target": r.target,
-                    "fault": r.fault,
-                    "instruction": r.instruction,
-                    "note": r.note,
-                    "seconds": r.seconds,
-                    "detected_at": r.detected_at,
-                    "escaped_fragment_checks": r.escaped_fragment_checks,
-                    "app_only": r.app_only,
-                    "tiers": {
-                        n: {
-                            "detected": t.detected,
-                            "score": t.score,
-                            "threshold": t.threshold,
-                            "detail": t.detail,
-                        }
-                        for n, t in r.tiers.items()
-                    },
-                }
-                for r in self.reports
-            ],
+            "stat_calibration": self.stat_calibration,
+            "mutants": [r.to_dict() for r in self.reports],
             "summary": self.summary(),
             "seconds": self.seconds,
         }
@@ -177,11 +260,113 @@ def _nonidentity(reports):
     return [r for r in reports if r.fault != "identity"]
 
 
-TIER_ORDER = ("vt2", "frag_sim", "op_diff", "app")
+# ---------------------------------------------------------------------------
+# Determinism plumbing: fingerprints, digests, checkpoints
+# ---------------------------------------------------------------------------
+
+#: config keys that determine the escape matrix bit-for-bit. Runner knobs
+#: (workers, timeouts, retries, checkpoint paths) are deliberately absent:
+#: a resumed or re-sharded campaign must produce the identical matrix.
+_FINGERPRINT_KEYS = (
+    "targets", "faults", "apps", "engine", "devices_per_target", "ladder",
+    "n_eval", "train_steps", "op_samples", "vt2_n", "acc_delta", "ppl_ratio",
+    "seed", "stat_floor", "stat_calib_seeds",
+)
+
+
+def config_fingerprint(config: Dict[str, Any]) -> str:
+    """Hash of the detection-relevant campaign config — the resume guard:
+    a checkpoint may only seed a run whose matrix-determining knobs match."""
+    det = {k: config.get(k) for k in _FINGERPRINT_KEYS}
+    blob = json.dumps(det, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def matrix_digest(data) -> str:
+    """Hash of the deterministic content of an escape matrix (verdicts,
+    scores, thresholds, golden values — NOT wall-clock or attempt counts).
+    A killed-and-resumed campaign must reproduce the uninterrupted run's
+    digest bit-for-bit; CI asserts exactly that."""
+    if isinstance(data, CampaignResult):
+        data = data.to_json()
+    canon = {
+        "fingerprint": data.get("fingerprint"),
+        "golden": {
+            a: {
+                "metric": g.get("metric"),
+                "value": repr(float(g.get("value", 0.0))),
+                "offloads": g.get("offloads"),
+            }
+            for a, g in data.get("golden", {}).items()
+        },
+        "mutants": [
+            {
+                "key": f"{m['target']}:{m['fault']}@{m['instruction']}",
+                "outcome": m.get("outcome", "ok"),
+                "detected_at": m.get("detected_at"),
+                "tiers": {
+                    n: {
+                        "detected": tv.get("detected"),
+                        "score": repr(float(tv.get("score", 0.0))),
+                        "threshold": repr(float(tv.get("threshold", 0.0))),
+                        "detail": tv.get("detail", ""),
+                    }
+                    for n, tv in sorted(m.get("tiers", {}).items())
+                },
+            }
+            for m in sorted(
+                data.get("mutants", []),
+                key=lambda m: (m["target"], m["fault"], m["instruction"]),
+            )
+        ],
+    }
+    blob = json.dumps(canon, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def _save_checkpoint(path: str, config: Dict[str, Any],
+                     golden: Dict[str, Any], stat_cal: Dict[str, Any],
+                     mutants: List[Dict[str, Any]], seconds: float,
+                     partial: bool) -> None:
+    data = {
+        "schema": 2,
+        "partial": partial,
+        "fingerprint": config_fingerprint(config),
+        "config": config,
+        "golden": golden,
+        "stat_calibration": stat_cal,
+        "mutants": mutants,
+        "seconds": seconds,
+    }
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)   # atomic: a kill mid-write never corrupts
+
+
+def _load_checkpoint(path: str, config: Dict[str, Any]):
+    """-> (completed: key -> report dict, seconds, golden, stat_cal)."""
+    with open(path) as f:
+        data = json.load(f)
+    want = config_fingerprint(config)
+    got = data.get("fingerprint")
+    if got != want:
+        raise ValueError(
+            f"checkpoint {path!r} was produced by a different campaign "
+            f"config (fingerprint {got} != {want}); refusing to resume — "
+            "delete it or rerun with the original settings"
+        )
+    completed = {
+        f"{m['target']}:{m['fault']}@{m['instruction']}": m
+        for m in data.get("mutants", [])
+    }
+    return (completed, float(data.get("seconds", 0.0)),
+            data.get("golden", {}), data.get("stat_calibration", {}))
 
 
 # ---------------------------------------------------------------------------
-# Applications: build + train once, evaluate many mutants
+# Applications: build + train once, evaluate many mutants per-example
 # ---------------------------------------------------------------------------
 
 #: campaign-facing app registry: name -> (builder kwargs shim, metric kind)
@@ -196,20 +381,80 @@ _APP_BUILDERS: Dict[str, Tuple[Callable, str]] = {
 
 
 @dataclasses.dataclass
+class PerExample:
+    """One evaluation pass, resolved per example: flattened raw outputs
+    (n, d), per-example losses (n,), and the aggregate app metric."""
+
+    outputs: np.ndarray
+    losses: np.ndarray
+    metric: float
+
+
+def paired_stats(golden: PerExample, mutant: PerExample) -> Dict[str, float]:
+    """Paired golden-vs-mutant statistics over byte-identical inputs.
+
+    ``shift``: mean relative per-example output displacement
+    ``mean ||o_mut - o_gold|| / ||o_gold||`` — the detection statistic. A
+    bit-exact mutant scores exactly 0.0; a systematic per-value bias (wrong
+    rounding mode) scores at its relative magnitude, far above any
+    calibrated identity-null threshold, even when no top-1 label flips.
+    ``bias_t``: |t|-statistic of the paired per-example loss deltas
+    (reported for diagnosis: it separates *systematic* loss bias from
+    symmetric noise). ``mean_loss_delta``: its raw effect size."""
+    g = np.asarray(golden.outputs, np.float64)
+    m = np.asarray(mutant.outputs, np.float64)
+    disp = np.linalg.norm(m - g, axis=1) / (np.linalg.norm(g, axis=1) + 1e-12)
+    shift = float(disp.mean())
+    d = np.asarray(mutant.losses, np.float64) - np.asarray(
+        golden.losses, np.float64)
+    if d.size > 1 and float(np.abs(d).max()) > 0.0:
+        sem = float(d.std(ddof=1)) / float(np.sqrt(d.size))
+        scale = max(float(np.abs(np.asarray(golden.losses)).mean()), 1e-12)
+        bias_t = float(abs(d.mean()) / max(sem, 1e-9 * scale))
+    else:
+        bias_t = 0.0
+    return {
+        "shift": shift,
+        "bias_t": bias_t,
+        "mean_loss_delta": float(d.mean()) if d.size else 0.0,
+    }
+
+
+def _subset(pool: int, n: int, tag: str, seed: int) -> Tuple[int, ...]:
+    """Seeded evaluation-subset sampler: ``n`` distinct dataset rows out of
+    ``pool``, reproducible across processes (crc32, not PYTHONHASHSEED)."""
+    rng = np.random.default_rng(zlib.crc32(f"{tag}:{seed}".encode()))
+    take = min(n, pool)
+    return tuple(int(i) for i in np.sort(
+        rng.choice(pool, size=take, replace=False)))
+
+
+@dataclasses.dataclass
 class _App:
     name: str
     kind: str                  # "acc" | "ppl"
     program: ir.Expr
     offloads: Dict[str, int]
-    evaluate: Callable[[Executor], float]
+    pool: int                  # evaluation dataset size (subset source)
+    per_example: Callable[[Executor, Sequence[int]], PerExample]
     golden_metric: float = float("nan")
+    #: golden per-example results keyed by evaluation subset (computed once
+    #: per campaign, BEFORE any mutant is swapped in)
+    golden_pe: Dict[Tuple[int, ...], PerExample] = dataclasses.field(
+        default_factory=dict)
+
+
+def _softmax_logp(logits: np.ndarray) -> np.ndarray:
+    z = logits - logits.max(-1, keepdims=True)
+    return z - np.log(np.exp(z).sum(-1, keepdims=True))
 
 
 def _prepare_app(name: str, n_eval: int, train_steps: int, seed: int) -> _App:
     builder, kind = _APP_BUILDERS[name]
     expr, params = builder(seed=seed)
     if kind == "ppl":
-        Xtok, Ytok, _ = cosim.make_char_task(n=max(n_eval, 64), seed=seed)
+        pool = max(n_eval, 64)
+        Xtok, Ytok, _ = cosim.make_char_task(n=pool, seed=seed)
         embed_dim = next(
             v for v in ir.postorder(expr)
             if isinstance(v, ir.Var) and v.name == "x"
@@ -220,27 +465,50 @@ def _prepare_app(name: str, n_eval: int, train_steps: int, seed: int) -> _App:
             embed=(max(vocab, 32), embed_dim),
         )
         res = compile_program(expr)
+        emb = trained["_embed"]
+        model_params = {k: v for k, v in trained.items() if k != "_embed"}
 
-        def evaluate(ex: Executor, program=res.program, p=trained) -> float:
-            ppl, _dt = cosim.eval_perplexity(program, p, Xtok, Ytok, ex, n_eval)
-            return ppl
+        def per_example(ex: Executor, idx, program=res.program) -> PerExample:
+            outs = cosim.eval_outputs(
+                program, model_params,
+                lambda i: emb[Xtok[i]][:, None, :], idx, ex,
+            )
+            flat, losses = [], []
+            for out, i in zip(outs, idx):
+                logp = _softmax_logp(np.asarray(out, np.float64))
+                losses.append(
+                    float(-logp[np.arange(len(Ytok[i])), Ytok[i]].mean()))
+                flat.append(np.asarray(out, np.float64).reshape(-1))
+            losses_arr = np.array(losses, np.float64)
+            # fixed-length sequences: per-token NLL == mean of per-seq means
+            return PerExample(np.stack(flat), losses_arr,
+                              float(np.exp(losses_arr.mean())))
 
     else:
         xshape = next(
             v for v in ir.postorder(expr)
             if isinstance(v, ir.Var) and v.name == "x"
         ).shape
-        X, y = cosim.make_teacher_task(builder, xshape, n=max(4 * n_eval, 128), seed=seed)
+        pool = max(4 * n_eval, 128)
+        X, y = cosim.make_teacher_task(builder, xshape, n=pool, seed=seed)
         trained = cosim.train_app(
             expr, params, X, y, steps=train_steps, lr=3e-3, seed=seed
         )
         res = compile_program(expr)
 
-        def evaluate(ex: Executor, program=res.program, p=trained) -> float:
-            acc, _dt = cosim.eval_classification(program, p, X, y, ex, n_eval)
-            return acc
+        def per_example(ex: Executor, idx, program=res.program) -> PerExample:
+            outs = cosim.eval_outputs(
+                program, trained, lambda i: X[i], idx, ex)
+            logits = np.stack(
+                [np.asarray(o, np.float64).reshape(-1) for o in outs])
+            labels = y[np.asarray(idx, np.int64)]
+            logp = _softmax_logp(logits)
+            losses = -logp[np.arange(len(idx)), labels]
+            metric = float((logits.argmax(1) == labels).mean())
+            return PerExample(logits, losses, metric)
 
-    return _App(name, kind, res.program, dict(res.accelerator_calls), evaluate)
+    return _App(name, kind, res.program, dict(res.accelerator_calls), pool,
+                per_example)
 
 
 # ---------------------------------------------------------------------------
@@ -362,44 +630,271 @@ def _tier_op_diff(target, golden_runs: Dict[str, List],
     )
 
 
-def _tier_app(target, campaign_apps: List[_App], engine: str, devices: int,
-              acc_delta: float, ppl_ratio: float) -> TierResult:
-    relevant = [a for a in campaign_apps if a.offloads.get(target.name, 0) > 0]
+def _tier_app_and_stat(ctx: "_Ctx", t) -> Tuple[TierResult, TierResult]:
+    """The application tier and the statistical tier share ONE mutant
+    evaluation pass per app: per-example outputs feed both the aggregate
+    metric delta (``app``) and the paired displacement statistic against
+    the calibrated identity-null threshold (``stat``)."""
+    cfg = ctx.config
+    relevant = [a for a in ctx.campaign_apps
+                if a.offloads.get(t.name, 0) > 0]
     if not relevant:
-        return TierResult(
-            "app", None, detail="no selected application offloads to target"
-        )
-    detected, details, worst, thr_used = False, [], 0.0, acc_delta
+        na = "no selected application offloads to target"
+        return (TierResult("app", None, detail=na),
+                TierResult("stat", None, detail=na))
+    acc_delta, ppl_ratio = cfg["acc_delta"], cfg["ppl_ratio"]
+    calibrated = cfg["stat_calib_seeds"] > 0
+    app_det, app_details, app_worst, app_thr = False, [], 0.0, acc_delta
+    st_det, st_details, st_worst, st_thr = False, [], 0.0, cfg["stat_floor"]
     for app in relevant:
-        mutant_metric = app.evaluate(_executor(engine, devices))
+        idx = ctx.eval_idx[app.name]
+        pe = app.per_example(
+            _executor(cfg["engine"], cfg["devices_per_target"]), idx)
+        gpe = app.golden_pe[idx]
+        # -- aggregate metric (the PR 5 app tier, unchanged semantics) -----
         if app.kind == "acc":
-            delta = abs(app.golden_metric - mutant_metric)
+            delta = abs(gpe.metric - pe.metric)
             hit = delta > acc_delta
-            details.append(
-                f"{app.name}: acc {app.golden_metric:.3f}->{mutant_metric:.3f}"
+            app_details.append(
+                f"{app.name}: acc {gpe.metric:.3f}->{pe.metric:.3f}"
                 f" (|d|={delta:.3f}{'*' if hit else ''})"
             )
             score, thr = delta, acc_delta
         else:
-            ratio = max(mutant_metric, 1e-9) / max(app.golden_metric, 1e-9)
+            ratio = max(pe.metric, 1e-9) / max(gpe.metric, 1e-9)
             ratio = max(ratio, 1.0 / ratio)
             hit = ratio > ppl_ratio
-            details.append(
-                f"{app.name}: ppl {app.golden_metric:.3f}->{mutant_metric:.3f}"
+            app_details.append(
+                f"{app.name}: ppl {gpe.metric:.3f}->{pe.metric:.3f}"
                 f" (x{ratio:.3f}{'*' if hit else ''})"
             )
             score, thr = ratio, ppl_ratio
-        if score / thr > worst / thr_used:
-            worst, thr_used = score, thr
-        detected = detected or hit
-    return TierResult(
-        "app", detected, score=worst, threshold=thr_used,
-        detail="; ".join(details),
+        if score / thr > app_worst / app_thr:
+            app_worst, app_thr = score, thr
+        app_det = app_det or hit
+        # -- paired per-example statistic ----------------------------------
+        if calibrated:
+            thr = ctx.stat_cal["thresholds"].get(
+                f"{t.name}:{app.name}", cfg["stat_floor"])
+            s = paired_stats(gpe, pe)
+            s_hit = s["shift"] > thr
+            st_details.append(
+                f"{app.name}: shift={s['shift']:.2e} (thr {thr:.2e}) "
+                f"bias_t={s['bias_t']:.1f}{'*' if s_hit else ''}"
+            )
+            if s["shift"] / thr > st_worst / st_thr:
+                st_worst, st_thr = s["shift"], thr
+            st_det = st_det or s_hit
+    app_tier = TierResult("app", app_det, score=app_worst, threshold=app_thr,
+                          detail="; ".join(app_details))
+    if not calibrated:
+        return app_tier, TierResult(
+            "stat", None, detail="uncalibrated (stat_calib_seeds=0)")
+    return app_tier, TierResult("stat", st_det, score=st_worst,
+                                threshold=st_thr,
+                                detail="; ".join(st_details))
+
+
+# ---------------------------------------------------------------------------
+# Campaign context: everything prepared once, before any mutant swap
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Ctx:
+    config: Dict[str, Any]
+    selected: List[Any]
+    campaign_apps: List[_App]
+    golden_info: Dict[str, Dict[str, Any]]
+    golden_ops: Dict[str, Dict[str, List]]
+    vt2_cases: Dict[str, List]
+    eval_idx: Dict[str, Tuple[int, ...]]
+    stat_cal: Dict[str, Any]
+    instances: Dict[str, Tuple[Any, FaultInstance]]
+
+
+def _resolve_config(
+    targets: Optional[Sequence[str]] = None,
+    faults: Optional[Sequence[str]] = None,
+    apps: Sequence[str] = ("resmlp", "lstm-wlm"),
+    engine: str = "pipelined",
+    devices_per_target: int = 2,
+    ladder: str = "full",
+    n_eval: int = 32,
+    train_steps: int = 120,
+    op_samples: int = 2,
+    vt2_n: int = 4,
+    acc_delta: float = 0.02,
+    ppl_ratio: float = 1.02,
+    seed: int = 0,
+    stat_floor: float = 1e-3,
+    stat_calib_seeds: int = 2,
+) -> Dict[str, Any]:
+    assert ladder in ("full", "escalate"), ladder
+    from .faults import FAULT_CLASSES
+    return dict(
+        targets=[t.name for t in TARGETS.all(targets)],
+        faults=list(faults) if faults is not None else list(FAULT_CLASSES),
+        apps=list(apps), engine=engine,
+        devices_per_target=devices_per_target, ladder=ladder,
+        n_eval=n_eval, train_steps=train_steps, op_samples=op_samples,
+        vt2_n=vt2_n, acc_delta=acc_delta, ppl_ratio=ppl_ratio, seed=seed,
+        stat_floor=stat_floor, stat_calib_seeds=stat_calib_seeds,
+    )
+
+
+def _enumerate_instances(selected, faults) -> Dict[str, Tuple[Any, FaultInstance]]:
+    out: Dict[str, Tuple[Any, FaultInstance]] = {}
+    for t in selected:
+        for inst in fault_instances(t, faults):
+            out[f"{t.name}:{inst.fault}@{inst.instruction}"] = (t, inst)
+    return out
+
+
+def _calibrate_stat(ctx_apps: List[_App], selected, config: Dict[str, Any],
+                    say) -> Dict[str, Any]:
+    """FP-budget calibration of the statistical tier: evaluate the identity
+    mutant of each target on ``stat_calib_seeds`` independently seeded
+    evaluation subsets, collect the null distribution of the paired shift
+    statistic (exactly zero for a bit-exact stack), and set the per
+    (target, app) detection threshold to ``max(stat_floor, 2 x worst
+    null)``. The measured false-positive count against that threshold is
+    recorded — the budget is empirical, not assumed."""
+    n_seeds = config["stat_calib_seeds"]
+    cal: Dict[str, Any] = {
+        "floor": config["stat_floor"], "calib_seeds": n_seeds,
+        "null_shifts": {}, "thresholds": {}, "false_positives": {},
+    }
+    if n_seeds <= 0 or not ctx_apps:
+        return cal
+    engine, devices = config["engine"], config["devices_per_target"]
+    for t in selected:
+        relevant = [a for a in ctx_apps if a.offloads.get(t.name, 0) > 0]
+        if not relevant:
+            continue
+        (inst,) = fault_instances(t, ("identity",))
+        mutant = make_mutant(t, inst)
+        nulls: Dict[str, List[float]] = {a.name: [] for a in relevant}
+        with swapped_in(mutant):
+            for k in range(n_seeds):
+                for a in relevant:
+                    idx = _subset(a.pool, config["n_eval"],
+                                  f"calib:{a.name}:{k}", config["seed"])
+                    pe = a.per_example(_executor(engine, devices), idx)
+                    s = paired_stats(a.golden_pe[idx], pe)
+                    nulls[a.name].append(s["shift"])
+        for a in relevant:
+            key = f"{t.name}:{a.name}"
+            thr = max(config["stat_floor"], 2.0 * max(nulls[a.name]))
+            cal["null_shifts"][key] = nulls[a.name]
+            cal["thresholds"][key] = thr
+            cal["false_positives"][key] = sum(
+                1 for v in nulls[a.name] if v > thr)
+            say(f"  stat calibration {key}: nulls={nulls[a.name]} "
+                f"threshold={thr:g} fp={cal['false_positives'][key]}")
+    return cal
+
+
+def _prepare(config: Dict[str, Any], say) -> _Ctx:
+    """Build everything a campaign (or one sharded worker) needs: trained
+    apps, golden per-example baselines for the main + calibration subsets,
+    golden op outputs, VT2 cases, the stat calibration, and the mutant
+    instance map. All golden evaluation happens HERE, before any mutant is
+    ever swapped into the registries."""
+    selected = TARGETS.all(config["targets"])
+    n_eval, train_steps, seed = (config["n_eval"], config["train_steps"],
+                                 config["seed"])
+    engine, devices = config["engine"], config["devices_per_target"]
+    say(f"preparing {len(config['apps'])} application(s): build, "
+        f"train({train_steps} steps), compile, golden eval({n_eval})")
+    campaign_apps = [_prepare_app(a, n_eval, train_steps, seed)
+                     for a in config["apps"]]
+    golden_info: Dict[str, Dict[str, Any]] = {}
+    eval_idx: Dict[str, Tuple[int, ...]] = {}
+    for app in campaign_apps:
+        idx = _subset(app.pool, n_eval, f"eval:{app.name}", seed)
+        eval_idx[app.name] = idx
+        subsets = [idx] + [
+            _subset(app.pool, n_eval, f"calib:{app.name}:{k}", seed)
+            for k in range(config["stat_calib_seeds"])
+        ]
+        for s in subsets:
+            if s not in app.golden_pe:
+                app.golden_pe[s] = app.per_example(
+                    _executor(engine, devices), s)
+        app.golden_metric = app.golden_pe[idx].metric
+        golden_info[app.name] = {
+            "metric": app.kind, "value": app.golden_metric,
+            "offloads": app.offloads,
+        }
+        say(f"  golden {app.name}: {app.kind}={app.golden_metric:.4f} "
+            f"offloads={app.offloads}")
+    golden_ops = {
+        t.name: _golden_op_outputs(t, config["op_samples"], seed, engine,
+                                   devices)
+        for t in selected
+    }
+    vt2_cases = {t.name: t.vt2_cases(8, 32) for t in selected}
+    stat_cal = _calibrate_stat(campaign_apps, selected, config, say)
+    instances = _enumerate_instances(selected, config["faults"])
+    return _Ctx(config, selected, campaign_apps, golden_info, golden_ops,
+                vt2_cases, eval_idx, stat_cal, instances)
+
+
+def _run_one(ctx: _Ctx, t, inst: FaultInstance) -> MutantReport:
+    """One mutant through the ladder, crash-isolated: an exception raised
+    by the mutant (planning, simulation, or a deliberately injected fault)
+    is recorded as outcome ``crash`` with whatever tiers completed;
+    ``swapped_in`` guarantees registry restoration either way."""
+    cfg = ctx.config
+    t0 = time.perf_counter()
+    mutant = make_mutant(t, inst)
+    tiers: Dict[str, TierResult] = {}
+    outcome, error = "ok", ""
+    try:
+        with swapped_in(mutant):
+            tiers["vt2"] = _tier_vt2(mutant, mutant.vt2_cases(8, 32),
+                                     cfg["vt2_n"], cfg["seed"])
+
+            def app_and_stat():
+                app_tier, stat_tier = _tier_app_and_stat(ctx, t)
+                tiers["app"] = app_tier
+                return stat_tier
+
+            runner = [
+                ("frag_sim", lambda: _tier_frag_sim(
+                    mutant, ctx.vt2_cases[t.name], cfg["engine"],
+                    cfg["devices_per_target"], cfg["seed"])),
+                ("op_diff", lambda: _tier_op_diff(
+                    t, ctx.golden_ops[t.name], cfg["engine"],
+                    cfg["devices_per_target"])),
+                # one shared evaluation pass fills BOTH app and stat
+                ("stat", app_and_stat),
+            ]
+            for name, run in runner:
+                if cfg["ladder"] == "escalate" and any(
+                    r.detected for r in tiers.values() if r.detected
+                ):
+                    tiers[name] = TierResult(
+                        name, None, detail="skipped (caught earlier)")
+                    if name == "stat":
+                        tiers.setdefault("app", TierResult(
+                            "app", None, detail="skipped (caught earlier)"))
+                    continue
+                tiers[name] = run()
+    except KeyboardInterrupt:
+        raise
+    except Exception as e:
+        outcome = "crash"
+        error = f"{type(e).__name__}: {e}"
+    return MutantReport(
+        t.name, inst.fault, inst.instruction, inst.note, tiers,
+        seconds=time.perf_counter() - t0, outcome=outcome, error=error,
     )
 
 
 # ---------------------------------------------------------------------------
-# The campaign
+# The serial campaign (with checkpoint/resume)
 # ---------------------------------------------------------------------------
 
 
@@ -417,6 +912,10 @@ def run_campaign(
     acc_delta: float = 0.02,
     ppl_ratio: float = 1.02,
     seed: int = 0,
+    stat_floor: float = 1e-3,
+    stat_calib_seeds: int = 2,
+    checkpoint: Optional[str] = None,
+    resume: bool = False,
     progress: Optional[Callable[[str], None]] = None,
 ) -> CampaignResult:
     """Run the full campaign; see the module docstring.
@@ -424,94 +923,372 @@ def run_campaign(
     ``ladder="full"`` runs every tier on every mutant (the complete escape
     matrix); ``"escalate"`` stops at the first detecting tier (cheaper —
     the first-detection statistics are identical). All randomness is seeded:
-    golden and mutant evaluations see identical inputs, so every reported
-    delta is a real semantic difference, not sampling noise.
+    golden and mutant evaluations see identical inputs (the evaluation
+    subset itself is drawn from ``seed``), so every reported delta is a
+    real semantic difference, not sampling noise. ``checkpoint`` names a
+    JSON file updated atomically after every mutant; with ``resume=True``
+    completed mutants recorded there (under a matching config fingerprint)
+    are skipped.
     """
-    assert ladder in ("full", "escalate"), ladder
     say = progress or (lambda s: None)
     t_start = time.perf_counter()
-    selected = TARGETS.all(targets)
+    config = _resolve_config(
+        targets=targets, faults=faults, apps=apps, engine=engine,
+        devices_per_target=devices_per_target, ladder=ladder, n_eval=n_eval,
+        train_steps=train_steps, op_samples=op_samples, vt2_n=vt2_n,
+        acc_delta=acc_delta, ppl_ratio=ppl_ratio, seed=seed,
+        stat_floor=stat_floor, stat_calib_seeds=stat_calib_seeds,
+    )
 
-    # -- golden baselines (compiled + trained + evaluated once) ------------
-    say(f"preparing {len(apps)} application(s): build, train({train_steps} "
-        f"steps), compile, golden eval({n_eval})")
-    campaign_apps = [_prepare_app(a, n_eval, train_steps, seed) for a in apps]
-    golden_info: Dict[str, Dict[str, Any]] = {}
-    for app in campaign_apps:
-        app.golden_metric = app.evaluate(_executor(engine, devices_per_target))
-        golden_info[app.name] = {
-            "metric": app.kind, "value": app.golden_metric,
-            "offloads": app.offloads,
-        }
-        say(f"  golden {app.name}: {app.kind}={app.golden_metric:.4f} "
-            f"offloads={app.offloads}")
-    golden_ops = {
-        t.name: _golden_op_outputs(t, op_samples, seed, engine,
-                                   devices_per_target)
-        for t in selected
+    completed: Dict[str, Dict[str, Any]] = {}
+    prior_seconds = 0.0
+    ckpt_golden: Dict[str, Any] = {}
+    ckpt_cal: Dict[str, Any] = {}
+    if resume and checkpoint and os.path.exists(checkpoint):
+        completed, prior_seconds, ckpt_golden, ckpt_cal = _load_checkpoint(
+            checkpoint, config)
+        say(f"resuming: {len(completed)} mutant(s) already completed")
+
+    keys = list(_enumerate_instances(
+        TARGETS.all(config["targets"]), config["faults"]))
+    if all(k in completed for k in keys):
+        # nothing left to run: finalize straight from the checkpoint
+        reports = [MutantReport.from_dict(completed[k]) for k in keys]
+        result = CampaignResult(reports, ckpt_golden, config, ckpt_cal,
+                                seconds=prior_seconds)
+        if checkpoint:
+            _save_checkpoint(checkpoint, config, ckpt_golden, ckpt_cal,
+                             [r.to_dict() for r in reports],
+                             result.seconds, partial=False)
+        return result
+
+    ctx = _prepare(config, say)
+    reports: List[MutantReport] = []
+    for key, (t, inst) in ctx.instances.items():
+        if key in completed:
+            reports.append(MutantReport.from_dict(completed[key]))
+            continue
+        rep = _run_one(ctx, t, inst)
+        reports.append(rep)
+        completed[key] = rep.to_dict()
+        if checkpoint:
+            _save_checkpoint(
+                checkpoint, config, ctx.golden_info, ctx.stat_cal,
+                [r.to_dict() for r in reports],
+                prior_seconds + time.perf_counter() - t_start, partial=True)
+        say(f"  {rep.key}: detected_at={rep.detected_at or 'never'} "
+            f"({rep.seconds:.1f}s)")
+
+    result = CampaignResult(
+        reports, ctx.golden_info, config, ctx.stat_cal,
+        seconds=prior_seconds + time.perf_counter() - t_start,
+    )
+    if checkpoint:
+        _save_checkpoint(checkpoint, config, ctx.golden_info, ctx.stat_cal,
+                         [r.to_dict() for r in reports], result.seconds,
+                         partial=False)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# The fault-tolerant sharded runner
+# ---------------------------------------------------------------------------
+
+
+def _shard_worker(wid: int, config: Dict[str, Any], task_q, result_q) -> None:
+    """Worker-subprocess loop: prepare a private campaign context (own JAX
+    runtime, own registries, own device fleet), then run mutants by key.
+    Mutant crashes are already absorbed by :func:`_run_one` (outcome
+    ``crash``); anything escaping it — infrastructure failure — is reported
+    as ``error`` for the parent's retry policy. The worker itself never
+    dies from a mutant."""
+    import traceback
+    try:
+        from .. import accel  # noqa: F401  (registers bundled targets)
+        ctx = _prepare(config, lambda s: None)
+        result_q.put(("ready", wid, {
+            "golden": ctx.golden_info, "stat_calibration": ctx.stat_cal,
+        }))
+    except BaseException:
+        result_q.put(("init_failed", wid, traceback.format_exc(limit=20)))
+        return
+    while True:
+        try:
+            key = task_q.get(timeout=30)
+        except queue_mod.Empty:
+            # if the parent was SIGKILLed (CI kill-and-resume leg) we are
+            # re-parented to init — exit instead of lingering forever
+            if os.getppid() == 1:
+                return
+            continue
+        if key is None:
+            return
+        result_q.put(("begin", wid, key))
+        try:
+            t, inst = ctx.instances[key]
+            rep = _run_one(ctx, t, inst)
+            result_q.put(("done", wid, key, rep.to_dict()))
+        except BaseException:
+            result_q.put(("error", wid, key, traceback.format_exc(limit=20)))
+
+
+def _failure_report(meta: Tuple[str, str, str, str], outcome: str,
+                    error: str, attempts: int, seconds: float) -> Dict[str, Any]:
+    tname, fault, instruction, note = meta
+    return MutantReport(
+        tname, fault, instruction, note, {}, seconds=seconds,
+        outcome=outcome, error=error, attempts=attempts,
+    ).to_dict()
+
+
+def run_campaign_sharded(
+    workers: int = 2,
+    mutant_timeout: float = 300.0,
+    retries: int = 1,
+    retry_backoff: float = 2.0,
+    checkpoint: Optional[str] = None,
+    resume: bool = False,
+    progress: Optional[Callable[[str], None]] = None,
+    **params,
+) -> CampaignResult:
+    """The fault-tolerant sharded campaign: mutants fan out across
+    ``workers`` subprocesses, each owning a private device fleet and
+    registries (spawned, so mutant state can never leak between workers or
+    back into this process).
+
+    Per-mutant robustness semantics:
+
+    * a mutant that **raises** is absorbed inside the worker (outcome
+      ``crash`` via :func:`_run_one`); a worker that *dies* mid-mutant
+      (segfault, OOM-kill) is treated the same, after retries;
+    * a mutant exceeding ``mutant_timeout`` seconds gets its worker
+      terminated and is recorded as outcome ``timeout`` (never retried — a
+      hang would hang again); a fresh worker replaces the killed one;
+    * transient infrastructure failures retry up to ``retries`` times with
+      ``retry_backoff * attempt`` seconds of backoff;
+    * every completed mutant checkpoints to ``checkpoint`` atomically, and
+      ``resume=True`` continues an interrupted campaign (config fingerprint
+      permitting) with a bit-identical final matrix (:func:`matrix_digest`).
+
+    Remaining keyword arguments are :func:`run_campaign`'s campaign knobs.
+    The escape matrix is deterministic and identical to the serial
+    runner's; only wall-clock and attempt counts differ.
+    """
+    import multiprocessing as mp
+
+    say = progress or (lambda s: None)
+    t_start = time.perf_counter()
+    config = _resolve_config(**params)
+    run_cfg = dict(config, workers=workers, mutant_timeout=mutant_timeout,
+                   retries=retries)
+
+    selected = TARGETS.all(config["targets"])
+    instances = _enumerate_instances(selected, config["faults"])
+    keys = list(instances)
+    meta = {
+        k: (t.name, inst.fault, inst.instruction, inst.note)
+        for k, (t, inst) in instances.items()
     }
 
-    # -- the mutant loop ---------------------------------------------------
-    reports: List[MutantReport] = []
-    for t in selected:
-        cases = t.vt2_cases(8, 32)
-        for inst in fault_instances(t, faults):
-            t0 = time.perf_counter()
-            mutant = make_mutant(t, inst)
-            tiers: Dict[str, TierResult] = {}
-            with swapped_in(mutant):
-                tiers["vt2"] = _tier_vt2(mutant, mutant.vt2_cases(8, 32),
-                                         vt2_n, seed)
-                runner = [
-                    ("frag_sim", lambda: _tier_frag_sim(
-                        mutant, cases, engine, devices_per_target, seed)),
-                    ("op_diff", lambda: _tier_op_diff(
-                        t, golden_ops[t.name], engine, devices_per_target)),
-                    ("app", lambda: _tier_app(
-                        t, campaign_apps, engine, devices_per_target,
-                        acc_delta, ppl_ratio)),
-                ]
-                for name, run in runner:
-                    if ladder == "escalate" and any(
-                        r.detected for r in tiers.values() if r.detected
-                    ):
-                        tiers[name] = TierResult(
-                            name, None, detail="skipped (caught earlier)")
-                        continue
-                    tiers[name] = run()
-            rep = MutantReport(
-                t.name, inst.fault, inst.instruction, inst.note, tiers,
-                seconds=time.perf_counter() - t0,
-            )
-            reports.append(rep)
-            say(f"  {rep.key}: detected_at={rep.detected_at or 'never'} "
-                f"({rep.seconds:.1f}s)")
+    completed: Dict[str, Dict[str, Any]] = {}
+    prior_seconds = 0.0
+    golden_info: Dict[str, Any] = {}
+    stat_cal: Dict[str, Any] = {}
+    if resume and checkpoint and os.path.exists(checkpoint):
+        completed, prior_seconds, golden_info, stat_cal = _load_checkpoint(
+            checkpoint, config)
+        completed = {k: v for k, v in completed.items() if k in meta}
+        say(f"resuming: {len(completed)} mutant(s) already completed")
 
-    config = dict(
-        targets=[t.name for t in selected], faults=list(faults or []),
-        apps=list(apps), engine=engine,
-        devices_per_target=devices_per_target, ladder=ladder,
-        n_eval=n_eval, train_steps=train_steps, op_samples=op_samples,
-        acc_delta=acc_delta, ppl_ratio=ppl_ratio, seed=seed,
-    )
-    return CampaignResult(
-        reports, golden_info, config, seconds=time.perf_counter() - t_start
-    )
+    pending = [k for k in keys if k not in completed]
+    attempts = {k: 0 for k in pending}
+    not_before = {k: 0.0 for k in pending}
+
+    def finalize() -> CampaignResult:
+        reports = [MutantReport.from_dict(completed[k]) for k in keys]
+        result = CampaignResult(
+            reports, golden_info, run_cfg, stat_cal,
+            seconds=prior_seconds + time.perf_counter() - t_start,
+        )
+        if checkpoint:
+            _save_checkpoint(checkpoint, run_cfg, golden_info, stat_cal,
+                             [r.to_dict() for r in reports], result.seconds,
+                             partial=False)
+        return result
+
+    if not pending:
+        return finalize()
+
+    def record(key: str, rep: Dict[str, Any]) -> None:
+        completed[key] = rep
+        if checkpoint:
+            _save_checkpoint(
+                checkpoint, run_cfg, golden_info, stat_cal,
+                [completed[k] for k in keys if k in completed],
+                prior_seconds + time.perf_counter() - t_start, partial=True)
+        say(f"  [{len(completed)}/{len(keys)}] {key}: "
+            f"{rep.get('detected_at') or 'never'} "
+            f"(outcome={rep.get('outcome', 'ok')})")
+
+    mpctx = mp.get_context("spawn")
+    result_q = mpctx.Queue()
+    next_wid = 0
+
+    def spawn():
+        nonlocal next_wid
+        wid = next_wid
+        next_wid += 1
+        q = mpctx.Queue()
+        p = mpctx.Process(target=_shard_worker,
+                          args=(wid, config, q, result_q), daemon=True)
+        p.start()
+        # init covers app training + golden eval + calibration; give it a
+        # generous independent watchdog so a wedged init cannot stall the
+        # campaign forever
+        return {"proc": p, "q": q, "wid": wid, "key": None, "deadline": None,
+                "ready": False, "init_deadline": time.monotonic() + max(
+                    900.0, 3.0 * mutant_timeout)}
+
+    fleet = {w["wid"]: w for w in
+             (spawn() for _ in range(max(1, min(workers, len(pending)))))}
+
+    def requeue_or_fail(key: str, why: str) -> None:
+        if attempts[key] <= retries:
+            not_before[key] = time.monotonic() + retry_backoff * attempts[key]
+            pending.append(key)
+            say(f"  retrying {key} (attempt {attempts[key]} failed: {why})")
+        else:
+            record(key, _failure_report(meta[key], "crash", why,
+                                        attempts[key], 0.0))
+
+    try:
+        while len(completed) < len(keys):
+            now = time.monotonic()
+            # dispatch to idle ready workers
+            for w in fleet.values():
+                if w["ready"] and w["key"] is None and w["proc"].is_alive():
+                    k = next((k for k in pending if not_before[k] <= now),
+                             None)
+                    if k is None:
+                        continue
+                    pending.remove(k)
+                    attempts[k] += 1
+                    w["key"] = k
+                    # fallback deadline in case "begin" is never received
+                    w["deadline"] = now + mutant_timeout + 60.0
+                    w["q"].put(k)
+            # drain one message (with a poll timeout so watchdogs tick)
+            try:
+                msg = result_q.get(timeout=0.25)
+            except queue_mod.Empty:
+                msg = None
+            if msg is not None:
+                kind, wid = msg[0], msg[1]
+                w = fleet.get(wid)
+                if w is None:
+                    pass  # late message from an already-killed worker
+                elif kind == "ready":
+                    w["ready"] = True
+                    w["init_deadline"] = None
+                    if not golden_info:
+                        golden_info = msg[2]["golden"]
+                        stat_cal = msg[2]["stat_calibration"]
+                elif kind == "init_failed":
+                    raise RuntimeError(
+                        f"sharded campaign worker failed to initialize:\n"
+                        f"{msg[2]}")
+                elif kind == "begin":
+                    w["deadline"] = time.monotonic() + mutant_timeout
+                elif kind == "done":
+                    key, rep = msg[2], msg[3]
+                    rep["attempts"] = attempts.get(key, 1)
+                    record(key, rep)
+                    w["key"], w["deadline"] = None, None
+                elif kind == "error":
+                    key = msg[2]
+                    w["key"], w["deadline"] = None, None
+                    requeue_or_fail(key, msg[3].strip().splitlines()[-1]
+                                    if msg[3].strip() else "worker error")
+            # watchdogs: per-mutant timeout, init timeout, worker death
+            now = time.monotonic()
+            for wid, w in list(fleet.items()):
+                key = w["key"]
+                if key is not None and w["deadline"] and now > w["deadline"]:
+                    say(f"  {key}: exceeded mutant_timeout="
+                        f"{mutant_timeout:g}s — terminating worker {wid}")
+                    w["proc"].terminate()
+                    w["proc"].join(10)
+                    record(key, _failure_report(
+                        meta[key], "timeout",
+                        f"exceeded mutant_timeout={mutant_timeout:g}s",
+                        attempts[key], mutant_timeout))
+                    del fleet[wid]
+                elif not w["proc"].is_alive():
+                    del fleet[wid]
+                    if not w["ready"]:
+                        # died before ever reporting ready: environment
+                        # problem, not a mutant — respawning would loop
+                        raise RuntimeError(
+                            "sharded campaign worker died during "
+                            f"initialization (exitcode={w['proc'].exitcode})"
+                            "; is the entry point spawn-safe "
+                            "(__main__ importable)?")
+                    if key is not None:
+                        requeue_or_fail(
+                            key, "worker process died "
+                            f"(exitcode={w['proc'].exitcode})")
+                elif (not w["ready"] and w["init_deadline"]
+                      and now > w["init_deadline"]):
+                    w["proc"].terminate()
+                    w["proc"].join(10)
+                    del fleet[wid]
+                    raise RuntimeError(
+                        "sharded campaign worker hung during initialization")
+            # keep the fleet sized to the remaining work
+            in_flight = sum(1 for w in fleet.values() if w["key"] is not None)
+            todo = len(keys) - len(completed) - in_flight
+            while todo > 0 and len(fleet) < max(1, min(workers, todo + in_flight)):
+                w = spawn()
+                fleet[w["wid"]] = w
+                todo -= 1
+    finally:
+        for w in fleet.values():
+            if w["proc"].is_alive():
+                try:
+                    w["q"].put(None)
+                except Exception:
+                    pass
+        deadline = time.monotonic() + 5.0
+        for w in fleet.values():
+            w["proc"].join(max(0.1, deadline - time.monotonic()))
+            if w["proc"].is_alive():
+                w["proc"].terminate()
+                w["proc"].join(5)
+
+    return finalize()
 
 
 def format_matrix(result: CampaignResult) -> str:
     """The human-readable escape-analysis matrix."""
+    iw = max([13] + [len(r.instruction) for r in result.reports])
     rows = [
-        f"{'target':9s} {'fault':12s} {'instruction':13s} "
+        f"{'target':9s} {'fault':12s} {'instruction':{iw}s} "
         + " ".join(f"{t:>9s}" for t in TIER_ORDER)
         + "  detected_at"
     ]
     rows.append("-" * len(rows[0]))
     for r in result.reports:
-        cells = " ".join(f"{r.tiers[t].cell():>9s}" for t in TIER_ORDER)
-        flag = " [app-only escape]" if r.app_only else ""
+        cells = " ".join(
+            f"{(r.tiers[t].cell() if t in r.tiers else '-'):>9s}"
+            for t in TIER_ORDER
+        )
+        flag = ""
+        if r.app_only:
+            flag = " [app-only escape]"
+        elif r.stat_only:
+            flag = " [stat-only escape]"
         rows.append(
-            f"{r.target:9s} {r.fault:12s} {r.instruction:13s} {cells}"
+            f"{r.target:9s} {r.fault:12s} {r.instruction:{iw}s} {cells}"
             f"  {r.detected_at or 'never'}{flag}"
         )
     s = result.summary()
@@ -526,6 +1303,17 @@ def format_matrix(result: CampaignResult) -> str:
             "caught ONLY at application level (the paper's thesis, "
             f"quantified): {s['app_only']}"
         )
+    if s["stat_only"]:
+        rows.append(
+            "caught ONLY by the calibrated statistical tier (escaped even "
+            f"the app-metric threshold): {s['stat_only']}"
+        )
+    if s["crashes"]:
+        rows.append(f"crashed mutants (isolated, campaign completed): "
+                    f"{s['crashes']}")
+    if s["timeouts"]:
+        rows.append(f"timed-out mutants (terminated at the per-mutant "
+                    f"deadline): {s['timeouts']}")
     if s["undetected"]:
         rows.append(f"undetected non-identity mutants: {s['undetected']}")
     return "\n".join(rows)

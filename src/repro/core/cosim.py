@@ -191,6 +191,26 @@ def eval_classification(program, params, X, y, executor: Executor, n_eval=100, b
     return correct / n_eval, dt
 
 
+def eval_outputs(program, params, make_x, indices, executor: Executor,
+                 batch_size=16):
+    """Raw per-example output tensors for selected dataset rows.
+
+    ``make_x(i)`` builds the input for dataset row ``i``; rows are evaluated
+    in ``run_many`` minibatches (numerics identical to per-sample ``run``).
+    Returns one ndarray per requested row, in ``indices`` order — the
+    primitive under paired golden-vs-mutant statistics: both sides see the
+    exact same rows, so every per-example delta is semantic, not sampling
+    noise."""
+    batch_size = _pipeline_batch(executor, batch_size)
+    idx = list(indices)
+    outs = []
+    for i0 in range(0, len(idx), batch_size):
+        chunk = idx[i0 : i0 + batch_size]
+        envs = [dict(params, x=make_x(i)) for i in chunk]
+        outs.extend(np.asarray(o) for o in executor.run_many(program, envs))
+    return outs
+
+
 def eval_perplexity(program, params, Xtok, Ytok, executor: Executor, n_eval=50, batch_size=16):
     emb = params["_embed"]
     nll, count = 0.0, 0

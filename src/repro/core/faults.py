@@ -54,20 +54,42 @@ Design constraints, and how they are met:
     slice-update lowering stays valid — payload mutants run at full
     fragment-compiler speed, which is what makes application-tier
     evaluation of *subtle* faults affordable.
+  - **Stream transforms** (``stream``) rewrite whole command streams
+    host-side — ``fn(ops, addrs, data) -> (ops, addrs, data)`` — modelling
+    *protocol*-level faults that corrupt the command interface rather than
+    any one instruction's datapath: a decoder that aliases two opcodes, a
+    command queue that delivers config payloads one transaction late.
+    They ride the same rebinding path as payload transforms (and may be
+    combined with one), with one restriction enforced at transform time:
+    bulk operand runs must come back with opcodes and addresses untouched,
+    so the fragment compiler's slice-update lowering stays valid. Tail and
+    setup streams may be rewritten freely.
 
 Fault classes (``FAULT_CLASSES``): ``identity`` (control: must be bit-exact
-and produce zero detections), ``trunc_width`` (sizing register off by one),
-``sat_wrap`` (saturation replaced by two's-complement-style wraparound),
-``round_floor`` (round-to-nearest replaced by truncation on operand writes),
-``addr_swap`` (adjacent operand rows land at swapped addresses),
-``drop_cfg`` (a setup/config command is silently dropped) and
-``stale_state`` (persistent state leaks into an invocation instead of the
-driver-assumed reset value).
+and produce zero detections), ``trunc_width`` (sizing register off by one,
+one variant per sizing register), ``sat_wrap`` (saturation replaced by
+two's-complement-style wraparound), ``round_floor`` (round-to-nearest
+replaced by truncation on operand writes), ``addr_swap`` (adjacent operand
+rows land at swapped addresses), ``drop_cfg`` (a setup/config command is
+silently dropped, one variant per droppable config), ``stale_state``
+(persistent state leaks into an invocation instead of the driver-assumed
+reset value, one variant per persistent register), and the multi-instruction
+protocol faults ``decode_alias`` (the command decoder confuses an adjacent
+opcode pair) and ``cmd_reorder`` (a config opcode's payloads are delivered
+one transaction late).
+
+``DIAGNOSTIC_FAULT_CLASSES`` (never enumerated by default — selected only
+by explicit name) exercise the campaign runner itself rather than the
+accelerator semantics: ``crash_inject`` raises during co-simulation and
+``hang_inject`` stalls it, proving crash isolation and per-mutant timeouts
+end-to-end.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -88,9 +110,11 @@ class FaultInstance:
 
     ``wrappers`` maps ILA instruction names to update-function wrappers
     (``wrap(orig_update) -> new_update``); ``payload`` is a vectorized
-    host-side payload transform ``fn(ops, data) -> data`` applied to every
-    command stream the mutant consumes (see module docstring for when each
-    mechanism applies). ``instruction`` names the mutated instruction for
+    host-side payload transform ``fn(ops, data) -> data``; ``stream`` is a
+    whole-stream protocol transform ``fn(ops, addrs, data) -> (ops, addrs,
+    data)`` (see module docstring for when each mechanism applies — when
+    both host-side transforms are present, ``stream`` runs first).
+    ``instruction`` names the mutated instruction (or instruction pair) for
     reporting. ``mutates_bulk`` marks wrappers on bulk row-write
     instructions, which invalidates the fragment compiler's slice-update
     lowering (see module docstring)."""
@@ -101,11 +125,30 @@ class FaultInstance:
     note: str
     wrappers: Dict[str, Wrapper] = dataclasses.field(default_factory=dict)
     payload: Optional[Callable[[np.ndarray, np.ndarray], np.ndarray]] = None
+    stream: Optional[Callable[[np.ndarray, np.ndarray, np.ndarray],
+                              Tuple[np.ndarray, np.ndarray, np.ndarray]]] = None
     mutates_bulk: bool = False
 
     @property
     def key(self) -> str:
         return f"{self.target}:{self.fault}@{self.instruction}"
+
+    def host_xform(self):
+        """The combined host-side stream corruption, or None. Signature
+        ``fn(ops, addrs, data) -> (ops, addrs, data)``; the protocol
+        transform runs before the payload transform (a reordered command's
+        payload still goes through the corrupted write datapath)."""
+        if self.payload is None and self.stream is None:
+            return None
+
+        def fn(ops, addrs, data):
+            if self.stream is not None:
+                ops, addrs, data = self.stream(ops, addrs, data)
+            if self.payload is not None:
+                data = self.payload(ops, data)
+            return ops, addrs, data
+
+        return fn
 
     def covers(self, target: AcceleratorTarget) -> Tuple[str, ...]:
         """Intrinsic ops this mutation can corrupt. An ILA-level fault
@@ -144,9 +187,10 @@ _TRIGGERS = ("fn_start", "conv_start", "ew_start")
 _DATA_WRITERS = ("write_v", "wr_act", "wr_a", "wr_dram")
 #: config instructions whose silent loss is a classic driver/setup fault,
 #: most-preferred first (numerics/datatype config, then operand staging)
-_DROPPABLE_CFGS = ("cfg_numerics", "cfg_dtype", "cfg_num", "load_acc")
+_DROPPABLE_CFGS = ("cfg_numerics", "cfg_dtype", "cfg_num", "load_acc",
+                   "pe_cfg_act_mngr")
 #: sizing registers a truncation-width fault decrements (state-reg names)
-_WIDTH_REGS = ("num_in", "in_c", "n_cols")
+_WIDTH_REGS = ("num_in", "num_out", "in_c", "n_cols")
 #: persistent cross-invocation state a stale-leak fault pollutes
 _STALE_REGS = ("h_state", "c_state")
 
@@ -157,6 +201,13 @@ def _instr(ila: ILA, names: Sequence[str]) -> Optional[str]:
         if n in have:
             return n
     return None
+
+
+def _instrs(ila: ILA, names: Sequence[str]) -> List[str]:
+    """All instructions from the idiom list present in this ILA, in idiom
+    order — per-instruction fault variants enumerate over these."""
+    have = {i.name for i in ila.instructions}
+    return [n for n in names if n in have]
 
 
 def _opcode(ila: ILA, name: str) -> int:
@@ -188,6 +239,10 @@ def _state_reg(ila: ILA, names: Sequence[str]) -> Optional[str]:
     return None
 
 
+def _state_regs(ila: ILA, names: Sequence[str]) -> List[str]:
+    return [n for n in names if n in ila._state_init]
+
+
 # ---------------------------------------------------------------------------
 # The mutators
 # ---------------------------------------------------------------------------
@@ -200,26 +255,31 @@ def _identity_variants(t: AcceleratorTarget) -> List[FaultInstance]:
 
 def _trunc_width_variants(t: AcceleratorTarget) -> List[FaultInstance]:
     trig = _instr(t.ila, _TRIGGERS)
-    reg = _state_reg(t.ila, _WIDTH_REGS)
-    if trig is None or reg is None:
+    regs = _state_regs(t.ila, _WIDTH_REGS)
+    if trig is None or not regs:
         return []
 
-    def wrap(orig, reg=reg):
-        def update(st, addr, data):
-            narrowed = dict(st)
-            narrowed[reg] = jnp.maximum(narrowed[reg] - 1.0, 0.0)
-            out = dict(orig(narrowed, addr, data))
-            out[reg] = st[reg]  # transient: config readback is unchanged
-            return out
+    out = []
+    for reg in regs:
 
-        return update
+        def wrap(orig, reg=reg):
+            def update(st, addr, data):
+                narrowed = dict(st)
+                narrowed[reg] = jnp.maximum(narrowed[reg] - 1.0, 0.0)
+                out = dict(orig(narrowed, addr, data))
+                out[reg] = st[reg]  # transient: config readback is unchanged
+                return out
 
-    return [FaultInstance(
-        "trunc_width", t.name, trig,
-        f"compute reads sizing register {reg!r} one too small "
-        "(last operand lane silently dropped)",
-        wrappers={trig: wrap},
-    )]
+            return update
+
+        out.append(FaultInstance(
+            "trunc_width", t.name,
+            trig if len(regs) == 1 else f"{trig}/{reg}",
+            f"compute reads sizing register {reg!r} one too small "
+            "(last operand lane silently dropped)",
+            wrappers={trig: wrap},
+        ))
+    return out
 
 
 def _sat_wrap_variants(t: AcceleratorTarget) -> List[FaultInstance]:
@@ -301,44 +361,148 @@ def _addr_swap_variants(t: AcceleratorTarget) -> List[FaultInstance]:
 
 
 def _drop_cfg_variants(t: AcceleratorTarget) -> List[FaultInstance]:
-    cfg = _instr(t.ila, _DROPPABLE_CFGS)
-    if cfg is None:
-        return []
+    out = []
+    for cfg in _instrs(t.ila, _DROPPABLE_CFGS):
 
-    def wrap(orig):
-        def update(st, addr, data):
-            return st  # the command is silently swallowed
+        def wrap(orig):
+            def update(st, addr, data):
+                return st  # the command is silently swallowed
 
-        return update
+            return update
 
-    return [FaultInstance(
-        "drop_cfg", t.name, cfg,
-        f"setup command {cfg!r} is silently dropped "
-        "(configuration stays at reset values)",
-        wrappers={cfg: wrap},
-    )]
+        out.append(FaultInstance(
+            "drop_cfg", t.name, cfg,
+            f"setup command {cfg!r} is silently dropped "
+            "(configuration stays at reset values)",
+            wrappers={cfg: wrap},
+        ))
+    return out
 
 
 def _stale_state_variants(t: AcceleratorTarget) -> List[FaultInstance]:
     trig = _instr(t.ila, _TRIGGERS)
-    regs = [r for r in _STALE_REGS if r in t.ila._state_init]
+    regs = _state_regs(t.ila, _STALE_REGS)
     if trig is None or not regs:
         return []
 
-    def wrap(orig, regs=tuple(regs)):
-        def update(st, addr, data):
-            polluted = dict(st)
-            for r in regs:
-                polluted[r] = jnp.full_like(polluted[r], 0.25)
-            return orig(polluted, addr, data)
+    out = []
+    for reg in regs:
 
-        return update
+        def wrap(orig, reg=reg):
+            def update(st, addr, data):
+                polluted = dict(st)
+                polluted[reg] = jnp.full_like(polluted[reg], 0.25)
+                return orig(polluted, addr, data)
+
+            return update
+
+        out.append(FaultInstance(
+            "stale_state", t.name,
+            trig if len(regs) == 1 else f"{trig}/{reg}",
+            f"persistent state {reg!r} holds a previous invocation's "
+            "residue instead of the driver-assumed reset value",
+            wrappers={trig: wrap},
+        ))
+    return out
+
+
+def _decode_alias_variants(t: AcceleratorTarget) -> List[FaultInstance]:
+    """Decoder confusion between an adjacent opcode pair (a <-> a^1): the
+    classic single-bit decode fault. Operand row-writers are excluded (a
+    bulk-path opcode swap would break the slice-update lowering — that
+    regime is ``addr_swap``'s); at most two pairs per target keep the
+    matrix bounded."""
+    excluded = {
+        i.opcode for i in t.ila.instructions
+        if i.opcode == NOP_OPCODE or i.name.startswith(("write", "wr_"))
+    }
+    by_op = {i.opcode: i for i in t.ila.instructions}
+    out: List[FaultInstance] = []
+    for ins in sorted(t.ila.instructions, key=lambda i: i.opcode):
+        a, b = ins.opcode, ins.opcode ^ 1
+        if a > b or a in excluded or b in excluded or b not in by_op:
+            continue
+        other = by_op[b]
+
+        def xform(ops, addrs, data, a=a, b=b):
+            o = np.asarray(ops)
+            swapped = np.where(o == a, b, np.where(o == b, a, o))
+            return swapped.astype(np.int32), np.asarray(addrs), data
+
+        out.append(FaultInstance(
+            "decode_alias", t.name, f"{ins.name}~{other.name}",
+            f"command decoder aliases opcodes {a:#x}<->{b:#x} "
+            f"({ins.name!r} and {other.name!r} execute each other's "
+            "payloads)",
+            stream=xform,
+        ))
+        if len(out) >= 2:
+            break
+    return out
+
+
+def _cmd_reorder_variants(t: AcceleratorTarget) -> List[FaultInstance]:
+    """Command-queue reordering: every payload of one config opcode is
+    delivered one transaction late — invocation k applies invocation k-1's
+    config, and the first sees reset values. A protocol fault invisible to
+    single-fragment checks when consecutive invocations share a config."""
+    out: List[FaultInstance] = []
+    for cfg in _instrs(t.ila, _DROPPABLE_CFGS):
+        opcode = _opcode(t.ila, cfg)
+
+        def xform(ops, addrs, data, opcode=opcode):
+            o = np.asarray(ops)
+            rows = np.flatnonzero(o == opcode)
+            if rows.size == 0:
+                return ops, addrs, data
+            d = np.array(data, np.float32, copy=True)
+            delayed = d[rows[:-1]].copy()
+            d[rows[0]] = 0.0
+            if rows.size > 1:
+                d[rows[1:]] = delayed
+            return o, np.asarray(addrs), d
+
+        out.append(FaultInstance(
+            "cmd_reorder", t.name, cfg,
+            f"the command queue delivers {cfg!r} payloads one transaction "
+            "late (the first lands on reset values)",
+            stream=xform,
+        ))
+    return out
+
+
+def _crash_inject_variants(t: AcceleratorTarget) -> List[FaultInstance]:
+    writer = _instr(t.ila, _DATA_WRITERS)
+    if writer is None:
+        return []
+
+    def xform(ops, data):
+        raise RuntimeError(
+            "crash_inject: deliberate diagnostic crash during co-simulation"
+        )
 
     return [FaultInstance(
-        "stale_state", t.name, trig,
-        f"persistent state {regs} holds a previous invocation's residue "
-        "instead of the driver-assumed reset value",
-        wrappers={trig: wrap},
+        "crash_inject", t.name, writer,
+        "diagnostic: raises mid-co-simulation (exercises campaign crash "
+        "isolation; never part of the default library)",
+        payload=xform,
+    )]
+
+
+def _hang_inject_variants(t: AcceleratorTarget) -> List[FaultInstance]:
+    writer = _instr(t.ila, _DATA_WRITERS)
+    if writer is None:
+        return []
+
+    def xform(ops, data):
+        time.sleep(float(os.environ.get("REPRO_HANG_SECONDS", "3600")))
+        return data
+
+    return [FaultInstance(
+        "hang_inject", t.name, writer,
+        "diagnostic: stalls mid-co-simulation (exercises per-mutant "
+        "timeouts; never part of the default library)",
+        payload=xform,
     )]
 
 
@@ -358,6 +522,22 @@ FAULT_CLASSES: Dict[str, FaultModel] = {
                    _drop_cfg_variants),
         FaultModel("stale_state", "stale accumulator/state leak",
                    _stale_state_variants),
+        FaultModel("decode_alias", "decoder aliases an opcode pair",
+                   _decode_alias_variants),
+        FaultModel("cmd_reorder", "config payloads delivered one late",
+                   _cmd_reorder_variants),
+    )
+}
+
+#: runner-diagnostic faults: selectable only by explicit name, never part
+#: of default enumeration — they stress the campaign engine, not the ILA
+DIAGNOSTIC_FAULT_CLASSES: Dict[str, FaultModel] = {
+    m.name: m
+    for m in (
+        FaultModel("crash_inject", "raises during co-simulation",
+                   _crash_inject_variants),
+        FaultModel("hang_inject", "stalls during co-simulation",
+                   _hang_inject_variants),
     )
 }
 
@@ -366,15 +546,18 @@ def fault_instances(
     target: AcceleratorTarget, faults: Optional[Sequence[str]] = None
 ) -> List[FaultInstance]:
     """Applicable fault instances for ``target``, in library order.
-    ``faults`` selects fault classes by name (None = the full library)."""
+    ``faults`` selects fault classes by name (None = the full default
+    library; diagnostic classes must be named explicitly)."""
+    library = dict(FAULT_CLASSES)
+    library.update(DIAGNOSTIC_FAULT_CLASSES)
     names = list(FAULT_CLASSES) if faults is None else list(faults)
     out: List[FaultInstance] = []
     for n in names:
-        if n not in FAULT_CLASSES:
+        if n not in library:
             raise KeyError(
-                f"unknown fault class {n!r}; available: {list(FAULT_CLASSES)}"
+                f"unknown fault class {n!r}; available: {list(library)}"
             )
-        out.extend(FAULT_CLASSES[n].variants(target))
+        out.extend(library[n].variants(target))
     return out
 
 
@@ -407,17 +590,30 @@ def clone_ila(ila: ILA, wrappers: Optional[Dict[str, Wrapper]] = None) -> ILA:
 
 
 def _xform_stream(ps: PackedStream, fn) -> PackedStream:
-    return PackedStream(ps.ops, ps.addrs, fn(ps.ops, ps.data))
+    ops, addrs, data = fn(np.asarray(ps.ops), np.asarray(ps.addrs),
+                          np.asarray(ps.data, np.float32))
+    return PackedStream(np.asarray(ops, np.int32),
+                        np.asarray(addrs, np.int32),
+                        np.asarray(data, np.float32))
 
 
 def _xform_data(ds: DataStream, fn) -> DataStream:
-    bulk = [
-        dataclasses.replace(
-            b, rows=fn(np.full((b.rows.shape[0],), b.opcode, np.int32),
-                       np.asarray(b.rows, np.float32))
-        )
-        for b in ds.bulk
-    ]
+    bulk = []
+    for b in ds.bulk:
+        n = b.rows.shape[0]
+        ops = np.full((n,), b.opcode, np.int32)
+        addrs = np.arange(b.base, b.base + n, dtype=np.int32)
+        o2, a2, rows = fn(ops, addrs, np.asarray(b.rows, np.float32))
+        if not (np.array_equal(np.asarray(o2), ops)
+                and np.array_equal(np.asarray(a2), addrs)):
+            raise ValueError(
+                "stream transform rewrote a bulk operand run's opcodes or "
+                "addresses — that breaks the fragment compiler's "
+                "slice-update lowering; protocol faults may only touch "
+                "tail/setup commands (bulk semantics faults belong to "
+                "mutates_bulk wrapper faults)"
+            )
+        bulk.append(dataclasses.replace(b, rows=np.asarray(rows, np.float32)))
     return DataStream(bulk, _xform_stream(ds.tail, fn))
 
 
@@ -431,6 +627,8 @@ def _mutant_planner(planner: Callable, mutant: AcceleratorTarget,
     transform the per-invocation streams in place (the bulk fast path stays
     valid); bulk-mutating wrapper faults force the full-stream scan tier."""
 
+    hx = inst.host_xform()
+
     def plan(ctx, x, args):
         jobs, assemble = planner(ctx, x, args)
         rebound = []
@@ -439,17 +637,17 @@ def _mutant_planner(planner: Callable, mutant: AcceleratorTarget,
                 j.frag.key,
                 lambda f=j.frag: CompiledFragment(
                     mutant.ila, f.key,
-                    (_xform_stream(f.setup, inst.payload)
-                     if inst.payload is not None and len(f.setup)
+                    (_xform_stream(f.setup, hx)
+                     if hx is not None and len(f.setup)
                      else f.setup),
                     dict(f.meta),
                 ),
             )
             data = j.data
-            if inst.payload is not None:
-                data = (_xform_data(data, inst.payload)
+            if hx is not None:
+                data = (_xform_data(data, hx)
                         if isinstance(data, DataStream)
-                        else _xform_stream(data, inst.payload))
+                        else _xform_stream(data, hx))
             elif inst.mutates_bulk and isinstance(data, DataStream):
                 data = data.to_stream()
             rebound.append(SimJob(frag, data, j.read, j.window))
@@ -467,13 +665,17 @@ def make_mutant(target: AcceleratorTarget, inst: FaultInstance) -> AcceleratorTa
     drops VT3 checks (those closures are bound to the golden module-level
     ILA and would not exercise the mutation). Wrapper faults (and the
     identity control, which exercises the clone machinery) get a cloned
-    ILA with fresh jit caches; payload-only faults corrupt command streams
-    host-side and share the golden ILA — and therefore its warm compiled
+    ILA with fresh jit caches; host-side faults (payload and/or stream
+    transforms without wrappers) corrupt command streams before simulation
+    and share the golden ILA — and therefore its warm compiled
     simulators."""
-    payload_only = inst.payload is not None and not inst.wrappers
+    host_only = (
+        (inst.payload is not None or inst.stream is not None)
+        and not inst.wrappers
+    )
     m = AcceleratorTarget(
         target.name,
-        target.ila if payload_only else clone_ila(target.ila, inst.wrappers),
+        target.ila if host_only else clone_ila(target.ila, inst.wrappers),
         display_name=f"{target.display_name}[{inst.fault}]",
         capabilities=target.capabilities,
         doc=f"fault mutant of {target.name}: {inst.note}",
@@ -513,6 +715,19 @@ def swapped_in(mutant: AcceleratorTarget):
             )
         yield golden
     finally:
-        TARGETS.replace(golden)
+        # every restoration step runs even if an earlier one fails — a
+        # single bad spec must not leak the registry swap or the remaining
+        # specs; the first failure is re-raised once everything possible
+        # has been restored
+        restore_err: Optional[BaseException] = None
+        try:
+            TARGETS.replace(golden)
+        except BaseException as e:  # pragma: no cover - defensive
+            restore_err = e
         for op, spec in displaced_specs.items():
-            ir.restore_accel_op(op, spec)
+            try:
+                ir.restore_accel_op(op, spec)
+            except BaseException as e:  # pragma: no cover - defensive
+                restore_err = restore_err or e
+        if restore_err is not None:  # pragma: no cover - defensive
+            raise restore_err

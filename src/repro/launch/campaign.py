@@ -4,23 +4,36 @@
         [--targets flexasr,hlscnn,vecunit] [--apps resmlp,lstm-wlm] \
         [--faults identity,trunc_width,round_floor,drop_cfg,stale_state] \
         [--engine pipelined] [--devices-per-target 2] [--ladder full] \
-        [--n-eval 32] [--train-steps 120] [--json CAMPAIGN.json]
+        [--n-eval 32] [--train-steps 120] [--seed 0] \
+        [--workers 4 --mutant-timeout 300 --retries 1] \
+        [--json CAMPAIGN.json] [--resume]
 
 Enumerates (target x instruction x fault) mutants from the fault library
 (``repro.core.faults``), runs each through the tiered detection ladder
 (``repro.core.campaign``: VT2 abstract -> co-simulated fragments ->
-per-op golden-vs-mutant diff -> full-application metric deltas on the
-pipelined multi-device Executor), prints the escape-analysis matrix and
-mutants/sec throughput, and optionally writes the machine-readable
-``CAMPAIGN.json`` (uploaded as a CI artifact by the campaign smoke job).
+per-op golden-vs-mutant diff -> full-application metric deltas -> the
+calibrated per-example statistical tier), prints the escape-analysis
+matrix, mutants/sec throughput and the canonical matrix digest, and
+writes the machine-readable ``CAMPAIGN.json`` (uploaded as a CI
+artifact by the campaign smoke job).
+
+``--workers N`` (N > 1) selects the fault-tolerant sharded runner:
+mutants fan out across N worker subprocesses with per-mutant timeouts,
+crash isolation and bounded retry. With ``--json`` the campaign
+checkpoints after every mutant, and ``--resume`` continues an
+interrupted run from that file (config fingerprint permitting) — the
+resumed escape matrix is bit-identical to an uninterrupted one
+(compare ``matrix digest`` lines).
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-from ..core.campaign import format_matrix, run_campaign
-from ..core.faults import FAULT_CLASSES
+from ..core.campaign import (
+    format_matrix, matrix_digest, run_campaign, run_campaign_sharded,
+)
+from ..core.faults import DIAGNOSTIC_FAULT_CLASSES, FAULT_CLASSES
 from ..core.ila import TARGETS
 
 
@@ -35,7 +48,8 @@ def main() -> None:
                          f"registered: {TARGETS.names()})")
     ap.add_argument("--faults", default=None,
                     help="comma-separated fault classes (default: full "
-                         f"library: {list(FAULT_CLASSES)})")
+                         f"library: {list(FAULT_CLASSES)}; diagnostic "
+                         f"extras: {list(DIAGNOSTIC_FAULT_CLASSES)})")
     ap.add_argument("--apps", default="resmlp,lstm-wlm",
                     help="applications for the app-metric tier")
     ap.add_argument("--engine", default="pipelined",
@@ -51,15 +65,37 @@ def main() -> None:
                     help="app-tier detection threshold: |accuracy delta|")
     ap.add_argument("--ppl-ratio", type=float, default=1.02,
                     help="app-tier detection threshold: perplexity ratio")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds mutant sampling, app training AND the "
+                         "evaluation-subset draw — identical seeds "
+                         "reproduce the matrix bit-for-bit")
+    ap.add_argument("--stat-floor", type=float, default=1e-3,
+                    help="statistical-tier minimum detection threshold on "
+                         "the paired per-example shift")
+    ap.add_argument("--stat-calib-seeds", type=int, default=2,
+                    help="identity-null calibration subsets per (target, "
+                         "app); 0 disables the statistical tier")
+    ap.add_argument("--workers", type=int, default=1,
+                    help=">1 selects the fault-tolerant sharded runner "
+                         "with this many worker subprocesses")
+    ap.add_argument("--mutant-timeout", type=float, default=300.0,
+                    help="sharded runner: per-mutant wall-clock budget; a "
+                         "hanging mutant is terminated and recorded as "
+                         "outcome 'timeout'")
+    ap.add_argument("--retries", type=int, default=1,
+                    help="sharded runner: retry budget for transient "
+                         "worker failures")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the machine-readable campaign result here")
+                    help="write the machine-readable campaign result here "
+                         "(also the per-mutant checkpoint file)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the --json checkpoint if present")
     args = ap.parse_args()
 
     # importing repro.accel registers the bundled targets
     from .. import accel  # noqa: F401
 
-    result = run_campaign(
+    params = dict(
         targets=_csv(args.targets),
         faults=_csv(args.faults),
         apps=_csv(args.apps) or (),
@@ -72,15 +108,32 @@ def main() -> None:
         acc_delta=args.acc_delta,
         ppl_ratio=args.ppl_ratio,
         seed=args.seed,
-        progress=print,
+        stat_floor=args.stat_floor,
+        stat_calib_seeds=args.stat_calib_seeds,
     )
+    if args.workers > 1:
+        result = run_campaign_sharded(
+            workers=args.workers,
+            mutant_timeout=args.mutant_timeout,
+            retries=args.retries,
+            checkpoint=args.json,
+            resume=args.resume,
+            progress=print,
+            **params,
+        )
+    else:
+        result = run_campaign(
+            checkpoint=args.json, resume=args.resume, progress=print,
+            **params,
+        )
     print()
     print(format_matrix(result))
+    print(f"\nmatrix digest: {matrix_digest(result)}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result.to_json(), f, indent=1, sort_keys=True)
             f.write("\n")
-        print(f"\nwrote {args.json}")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -180,6 +180,65 @@ def test_campaign_leaves_registry_bit_identical():
     )
 
 
+def test_serial_crash_isolated_and_registry_clean():
+    """A mutant that raises mid-ladder (the crash_inject diagnostic fault)
+    is recorded as outcome 'crash' with its partial tiers kept; the
+    campaign completes every other mutant and the registries come back
+    bit-identical (the swapped_in exception path restores everything)."""
+    before = _registry_snapshot()
+    result = campaign_mod.run_campaign(
+        targets=("vecunit",),
+        faults=("identity", "drop_cfg", "crash_inject"),
+        apps=(), engine="compiled", devices_per_target=1,
+        op_samples=1, vt2_n=2, stat_calib_seeds=0,
+    )
+    assert _registry_snapshot() == before
+    by_fault = {r.fault: r for r in result.reports}
+    crash = by_fault["crash_inject"]
+    assert crash.outcome == "crash" and crash.detected_at == "crash"
+    assert "crash_inject" in crash.error
+    assert "vt2" in crash.tiers, "partial tier results were dropped"
+    assert by_fault["identity"].outcome == "ok"
+    assert by_fault["identity"].detected_at is None
+    assert by_fault["drop_cfg"].outcome == "ok"
+    assert by_fault["drop_cfg"].detected_at is not None
+
+
+def test_mutant_raising_inside_app_tier_leaves_registry_clean(monkeypatch):
+    """Extends the leak check to the app tier: an application evaluation
+    that raises ONLY while a mutant is swapped in (golden prep succeeds)
+    must be crash-isolated with the registries restored — the failure
+    happens deepest in the ladder, inside the swapped_in window."""
+    golden = TARGETS.get("vecunit")
+
+    def fake_prepare(name, n_eval, train_steps, seed):
+        def per_example(ex, idx):
+            if TARGETS.get("vecunit") is not golden:
+                raise RuntimeError("app evaluation blew up on the mutant")
+            n = len(list(idx))
+            return campaign_mod.PerExample(
+                np.zeros((n, 4), np.float64), np.zeros(n, np.float64), 1.0)
+
+        return campaign_mod._App(
+            name, "acc", None, {"vecunit": 1}, pool=128,
+            per_example=per_example)
+
+    monkeypatch.setattr(campaign_mod, "_prepare_app", fake_prepare)
+    before = _registry_snapshot()
+    result = campaign_mod.run_campaign(
+        targets=("vecunit",), faults=("identity", "drop_cfg"),
+        apps=("resmlp",), engine="compiled", devices_per_target=1,
+        op_samples=1, vt2_n=2, stat_calib_seeds=0, ladder="full",
+    )
+    assert _registry_snapshot() == before, (
+        "app-tier crash leaked registry state"
+    )
+    for r in result.reports:
+        assert r.outcome == "crash" and "blew up" in r.error
+        # the ladder got as far as the app tier before dying
+        assert "op_diff" in r.tiers and "app" not in r.tiers
+
+
 def test_swap_restores_exact_objects_even_on_error():
     t = TARGETS.get("vecunit")
     before = _registry_snapshot()
