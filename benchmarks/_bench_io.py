@@ -17,7 +17,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 BENCH_PATH = os.environ.get("REPRO_BENCH_JSON", "BENCH_cosim.json")
 

@@ -17,11 +17,10 @@ from __future__ import annotations
 
 import time
 
-from repro.core import apps, ir
+from repro.core import apps, ir, rules as R
 from repro.core.compile import SelectionPolicy, compile_program, make_cost_fn
 from repro.core.egraph import EGraph, extract_best, run_rewrites
 from repro.core.ila import TARGETS
-from repro.core import rules as R
 
 
 def run():

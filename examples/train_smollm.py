@@ -10,7 +10,6 @@ hardware); the default reduced config trains visibly in minutes on CPU.
 import argparse
 import tempfile
 
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import SyntheticLM

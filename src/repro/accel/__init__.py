@@ -6,8 +6,4 @@ Importing this package registers the bundled targets with the core registry
 To add an accelerator: write one module against ``repro.accel.target`` (see
 ``vecunit.py`` and ``docs/targets.md``) and import it here.
 """
-from . import target  # noqa: F401  (the plugin API)
-from . import flexasr  # noqa: F401
-from . import hlscnn  # noqa: F401
-from . import vta  # noqa: F401
-from . import vecunit  # noqa: F401
+from . import flexasr, hlscnn, target, vecunit, vta  # noqa: F401

@@ -20,7 +20,6 @@ They are jit-able and differentiable-through via straight-through estimators
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -156,3 +155,42 @@ def int8_quantize(x: jnp.ndarray, scale=None) -> Tuple[jnp.ndarray, jnp.ndarray]
 
 def int8_dequantize(q: jnp.ndarray, scale) -> jnp.ndarray:
     return q.astype(jnp.float32) * scale
+
+
+# --------------------------------------------------------------------------
+# Saturation points and rounding grids (shared by the fault library and the
+# static range-analysis pass)
+# --------------------------------------------------------------------------
+
+# Block-scaled formats (AdaptivFloat, block-fp) renormalize per tensor, so
+# their *absolute* overflow point depends on the data, not the spec. 4.5 is
+# the modeling constant the fault library uses for the rare-overflow tail of
+# unit-scale activations: values beyond it fall outside the window a
+# per-block exponent chosen for |x| <~ 1 data can still represent.
+BLOCK_SCALED_SAT = 4.5
+
+
+def fixed_saturation(spec: FixedPointSpec) -> float:
+    """Largest representable magnitude (up to one LSB) of a fixed-point
+    format: 2^(integer bits)."""
+    return float(2.0 ** (spec.n_bits - 1 - spec.n_frac))
+
+
+def saturation_point(numerics: str) -> float:
+    """Absolute saturation/wrap threshold for a target's declared numerics
+    string (``AcceleratorTarget.capabilities["numerics"]``)."""
+    if numerics.startswith(("fixed", "int8")):
+        return fixed_saturation(HLSCNN_ACT)
+    return BLOCK_SCALED_SAT
+
+
+def rounding_grid(numerics: str) -> Optional[float]:
+    """Quantization grid spacing near zero for a numerics family, or None
+    when the family has no static grid (pure-integer paths rescale
+    per-tensor, so a fixed grid is meaningless)."""
+    if numerics.startswith("int8"):
+        return None
+    if numerics.startswith("fixed"):
+        return 1.0 / HLSCNN_ACT.scale
+    # block-scaled: one mantissa step below the unit binade
+    return float(2.0 ** -(AdaptivFloatSpec().n_man + 1))

@@ -35,7 +35,7 @@ import numpy as np
 
 from ..core import ir
 from ..core.egraph import Rewrite
-from ..core.ila import CompiledFragment, DataStream, FragmentCache, ILA, TARGETS
+from ..core.ila import ILA, TARGETS, CompiledFragment, DataStream, FragmentCache
 
 
 @dataclasses.dataclass
@@ -334,6 +334,28 @@ class Intrinsic:
     doc: str = ""
 
 
+@dataclasses.dataclass(frozen=True)
+class LintDecl:
+    """Static-analysis declarations for one target (``declare_lint``).
+
+    input_range    inclusive (lo, hi) interval of operand values the
+                   target's applications are expected to feed it; drives
+                   the numeric range pass (None = range pass reports
+                   nothing).
+    carried_state  state buffers intentionally carried across fragment
+                   boundaries (recurrent state) — reported at info level
+                   as the ``stale_state`` fault surface instead of warned
+                   about.
+    reset_valid    config registers whose reset value is a legal operating
+                   point (mode-dependent configs a valid stream may never
+                   write) — exempt from uninitialized-read warnings.
+    """
+
+    input_range: Optional[Tuple[float, float]] = None
+    carried_state: Tuple[str, ...] = ()
+    reset_valid: Tuple[str, ...] = ()
+
+
 class AcceleratorTarget:
     """One pluggable accelerator backend; see the module docstring."""
 
@@ -366,8 +388,19 @@ class AcceleratorTarget:
         #: name -> fn() -> (ok: bool, worst_abs_dev: float); ILA vs impl (VT3)
         self.vt3_checks: Dict[str, Callable[[], Tuple[bool, float]]] = {}
         self._mapping_fns: List[Callable] = []
+        #: static-analysis declarations consumed by ``core.ilalint``
+        self.lint = LintDecl()
 
     # -- declaration ------------------------------------------------------
+    def declare_lint(self, **kw) -> "LintDecl":
+        """Declare static-analysis facts the lint passes cannot infer from
+        the ILA alone: the operand value range applications feed this
+        target (``input_range``), state buffers intentionally carried
+        across fragments (``carried_state``), and config registers whose
+        reset value is a valid operating point (``reset_valid`` — silences
+        uninitialized-read warnings for mode-dependent configs)."""
+        self.lint = dataclasses.replace(self.lint, **kw)
+        return self.lint
     def add_intrinsic(self, intr: Intrinsic) -> Intrinsic:
         self.intrinsics[intr.op] = intr
         return intr

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import ir
-from ..core.egraph import P, Rewrite, V as PV, shape_of
+from ..core.egraph import P, V as PV, Rewrite, shape_of
 from ..core.ila import (
     ILA, BulkWrite, CompiledFragment, DataStream, PackedStream,
 )
@@ -75,6 +75,9 @@ TARGET = AcceleratorTarget(
     vt2_tol=0.0,
 )
 FRAGMENTS = TARGET.fragments
+# unary ops (sigmoid) legitimately run with vec_b at its reset value, and
+# sigmoid inputs are squashed well inside the block-scaled wrap point
+TARGET.declare_lint(input_range=(-4.0, 4.0), reset_valid=("vec_b",))
 
 vecunit.state("vec_a", lambda: jnp.zeros((_WORDS, V), jnp.float32))
 vecunit.state("vec_b", lambda: jnp.zeros((_WORDS, V), jnp.float32))

@@ -153,7 +153,7 @@ class CheckpointManager:
                 if list(arr.shape) != list(np.shape(leaf)):
                     raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
                 if str(arr.dtype) != meta["dtype"]:
-                    import ml_dtypes  # ships with jax
+                    import ml_dtypes  # noqa: F401  (registers bf16/fp8 dtype names)
 
                     arr = arr.astype(np.dtype(meta["dtype"]))
                 if shard_flat is not None:

@@ -19,7 +19,7 @@ accelerator mapping — the paper kept grouped convolutions on the host
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -4,6 +4,15 @@ Enumerates (target x instruction x fault) mutants — :mod:`.faults` — and
 runs every mutant through a **tiered detection ladder**, measuring which
 validation tier first distinguishes it from the golden design:
 
+  ``static``    tier 0 — the static verifier (:mod:`.ilalint`): golden
+                planner-emitted probe streams are pushed through the
+                mutant's host-side stream transform and classified against
+                the jaxpr-derived instruction effects — **zero simulated
+                commands**. Decode violations (opcode/address rewrites)
+                and order-sensitive config corruption are caught here;
+                bulk numeric payload corruption is deliberately deferred
+                to the simulation tiers. Under ``ladder="escalate"`` a
+                static detection skips every simulated tier.
   ``vt2``       the declared VT2 fragment-equivalence checks over abstract
                 (fp32) semantics, with each target's threaded tolerance.
                 This is the formal-proof analogue: it validates the
@@ -78,13 +87,13 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import apps as apps_mod, cosim, ir, validate
+from . import apps as apps_mod, cosim, ilalint, ir, validate
 from .codegen import Executor
 from .compile import compile_program
 from .faults import FaultInstance, fault_instances, make_mutant, swapped_in
 from .ila import TARGETS
 
-TIER_ORDER = ("vt2", "frag_sim", "op_diff", "app", "stat")
+TIER_ORDER = ("static", "vt2", "frag_sim", "op_diff", "app", "stat")
 
 #: mutant outcomes beyond a clean ladder: the mutant raised mid-ladder
 #: (crash isolation) or exceeded the sharded runner's per-mutant timeout
@@ -158,14 +167,15 @@ class MutantReport:
     def app_only(self) -> bool:
         """The paper's thesis case: every pre-application tier passed (or
         could not run), and an application metric caught the fault."""
-        return self._only("app", ("vt2", "frag_sim", "op_diff"))
+        return self._only("app", ("static", "vt2", "frag_sim", "op_diff"))
 
     @property
     def stat_only(self) -> bool:
         """The calibrated statistical tier's marginal value: every other
         tier — including the coarse app-metric threshold — passed, and only
         the paired per-example statistic caught the fault."""
-        return self._only("stat", ("vt2", "frag_sim", "op_diff", "app"))
+        return self._only(
+            "stat", ("static", "vt2", "frag_sim", "op_diff", "app"))
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -543,6 +553,33 @@ def _fragment_ops(e: ir.Expr) -> List[str]:
     ]
 
 
+def _tier_static(target, probes, inst: FaultInstance) -> TierResult:
+    """Tier 0 — the static verifier (:mod:`.ilalint`): golden probe
+    streams through the mutant's host-side stream transform, classified
+    with **zero simulated commands**. Faults with no host-visible
+    transform (pure ILA-update wrappers) are out of static scope and pass;
+    a transform that *raises* while being applied (e.g. the crash-inject
+    diagnostic fault) leaves the tier inconclusive so the simulation
+    ladder still exercises it."""
+    hx = inst.host_xform()
+    if hx is None:
+        return TierResult(
+            "static", False,
+            detail="no host-visible stream transform (ILA-update fault); "
+                   "out of static scope")
+    try:
+        detected, score, detail = ilalint.analyze_mutation(
+            target, probes, hx)
+    except KeyboardInterrupt:
+        raise
+    except Exception as e:
+        return TierResult(
+            "static", None,
+            detail=f"static analysis inconclusive: transform raised "
+                   f"{type(e).__name__}: {e}")
+    return TierResult("static", detected, score=score, detail=detail)
+
+
 def _tier_vt2(target, cases, n: int, seed: int) -> TierResult:
     worst_name = ""
     for case in cases:
@@ -711,6 +748,8 @@ class _Ctx:
     eval_idx: Dict[str, Tuple[int, ...]]
     stat_cal: Dict[str, Any]
     instances: Dict[str, Tuple[Any, FaultInstance]]
+    #: golden planner-emitted probe streams per target, for the static tier
+    probes: Dict[str, List] = dataclasses.field(default_factory=dict)
 
 
 def _resolve_config(
@@ -837,8 +876,12 @@ def _prepare(config: Dict[str, Any], say) -> _Ctx:
     vt2_cases = {t.name: t.vt2_cases(8, 32) for t in selected}
     stat_cal = _calibrate_stat(campaign_apps, selected, config, say)
     instances = _enumerate_instances(selected, config["faults"])
+    # golden probe streams for the static tier: planner packing only
+    # (crc32-seeded, so sharded workers derive identical probes)
+    probes = {t.name: ilalint.probe_streams(t, seed=seed, samples=1)
+              for t in selected}
     return _Ctx(config, selected, campaign_apps, golden_info, golden_ops,
-                vt2_cases, eval_idx, stat_cal, instances)
+                vt2_cases, eval_idx, stat_cal, instances, probes)
 
 
 def _run_one(ctx: _Ctx, t, inst: FaultInstance) -> MutantReport:
@@ -853,8 +896,10 @@ def _run_one(ctx: _Ctx, t, inst: FaultInstance) -> MutantReport:
     outcome, error = "ok", ""
     try:
         with swapped_in(mutant):
-            tiers["vt2"] = _tier_vt2(mutant, mutant.vt2_cases(8, 32),
-                                     cfg["vt2_n"], cfg["seed"])
+            # tier 0: static verification against the golden probe streams
+            # — no simulation; under an escalation ladder a static
+            # detection skips every simulated tier below
+            tiers["static"] = _tier_static(t, ctx.probes[t.name], inst)
 
             def app_and_stat():
                 app_tier, stat_tier = _tier_app_and_stat(ctx, t)
@@ -862,6 +907,9 @@ def _run_one(ctx: _Ctx, t, inst: FaultInstance) -> MutantReport:
                 return stat_tier
 
             runner = [
+                ("vt2", lambda: _tier_vt2(
+                    mutant, mutant.vt2_cases(8, 32), cfg["vt2_n"],
+                    cfg["seed"])),
                 ("frag_sim", lambda: _tier_frag_sim(
                     mutant, ctx.vt2_cases[t.name], cfg["engine"],
                     cfg["devices_per_target"], cfg["seed"])),

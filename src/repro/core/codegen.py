@@ -78,11 +78,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import numpy as np
 
-from . import ir
-from .ila import CompiledFragment, FragmentCache, TARGETS
 from ..accel.target import (  # importing registers bundled targets
     CostEstimate, GroupTiming, PlanContext, SimJob,
 )
+from . import ir
+from .ila import TARGETS, CompiledFragment, FragmentCache
 
 ENGINES = ("compiled", "pipelined", "jit", "eager")
 
@@ -293,9 +293,22 @@ class Executor:
         self.stage_seconds: Dict[str, float] = dict.fromkeys(
             ("pack_s", "dispatch_s", "readback_s"), 0.0
         )
+        #: programs already shape/dtype-checked (once per distinct Expr)
+        self._checked: set = set()
 
     # ------------------------------------------------------------------
+    def _precheck(self, e: ir.Expr, env: Dict[str, Any]) -> None:
+        """Static shape/dtype validation (:func:`ir.check_expr`) before any
+        planner runs — an extraction candidate with an inconsistent shape
+        fails here with the offending call named, not deep inside a
+        planner. Cached per distinct program."""
+        if e in self._checked:
+            return
+        ir.check_expr(e, {k: np.shape(v) for k, v in env.items()})
+        self._checked.add(e)
+
     def run(self, e: ir.Expr, env: Dict[str, Any]):
+        self._precheck(e, env)
         memo: Dict[ir.Expr, Any] = {}
 
         def rec(x: ir.Expr):
@@ -318,6 +331,8 @@ class Executor:
         fragment), while host glue ops evaluate per sample. Per-sample
         numerics (chunking, AF exponent windows) are identical to B calls
         of :meth:`run`."""
+        if envs:
+            self._precheck(e, envs[0])
         B = len(envs)
         memo: Dict[ir.Expr, List[Any]] = {}
 

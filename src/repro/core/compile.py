@@ -26,9 +26,8 @@ import dataclasses
 import math
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
-from . import ir
-from .egraph import EGraph, extract_best, run_rewrites, default_cost, host_op_cost
-from . import rules as R
+from . import ir, rules as R
+from .egraph import EGraph, extract_best, host_op_cost, run_rewrites
 from .ila import TARGETS
 
 #: cycle-normalization knee: r = cycles / (cycles + K) keeps accel-op costs

@@ -22,15 +22,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import apps, ir
+from . import ir
 from .codegen import Executor
-from .compile import compile_program
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,6 @@ all members of a class must agree on shape, which shape-conditioned rewrites
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -95,11 +95,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..accel import numerics as numerics_mod
+from ..accel.target import AcceleratorTarget, Intrinsic, SimJob
 from . import ir
 from .ila import (
-    CompiledFragment, DataStream, ILA, NOP_OPCODE, PackedStream, TARGETS,
+    ILA, NOP_OPCODE, TARGETS, CompiledFragment, DataStream, PackedStream,
 )
-from ..accel.target import AcceleratorTarget, Intrinsic, SimJob
 
 Wrapper = Callable[[Callable], Callable]
 
@@ -293,17 +294,14 @@ def _sat_wrap_variants(t: AcceleratorTarget) -> List[FaultInstance]:
     writer = _instr(t.ila, _DATA_WRITERS)
     if writer is None:
         return []
-    if numerics.startswith("fixed") or numerics.startswith("int8"):
-        # fixed-range interfaces: hlscnn 16-bit fixed / 8 frac -> +/-128;
-        # vta's dram rows carry int8-grid operands and wide ALU operands
-        vmax = 128.0
-    else:
-        # block-scaled numerics: the overflow point sits in the far tail of
-        # unit-scale data — small validation draws almost never reach it,
-        # but application tensors (heavier-tailed residual-stream
-        # activations, orders of magnitude more values) do: the classic
-        # rare-overflow fault that only application-level validation sees
-        vmax = 4.5
+    # fixed-range interfaces (hlscnn 16-bit fixed / 8 frac, vta's int8-grid
+    # dram rows) saturate at +/-128; block-scaled numerics size their window
+    # from the tensor, so the overflow point sits in the far tail of
+    # unit-scale data — small validation draws almost never reach it, but
+    # application tensors (heavier-tailed residual-stream activations,
+    # orders of magnitude more values) do: the classic rare-overflow fault
+    # that only application-level validation sees
+    vmax = numerics_mod.saturation_point(numerics)
 
     def fn(rows, vmax=vmax):
         return np.mod(rows + vmax, 2.0 * vmax) - vmax
@@ -322,14 +320,11 @@ def _round_floor_variants(t: AcceleratorTarget) -> List[FaultInstance]:
     engineered to accumulate across a full application."""
     numerics = str(t.capabilities.get("numerics", ""))
     writer = _instr(t.ila, _DATA_WRITERS)
-    if writer is None or numerics.startswith("int8"):
+    grid = numerics_mod.rounding_grid(numerics)
+    if writer is None or grid is None:
         # integer-interface targets (VTA) carry pre-quantized integer
         # payloads: a rounding-mode fault has nothing to corrupt
         return []
-    if numerics.startswith("fixed"):
-        grid = 2.0 ** -8        # hlscnn's activation fraction grid
-    else:
-        grid = 2.0 ** -5        # one step below AF8 / blockfp mantissa noise
 
     def fn(rows, grid=grid):
         return np.floor(rows / grid) * grid

@@ -361,13 +361,33 @@ class ILA:
         """Reference (eager, per-command) simulation — the analogue of the
         ILAng-generated sequential C++ simulator."""
         st = dict(state) if state is not None else self.init_state()
-        for cmd in commands:
+        for i, cmd in enumerate(commands):
             ins = self._by_opcode.get(cmd.opcode)
             if ins is None:
-                raise KeyError(f"{self.name}: no instruction decodes opcode {cmd.opcode}")
+                raise self._decode_error(i, cmd.opcode, len(commands))
             _, addr, data = cmd.as_arrays(self.vwidth)
             st = ins.update(st, jnp.asarray(addr), jnp.asarray(data))
         return st
+
+    def _decode_error(self, index: int, opcode: int, n: int) -> RuntimeError:
+        """Diagnostic for an undecodable command: names the ILA, the
+        offending command's position and opcode, and the nearest registered
+        opcodes — a stream-generation bug is debuggable instead of a bare
+        KeyError."""
+        nearest = sorted(
+            self.instructions, key=lambda ins: abs(ins.opcode - opcode)
+        )[:4]
+        lines = [
+            f"  candidate: {ins.name!r} = {ins.opcode:#x} "
+            f"(distance {abs(ins.opcode - opcode)})"
+            for ins in nearest
+        ]
+        return RuntimeError(
+            f"{self.name}: no instruction decodes opcode {opcode:#x} "
+            f"(command {index}/{n}).\n"
+            f"  {len(self.instructions)} instructions registered; "
+            "nearest opcodes:\n" + "\n".join(lines)
+        )
 
     def pack_program(self, commands: Sequence[Command]):
         ops = np.array([c.opcode for c in commands], np.int32)

@@ -43,7 +43,7 @@ needs to edit this module.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -234,6 +234,56 @@ def infer_shape(e: Expr, env: Optional[Dict[str, Tuple[int, ...]]] = None) -> Tu
         memo[x] = s
         return s
 
+    return rec(e)
+
+
+def check_expr(
+    e: Expr, env: Optional[Dict[str, Tuple[int, ...]]] = None
+) -> Tuple[int, ...]:
+    """Pre-codegen static checker: validate shapes and dtypes of every
+    sub-expression *before* any planner or simulator touches the program.
+
+    Walks ``e`` in postorder, shape-checking each node (so the error names
+    the innermost inconsistent call, with its operand shapes, instead of
+    whatever downstream planner trips first) and verifying that every
+    accelerator call targets a registered op and consumes float32 operands
+    (the command-stream payload dtype). Returns the program's output shape;
+    raises :class:`ShapeError` with per-node context on violation.
+    """
+    memo: Dict[Expr, Tuple[int, ...]] = {}
+
+    def rec(x: Expr) -> Tuple[int, ...]:
+        if x in memo:
+            return memo[x]
+        s = _infer(x, rec, env)
+        memo[x] = s
+        return s
+
+    for x in postorder(e):
+        if isinstance(x, Var) and x.dtype != "float32":
+            raise ShapeError(
+                f"check: var %{x.name} has dtype {x.dtype!r}; the IR "
+                "carries float32 tensors only"
+            )
+        if not isinstance(x, Call):
+            continue
+        if x.op in ACCEL_OPS and accel_op_target(x.op) is None \
+                and x.op not in ("fasr_store", "fasr_load"):
+            raise ShapeError(
+                f"check: accelerator op {x.op!r} has no registered target"
+            )
+        try:
+            shape = rec(x)
+        except ShapeError as err:
+            arg_shapes = [rec(a) for a in x.args]
+            raise ShapeError(
+                f"check: {x.op}{tuple(arg_shapes)} "
+                f"attrs={dict(x.attrs)}: {err}"
+            ) from err
+        if any(int(d) <= 0 for d in shape):
+            raise ShapeError(
+                f"check: {x.op} infers non-positive dimension in {shape}"
+            )
     return rec(e)
 
 

@@ -22,9 +22,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from . import ir
 from .egraph import (
-    EGraph, ENode, P, PatVar, Rewrite, V, add_op as _add_op, op_head,
+    P, V, Rewrite, add_op as _add_op,
     shape_of as _shape,
 )
 
@@ -187,8 +186,8 @@ def compiler_ir_rewrites() -> List[Rewrite]:
 # statistics). This module only enumerates the registry — adding an
 # accelerator never touches this file.
 
-from .ila import TARGETS
 from .. import accel as _accel  # noqa: F401  (registers the bundled targets)
+from .ila import TARGETS
 
 
 def accelerator_rewrites(

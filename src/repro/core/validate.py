@@ -33,9 +33,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..accel.target import VT2Case  # noqa: F401  (re-export; registers targets)
 from . import ir
 from .ila import TARGETS
-from ..accel.target import VT2Case  # noqa: F401  (re-export; registers targets)
 
 
 def frob_rel_err(ref: np.ndarray, out: np.ndarray) -> float:

@@ -15,7 +15,7 @@ host's stream depends only on its shard index, not on wall-clock history).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -8,15 +8,11 @@ from __future__ import annotations
 
 import os
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from . import af_gemm as _af
-from . import flash_attention as _fl
-from . import int8_gemm as _i8
 from ..accel import numerics
 from ..accel.numerics import AdaptivFloatSpec
+from . import af_gemm as _af, flash_attention as _fl, int8_gemm as _i8
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 

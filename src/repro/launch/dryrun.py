@@ -29,7 +29,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import numpy as np
@@ -37,7 +37,7 @@ import numpy as np
 from ..configs import ARCH_IDS, DASHED, get_config
 from ..models import api
 from ..models.config import SHAPES
-from ..roofline.analysis import collective_bytes_from_hlo, roofline_report
+from ..roofline.analysis import collective_bytes_from_hlo
 from . import steps as st
 from .mesh import make_production_mesh
 

@@ -15,13 +15,13 @@ new parameters fail loudly rather than silently replicating.
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..models.config import ArchConfig, ShapeConfig
+from ..models.config import ArchConfig
 
 
 def _dp(mesh) -> Any:

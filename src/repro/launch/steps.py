@@ -7,18 +7,16 @@ out_shardings, abstract inputs) ready for ``jax.jit(...).lower().compile()``
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..models import api
-from ..models import layers as mlayers
-from ..models.config import ArchConfig, ShapeConfig
 from .. import optim
+from ..models import api, layers as mlayers
+from ..models.config import ArchConfig, ShapeConfig
 from . import sharding as shd
 
 

@@ -15,7 +15,7 @@ import tempfile
 import jax
 
 from ..configs import get_config, get_smoke_config
-from ..data.pipeline import ShardInfo, SyntheticLM
+from ..data.pipeline import SyntheticLM
 from ..models.config import ShapeConfig
 from ..runtime.trainer import Trainer, TrainerConfig
 from .mesh import make_production_mesh, make_smoke_mesh

@@ -5,14 +5,14 @@ dry-run; ``make_batch`` materializes small real batches for smoke tests.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import ArchConfig, ShapeConfig, SHAPES
 from . import lm, whisper
+from .config import ArchConfig, ShapeConfig
 
 AUDIO_ENC_FRAMES = 1500   # whisper 30s @ 50Hz (backbone-level stub length)
 

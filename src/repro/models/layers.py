@@ -13,9 +13,8 @@ gives, expressed portably for GSPMD (the Pallas flash kernel in
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -22,16 +22,13 @@ API (pure functions, pjit-ready):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from . import layers as L, ssm as S
 from .config import ArchConfig
-from . import layers as L
-from . import ssm as S
 
 
 def _split_tree(key, n):

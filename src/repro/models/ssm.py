@@ -16,11 +16,10 @@ makes ``long_500k`` feasible for these families).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .config import ArchConfig
 from .layers import dense_init

@@ -11,14 +11,13 @@ cross-attention K/V from the encoder output.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .config import ArchConfig
 from . import layers as L
+from .config import ArchConfig
 
 
 def _enc_block_params(cfg, key, dtype):

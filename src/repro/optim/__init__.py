@@ -1,10 +1,10 @@
+from .compression import compress_int8, decompress_int8, error_feedback_update
 from .optimizers import (
-    adamw_init,
-    adamw_update,
     adafactor_init,
     adafactor_update,
+    adamw_init,
+    adamw_update,
     clip_by_global_norm,
     cosine_schedule,
     make_optimizer,
 )
-from .compression import compress_int8, decompress_int8, error_feedback_update

@@ -10,8 +10,7 @@ the same PartitionSpecs as the parameters (ZeRO-style).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

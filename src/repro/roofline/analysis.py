@@ -25,9 +25,8 @@ Sources and their caveats (measured, not assumed):
 """
 from __future__ import annotations
 
-import dataclasses
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12       # bf16

@@ -29,10 +29,9 @@ import jax
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
+from ..launch import steps as st
 from ..models import api
 from ..models.config import ArchConfig, ShapeConfig
-from ..launch import steps as st
-from ..launch import sharding as shd
 
 
 class WorkerFailure(RuntimeError):

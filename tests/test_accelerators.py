@@ -1,13 +1,9 @@
 """Accelerator ILA tests: custom numerics, simulators, VT checks."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st  # property tests skip if absent
 
-from repro.accel import flexasr as fa
-from repro.accel import hlscnn as hc
-from repro.accel import numerics
-from repro.accel import vta as vt
+from repro.accel import flexasr as fa, hlscnn as hc, numerics, vta as vt
 from repro.core import ir, validate
 
 rng = np.random.default_rng(0)

@@ -7,13 +7,11 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_smoke_config
-from repro.launch import sharding as shd
-from repro.launch import steps as st
+from repro.launch import sharding as shd, steps as st
 from repro.launch.mesh import make_smoke_mesh
 
 

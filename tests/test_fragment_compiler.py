@@ -10,10 +10,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.accel import flexasr as fa
-from repro.accel import hlscnn as hc
-from repro.accel import vta as vt
-from repro.core.ila import Command, NOP_OPCODE, PackedStream, bucket_length
+from repro.accel import flexasr as fa, hlscnn as hc, vta as vt
+from repro.core.ila import NOP_OPCODE, Command, PackedStream, bucket_length
 
 rng = np.random.default_rng(7)
 

@@ -1,0 +1,391 @@
+"""Static ILA verifier (repro.core.ilalint) — unit + conformance tests.
+
+* Conformance: every registered target lints clean — zero warn/error
+  findings (the verifier's false-positive budget) — with **zero simulated
+  commands** (proven by the ILA trace counters), and the declared fault
+  surfaces appear as notes (FlexASR's statically reachable wrap boundary).
+* Synthetic targets prove each pass fires: overlapping decode claims,
+  read-before-write streams, reachable-wrap numeric ranges — without ever
+  naming a bundled backend's internals.
+* ``analyze_mutation`` classifies host-side stream transforms the way the
+  campaign's static tier requires: opcode rewrites and order-sensitive
+  config corruption are detections, bulk payload corruption is not.
+* ``ir.check_expr`` (the pre-codegen checker) rejects malformed extraction
+  candidates before any planner runs.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.accel  # noqa: F401  (registers the bundled targets)
+from repro.accel.target import AcceleratorTarget
+from repro.core import ilalint, ir
+from repro.core.codegen import Executor
+from repro.core.ila import ILA, TARGETS, Command, PackedStream
+
+
+# ---------------------------------------------------------------------------
+# synthetic target: small ILA exercising every effect class
+# ---------------------------------------------------------------------------
+
+
+def _toy_ila(overlap: bool = False) -> ILA:
+    ila = ILA("toy", vwidth=4)
+    ila.state("buf", lambda: jnp.zeros((8, 4), jnp.float32))
+    ila.state("acc", lambda: jnp.zeros((8, 4), jnp.float32))
+    ila.state("gain", lambda: jnp.zeros((), jnp.float32))
+
+    @ila.instruction("wr_buf", 0x10)
+    def wr_buf(st, addr, data):
+        out = dict(st)
+        out["buf"] = st["buf"].at[addr].set(data)
+        return out
+
+    @ila.instruction("cfg_gain", 0x20)
+    def cfg_gain(st, addr, data):
+        out = dict(st)
+        out["gain"] = data[0]
+        return out
+
+    @ila.instruction("go", 0x30 if not overlap else 0x20)
+    def go(st, addr, data):
+        out = dict(st)
+        out["acc"] = st["acc"] + st["buf"] * st["gain"]
+        return out
+
+    return ila
+
+
+def _toy_target(overlap: bool = False, **lint_kw) -> AcceleratorTarget:
+    t = AcceleratorTarget(
+        "toy", _toy_ila(overlap), capabilities={"numerics": "adaptivfloat8"}
+    )
+    if lint_kw:
+        t.declare_lint(**lint_kw)
+    return t
+
+
+def _stream(*rows) -> PackedStream:
+    """rows = (opcode, addr, payload_scalar) triples, vwidth 4."""
+    ops = np.array([r[0] for r in rows], np.int32)
+    addrs = np.array([r[1] for r in rows], np.int32)
+    data = np.zeros((len(rows), 4), np.float32)
+    for i, r in enumerate(rows):
+        data[i, 0] = r[2]
+    return PackedStream(ops, addrs, data)
+
+
+GOOD = _stream((0x20, 0, 2.0), (0x10, 0, 1.0), (0x30, 0, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# instruction effects from jaxprs
+# ---------------------------------------------------------------------------
+
+
+def test_effects_read_write_sets():
+    by_name = {e.name: e for e in ilalint.effects(_toy_ila())}
+    wr = by_name["wr_buf"]
+    assert wr.buffer_writes == {"buf"} and not wr.scalar_writes
+    assert wr.reads_data and wr.reads_addr and wr.is_bulk_writer
+    cfg = by_name["cfg_gain"]
+    assert cfg.scalar_writes == {"gain"} and cfg.is_config_writer
+    assert cfg.reads_data and not cfg.buffer_writes
+    go = by_name["go"]
+    assert {"buf", "gain", "acc"} <= go.reads
+    assert go.writes == {"acc"} and not go.reads_data
+    nop = by_name["nop"]
+    assert not nop.reads and not nop.writes
+
+
+def test_effects_cached_per_ila():
+    ila = _toy_ila()
+    assert ilalint.effects(ila) is ilalint.effects(ila)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: decode soundness
+# ---------------------------------------------------------------------------
+
+
+def test_decode_pass_flags_overlapping_opcodes():
+    t = _toy_target(overlap=True)
+    errors = [f for f in ilalint.decode_pass(t, [])
+              if f.severity == "error"]
+    assert errors and "shadow" in errors[0].message
+    assert "cfg_gain" in errors[0].message or errors[0].subject == "go"
+
+
+def test_decode_pass_flags_reserved_nop_claim():
+    ila = _toy_ila()
+    ila.instruction("evil", 0x0)(lambda st, addr, data: st)
+    t = AcceleratorTarget("toy", ila)
+    msgs = [f.message for f in ilalint.decode_pass(t, [])
+            if f.severity == "error"]
+    assert any("reserved NOP" in m for m in msgs)
+    assert any("shadow" in m for m in msgs)
+
+
+def test_decode_pass_flags_undecodable_probe_opcode():
+    t = _toy_target()
+    bad = _stream((0x77, 0, 0.0))
+    errors = [f for f in ilalint.decode_pass(t, [("toy_op", bad)])
+              if f.severity == "error"]
+    assert errors and "0x77" in errors[0].message
+
+
+def test_decode_pass_clean_on_good_target():
+    t = _toy_target()
+    fs = ilalint.decode_pass(t, [("toy_op", GOOD)])
+    assert not [f for f in fs if f.severity != "note"]
+
+
+# ---------------------------------------------------------------------------
+# pass 2: dataflow / hazards
+# ---------------------------------------------------------------------------
+
+
+# wr_buf runs, but the gain config is never written before the trigger
+NO_CFG = _stream((0x10, 0, 1.0), (0x30, 0, 0.0))
+
+
+def test_hazard_pass_warns_read_before_write():
+    t = _toy_target()
+    warns = [f for f in ilalint.hazard_pass(t, [("toy_op", NO_CFG)])
+             if f.severity == "warn"]
+    assert [w.subject for w in warns] == ["go/gain"]
+    assert "before any command" in warns[0].message
+
+
+def test_hazard_pass_exemptions_silence_the_warn():
+    t = _toy_target(reset_valid=("gain",))
+    fs = ilalint.hazard_pass(t, [("toy_op", NO_CFG)])
+    assert not [f for f in fs if f.severity == "warn"]
+
+
+def test_hazard_pass_reports_carried_state_as_note():
+    t = _toy_target(carried_state=("gain",))
+    fs = ilalint.hazard_pass(t, [("toy_op", NO_CFG)])
+    assert not [f for f in fs if f.severity == "warn"]
+    notes = [f for f in fs if "carried" in f.message]
+    assert notes and "gain" in notes[0].subject
+
+
+def test_hazard_pass_reports_order_sensitivity():
+    t = _toy_target()
+    fs = ilalint.hazard_pass(t, [("toy_op", GOOD)])
+    notes = [f for f in fs if "cmd_reorder" in f.message]
+    assert notes and "gain" in notes[0].subject
+
+
+# ---------------------------------------------------------------------------
+# pass 3: numeric range analysis
+# ---------------------------------------------------------------------------
+
+
+def test_range_pass_reports_reachable_wrap():
+    t = _toy_target(input_range=(-10.0, 10.0))
+    notes = ilalint.range_pass(t)
+    assert len(notes) == 1 and notes[0].severity == "note"
+    assert "wrap reachable" in notes[0].message
+    assert "4.5" in notes[0].message  # block-scaled saturation point
+
+
+def test_range_pass_silent_inside_saturation():
+    t = _toy_target(input_range=(-2.0, 2.0))
+    assert ilalint.range_pass(t) == []
+
+
+def test_interval_arithmetic():
+    a = ilalint.Interval(-2.0, 3.0)
+    b = ilalint.Interval(-1.0, 4.0)
+    assert (a + b) == ilalint.Interval(-3.0, 7.0)
+    assert (a * b).hi == 12.0 and (a * b).lo == -8.0
+    assert a.accumulate(b, 10).hi == 120.0
+    assert a.clip(1.0) == ilalint.Interval(-1.0, 1.0)
+    assert b.mag == 4.0
+
+
+def test_boundary_inputs_straddle_the_saturation_point():
+    t = TARGETS.get("flexasr")
+    xs = ilalint.boundary_inputs(t, n=64)
+    sat = 4.5
+    assert np.any(np.abs(xs) > sat) and np.any(np.abs(xs) < sat)
+    assert np.any(xs > 0) and np.any(xs < 0)
+    # deterministic per (target, seed)
+    assert np.array_equal(xs, ilalint.boundary_inputs(t, n=64))
+
+
+def test_boundary_inputs_separate_wrap_from_saturate():
+    """The targeted operands do what random draws almost never do: land
+    where a wrapping datapath and a saturating one disagree."""
+    xs = ilalint.boundary_inputs(TARGETS.get("flexasr"), n=64)
+    sat = 4.5
+    wrapped = np.mod(xs + sat, 2 * sat) - sat
+    clipped = np.clip(xs, -sat, sat)
+    assert np.max(np.abs(wrapped - clipped)) > sat  # gross, not subtle
+
+
+# ---------------------------------------------------------------------------
+# conformance: the bundled registry lints clean, with zero simulation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "name", [t.name for t in TARGETS.all()] or ["<none>"]
+)
+def test_registered_target_lints_clean(name):
+    t = TARGETS.get(name)
+    before = (t.ila.n_traces_single, t.ila.n_traces_batch)
+    findings = ilalint.lint_target(t, seed=0, samples=1)
+    after = (t.ila.n_traces_single, t.ila.n_traces_batch)
+    assert after == before, "static lint must not simulate anything"
+    bad = [f for f in findings if f.severity != "note"]
+    assert not bad, "golden target has lint findings:\n" + "\n".join(
+        str(f) for f in bad
+    )
+
+
+def test_flexasr_wrap_boundary_statically_reported():
+    """The sat_wrap escape PR 5 could only observe as an application
+    accuracy collapse is now a static report with the exact boundary."""
+    findings = ilalint.lint_target(TARGETS.get("flexasr"))
+    wraps = [f for f in findings
+             if f.pass_name == "range" and "wrap reachable" in f.message]
+    assert len(wraps) == 1
+    assert "4.5" in wraps[0].message
+
+
+def test_lint_registry_covers_all_targets():
+    per_target = ilalint.lint_registry()
+    assert set(per_target) == set(TARGETS.names())
+
+
+# ---------------------------------------------------------------------------
+# analyze_mutation: the campaign tier-0 classifier
+# ---------------------------------------------------------------------------
+
+
+def _probes():
+    return [("toy_op", GOOD)]
+
+
+def test_mutation_opcode_rewrite_detected():
+    t = _toy_target()
+
+    def hx(ops, addrs, data):
+        ops = np.where(ops == 0x10, 0x20, np.where(ops == 0x20, 0x10, ops))
+        return ops, addrs, data
+
+    detected, score, detail = ilalint.analyze_mutation(t, _probes(), hx)
+    assert detected and score == 1.0
+    assert "opcode stream rewritten" in detail
+
+
+def test_mutation_config_payload_divergence_detected():
+    t = _toy_target()
+
+    def hx(ops, addrs, data):
+        data = np.where((ops == 0x20)[:, None], data + 1.0, data)
+        return ops, addrs, data
+
+    detected, _, detail = ilalint.analyze_mutation(t, _probes(), hx)
+    assert detected
+    assert "order-sensitive" in detail and "gain" in detail
+
+
+def test_mutation_config_divergence_without_downstream_reader_passes():
+    t = _toy_target()
+    no_trigger = _stream((0x20, 0, 2.0), (0x10, 0, 1.0))
+
+    def hx(ops, addrs, data):
+        data = np.where((ops == 0x20)[:, None], data + 1.0, data)
+        return ops, addrs, data
+
+    detected, _, _ = ilalint.analyze_mutation(t, [("toy_op", no_trigger)], hx)
+    assert not detected  # corrupted config is never consumed
+
+
+def test_mutation_bulk_payload_divergence_deferred():
+    t = _toy_target()
+
+    def hx(ops, addrs, data):
+        data = np.where((ops == 0x10)[:, None], data * 2.0, data)
+        return ops, addrs, data
+
+    detected, score, detail = ilalint.analyze_mutation(t, _probes(), hx)
+    assert not detected and score == 0.0
+    assert "deferred to simulation tiers" in detail
+
+
+def test_mutation_identity_transform_passes():
+    t = _toy_target()
+    detected, _, detail = ilalint.analyze_mutation(
+        t, _probes(), lambda o, a, d: (o, a, d)
+    )
+    assert not detected and "identical" in detail
+
+
+# ---------------------------------------------------------------------------
+# satellite: ILA.simulate decode diagnostics
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_undecodable_opcode_diagnostic():
+    ila = _toy_ila()
+    with pytest.raises(RuntimeError) as e:
+        ila.simulate([Command(0x10, 0, (1.0,)), Command(0x99, 0, ())])
+    msg = str(e.value)
+    assert "toy" in msg and "0x99" in msg
+    assert "command 1/2" in msg
+    assert "nearest opcodes" in msg and "'go'" in msg
+
+
+# ---------------------------------------------------------------------------
+# pre-codegen checker (ir.check_expr + Executor hook)
+# ---------------------------------------------------------------------------
+
+
+def test_check_expr_accepts_valid_program():
+    x = ir.Var("x", (4, 8))
+    w = ir.Var("w", (8, 8))
+    e = ir.call("relu", ir.call("dense", x, w))
+    assert ir.check_expr(e) == (4, 8)
+
+
+def test_check_expr_names_the_offending_call():
+    x = ir.Var("x", (4, 8))
+    w = ir.Var("w", (3, 5))  # inner dims disagree
+    e = ir.call("relu", ir.call("dense", x, w))
+    with pytest.raises(ir.ShapeError) as err:
+        ir.check_expr(e)
+    assert "dense" in str(err.value)
+
+
+def test_check_expr_rejects_non_float_vars():
+    e = ir.call("relu", ir.Var("idx", (4,), dtype="int32"))
+    with pytest.raises(ir.ShapeError, match="float32"):
+        ir.check_expr(e)
+
+
+def test_executor_prechecks_before_planning():
+    ex = Executor(engine="eager")
+    x = ir.Var("x", (4, 8))
+    w = ir.Var("w", (3, 5))
+    e = ir.call("dense", x, w)
+    env = {"x": np.zeros((4, 8), np.float32), "w": np.zeros((3, 5), np.float32)}
+    with pytest.raises(ir.ShapeError):
+        ex.run(e, env)
+    with pytest.raises(ir.ShapeError):
+        ex.run_many(e, [env])
+
+
+def test_lint_decl_is_immutable_and_replaceable():
+    t = _toy_target(input_range=(-1.0, 1.0))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        t.lint.input_range = (-9.0, 9.0)
+    t.declare_lint(carried_state=("gain",))
+    assert t.lint.input_range == (-1.0, 1.0)  # replace merges, not resets
+    assert t.lint.carried_state == ("gain",)

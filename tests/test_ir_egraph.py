@@ -2,9 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.core import ir, rules
-from repro.core.egraph import EGraph, extract, run_rewrites
+from repro.core import ir
 from repro.core.compile import SelectionPolicy, compile_program
+from repro.core.egraph import EGraph
 
 rng = np.random.default_rng(0)
 

@@ -1,5 +1,4 @@
 """Pallas kernel tests: shape/dtype sweeps against the ref.py oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -8,7 +8,6 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models import api, lm, ssm
-from repro.models.config import SHAPES
 
 rng = np.random.default_rng(0)
 

@@ -14,8 +14,7 @@ import pytest
 
 from repro.accel import flexasr as fa
 from repro.accel.target import CostModel, GroupTiming
-from repro.core import ila as ila_mod
-from repro.core import ir
+from repro.core import ila as ila_mod, ir
 from repro.core.codegen import Executor
 
 

@@ -1,13 +1,11 @@
 """Substrate tests: data determinism, checkpointing, optimizers, compression,
 fault-tolerant trainer."""
 import os
-import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st  # property tests skip if absent
 
 from repro import optim

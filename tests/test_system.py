@@ -1,8 +1,7 @@
 """End-to-end behaviour tests for the D2A system (paper pipeline)."""
 import numpy as np
-import pytest
 
-from repro.core import apps, cosim, ir
+from repro.core import apps, ir
 from repro.core.codegen import Executor
 from repro.core.compile import compile_program
 

@@ -1,5 +1,4 @@
 """Compilation-results validation tests (VT1 / VT2 / VT3, Table 2/3 analogues)."""
-import numpy as np
 import pytest
 
 from repro.core import ir, validate
