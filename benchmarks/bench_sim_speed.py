@@ -17,6 +17,13 @@ FlexASR LinearLayer fragment:
                the pack-heavy FlexASR LSTM workload, vs the synchronous
                compiled engine; asserts bit-exact parity vs compiled AND
                the eager reference first)
+  fused      — the fast-path tier (docs/simulation.md): the whole fragment
+               batch lowered to one fused bulk-write + compute + readout
+               kernel instead of the per-command dynamic_update_slice
+               chain; tolerance-validated against the compiled oracle
+               before timing, then measured both per-fragment (steady-state
+               + crossover vs the compiled batched tier) and end-to-end
+               (LSTM co-sim eval vs sync; the >= 1.3x acceptance row)
   mesh       — ``run_data_batch`` with its batch axis sharded over a
                ``jax.sharding.Mesh`` of the host's devices (skipped on
                single-device hosts; start with
@@ -78,12 +85,33 @@ def batch_crossover(frag, make_data, sizes=(1, 2, 4, 8, 16, 32), n=8):
     return rows, crossover
 
 
+def fused_crossover(frag, runner, read, sizes=(1, 2, 4, 8, 16, 32), n=8,
+                    make_data=None):
+    """Fused-vs-compiled break-even: per-sample time of the compiled batched
+    tier (vmapped ``frag.run_batch`` + readout) vs the fused runner's single
+    bulk-write + compute + readout kernel, per batch size. Returns
+    (rows, crossover_B or None — the first B where fused wins)."""
+    rows = []
+    crossover = None
+    for B in sizes:
+        datas = [make_data() for _ in range(B)]
+        comp_min, _ = _time(lambda: jax.vmap(read)(frag.run_batch(datas)), n=n)
+        fus_min, _ = _time(lambda: runner.run(datas), n=n)
+        comp_ps, fus_ps = comp_min / B, fus_min / B
+        rows.append((B, comp_ps, fus_ps))
+        if crossover is None and fus_ps < comp_ps:
+            crossover = B
+    return rows, crossover
+
+
 def pipelined_eval_speed(n_eval=64, batch=32, reps=5):
     """End-to-end co-sim eval of the pack-heavy FlexASR LSTM application:
-    pipelined vs synchronous-compiled engine, bit-exactness asserted against
-    compiled AND the eager per-command reference before timing. Returns
-    benchmark rows (speedup, cold-vs-warm, optional mesh-sharded row)."""
-    from repro.core import apps, cosim, ila, ir
+    pipelined and fused engines vs the synchronous-compiled engine.
+    Bit-exactness (pipelined) / declared-tolerance parity (fused) asserted
+    against compiled — and compiled against the eager per-command
+    reference — before timing. Returns benchmark rows (speedups,
+    cold-vs-warm for both engines, optional mesh-sharded row)."""
+    from repro.core import apps, cosim, ila, ir, validate
     from repro.core.codegen import Executor
     from repro.core.compile import compile_program
 
@@ -110,7 +138,15 @@ def pipelined_eval_speed(n_eval=64, batch=32, reps=5):
     for a, b in zip(out_c, out_e):
         assert np.array_equal(np.asarray(a), np.asarray(b)), \
             "compiled engine drifted from the eager reference"
-    print("bit-exact parity (pipelined == compiled == eager): True")
+    out_f = Executor("ila", engine="fused").run_many(res.program, envs)
+    fused_err = max(
+        validate.frob_rel_err(np.asarray(a), np.asarray(b))
+        for a, b in zip(out_c, out_f))
+    assert fused_err <= 1e-4, \
+        f"fused engine drifted from the compiled oracle: {fused_err:.2e}"
+    print("bit-exact parity (pipelined == compiled == eager): True; "
+          f"fused rel err vs compiled: {fused_err:.1e} "
+          f"(lowering={ila.fused_lowering()})")
 
     ex_sync = Executor("ila", engine="compiled")
     ex_pipe = Executor("ila", engine="pipelined")
@@ -128,19 +164,33 @@ def pipelined_eval_speed(n_eval=64, batch=32, reps=5):
             ts.append(time.perf_counter() - t0)
         return min(ts), statistics.median(ts)
 
+    ex_fused = Executor("ila", engine="fused")
+    t0 = time.perf_counter()
+    cosim.eval_classification(res.program, params, X, y, ex_fused,
+                              n_eval=n_eval, batch_size=batch)
+    fused_cold = time.perf_counter() - t0
+
     timed(ex_sync)  # warm the sync engine's traces before interleaving
     sync_min, sync_med = timed(ex_sync)
     pipe_min, pipe_med = timed(ex_pipe)
+    fused_min, fused_med = timed(ex_fused)
     speedup = sync_min / pipe_min
+    fused_speedup = sync_min / fused_min
     stages = ex_pipe.pipeline_summary()
+    lowering = ila.fused_lowering()
     per_pt = lambda s: s / n_eval * 1e3
     print(f"compiled (sync):    {per_pt(sync_min):7.2f} ms/point min / "
           f"{per_pt(sync_med):.2f} median")
     print(f"pipelined:          {per_pt(pipe_min):7.2f} ms/point min / "
           f"{per_pt(pipe_med):.2f} median   ({speedup:.2f}x vs sync; "
           f"target >= 1.3x)")
+    print(f"fused ({lowering}):       {per_pt(fused_min):7.2f} ms/point min / "
+          f"{per_pt(fused_med):.2f} median   ({fused_speedup:.2f}x vs sync; "
+          f"target >= 1.3x)")
     print(f"pipelined cold:     {per_pt(cold):7.2f} ms/point (first eval, "
           f"engine traces)")
+    print(f"fused cold:         {per_pt(fused_cold):7.2f} ms/point (first "
+          f"eval: runner resolution + traces)")
     print(f"pipeline stages: pack {stages['pack_s']:.2f}s / dispatch "
           f"{stages['dispatch_s']:.2f}s / readback {stages['readback_s']:.2f}s")
     rows = [
@@ -149,6 +199,11 @@ def pipelined_eval_speed(n_eval=64, batch=32, reps=5):
          f"speedup={speedup:.2f}x vs sync"),
         ("cosim_eval_pipelined_cold", cold / n_eval * 1e6,
          "first pipelined eval (cold engine traces)"),
+        ("cosim_eval_fused", fused_min / n_eval * 1e6,
+         f"speedup={fused_speedup:.2f}x vs sync (target >= 1.3x), "
+         f"lowering={lowering}, rel err vs compiled {fused_err:.1e}"),
+        ("cosim_eval_fused_cold", fused_cold / n_eval * 1e6,
+         "first fused eval (runner resolution + engine traces)"),
     ]
 
     # mesh-sharded batch tier: only meaningful with >1 host device
@@ -264,6 +319,34 @@ def run():
              if crossover is not None else
              "batching never wins on this backend (dispatch already amortized)"))
 
+    # fused fast-path tier vs the compiled batched tier, same fragment: one
+    # bulk-write + compute + readout kernel vs the vmapped per-command
+    # dynamic_update_slice chain + unrolled tail + separate readout
+    from repro.core import ila as core_ila
+    print("\n-- fused vs compiled batched (FlexASR linear data streams) --")
+    runner = fa.TARGET.fused_runner(frag)
+    assert runner is not None, "flexasr declared no fused runner"
+    ref8 = np.asarray(jax.vmap(fa.read_full)(frag.run_batch(datas)))
+    got8 = np.asarray(runner.run(datas))[: len(datas)]
+    assert np.array_equal(ref8, got8), \
+        "fused linear runner drifted from the compiled batched tier"
+    print(f"{'B':>4s} {'compiled us/sample':>19s} {'fused us/sample':>16s} "
+          f"{'winner':>8s}")
+    f_rows, f_cross = fused_crossover(
+        frag, runner, fa.read_full,
+        make_data=lambda: fa.pack_linear_data(
+            frag, rng.standard_normal((64, 128)).astype(np.float32)))
+    for B, comp_ps, fus_ps in f_rows:
+        winner = "fused" if fus_ps < comp_ps else "compiled"
+        print(f"{B:4d} {comp_ps*1e6:19.1f} {fus_ps*1e6:16.1f} {winner:>8s}")
+    comp_ps8 = next(c for B, c, f in f_rows if B == 8)
+    fus_ps8 = next(f for B, c, f in f_rows if B == 8)
+    lowering = core_ila.fused_lowering()
+    print(f"fused steady (8/call, {lowering}): {fus_ps8*1e6:.1f} us/sample "
+          f"({comp_ps8 / fus_ps8:.2f}x vs compiled batched); crossover: "
+          + (f"fused wins from B={f_cross}" if f_cross is not None
+             else "fused never wins <= 32 on this backend"))
+
     rows = [
         ("sim_batch_crossover", float(crossover or 0),
          f"batch wins from B={crossover}" if crossover else "no crossover <= 32"),
@@ -272,6 +355,12 @@ def run():
         ("sim_batched_per_sample", per_sample_min * 1e6, "batch of 8"),
         ("sim_speed_jit", jit_min * 1e6, f"n_cmds={len(cmds)}"),
         ("sim_speed_eager", eager * 1e6, f"n_cmds={len(cmds)}"),
+        ("sim_steady_fused", fus_ps8 * 1e6,
+         f"{comp_ps8 / fus_ps8:.2f}x vs compiled batched (8/call), "
+         f"lowering={lowering}"),
+        ("sim_fused_crossover", float(f_cross or 0),
+         f"fused wins from B={f_cross}" if f_cross is not None
+         else "fused never wins <= 32"),
     ]
     rows += pipelined_eval_speed()
     return rows

@@ -51,8 +51,9 @@ import numpy as np
 from ..core import ir
 from ..core.egraph import P, V as PV, Rewrite, shape_of
 from ..core.ila import (
-    ILA, BulkWrite, Command, CompiledFragment, DataStream,
-    PackedStream, fingerprint,
+    ILA, BulkWrite, Command, CompiledFragment, DataStream, FusedRunner,
+    PackedStream, _shard_batched, fingerprint, fused_lowering,
+    fused_pad_streams,
 )
 from . import numerics
 from .numerics import AdaptivFloatSpec
@@ -547,7 +548,11 @@ def lstm_fragment(wi, wh, b, cache: bool = True) -> CompiledFragment:
                 (GB_CFG_MMNGR, (BASE_IN, BASE_OUT, 0, 0)),
             ],
         )
-        return CompiledFragment(flexasr, key, setup, meta={"bw": bw, "bo": bo, "I": I, "H": H})
+        return CompiledFragment(
+            flexasr, key, setup,
+            meta={"bw": bw, "bo": bo, "I": I, "H": H,
+                  "wi_p": wi_p, "wh_p": wh_p, "b_p": b_p},
+        )
 
     return FRAGMENTS.get(key, build) if cache else build()
 
@@ -1218,6 +1223,157 @@ def _mapping_cases(rng):
 
 
 # --------------------------------------------------------------------------
+# Fused fast-path runners (engine="fused")
+#
+# The compiled tier replays every data stream against the architectural
+# state: bulk dynamic_update_slice + scanned config tail + FN_START + gb
+# readout, per sample. For the two hot shapes (LinearLayer, LSTM) all of
+# that machinery computes a pure function of (activations, exponent
+# windows) with weights frozen at fragment-build time — so a FusedRunner
+# stacks the whole batch into dense arrays host-side and runs one fused
+# batched kernel. The compiled tier stays the oracle: the XLA lowering
+# replicates _fn_linear / _fn_lstm arithmetic step for step (bit-exact for
+# linear; the LSTM hoists the input projection out of the scan, which
+# reassociates fp32 sums, so it is tolerance-parity), and the Pallas
+# lowering routes the linear shape through kernels/af_gemm.py. The LSTM
+# recurrence has no output re-quantization at the gates, so its hoisted
+# projection stays a plain matmul under either lowering (XLA/MXU fuse it
+# natively) and the runner is always tagged "xla".
+# --------------------------------------------------------------------------
+
+
+def _fused_stack(datas: List[DataStream]):
+    """Prepare half (pure numpy, pack-worker safe): stack linear/LSTM data
+    streams into dense batch arrays — the (B, MAX_TS, MAX_IN) activation
+    block exactly as the bulk writes land it in gb_large, plus per-sample
+    ``num_ts`` and the CFG_NUMERICS act/out exponent windows from the tail."""
+    datas = fused_pad_streams(datas)
+    B = len(datas)
+    xs = np.zeros((B, MAX_TS, MAX_IN), np.float32)
+    num_ts = np.zeros((B,), np.float32)
+    ba = np.zeros((B,), np.float32)
+    bo = np.zeros((B,), np.float32)
+    for i, d in enumerate(datas):
+        (blk,) = d.bulk
+        assert blk.buf == "gb_large" and blk.base == BASE_IN
+        assert int(d.tail.ops[1]) == CFG_NUMERICS
+        rows = np.asarray(blk.rows, np.float32)
+        xs[i].reshape(MAX_TS * (MAX_IN // V), V)[: rows.shape[0]] = rows
+        num_ts[i] = d.tail.data[0, 1]
+        ba[i] = d.tail.data[1, 1]
+        bo[i] = d.tail.data[1, 2]
+    return xs, num_ts, ba, bo
+
+
+def _fused_dispatch(per_sample):
+    """Dispatch half: vmap the per-sample kernel over the batch axis, with
+    the batch sharded across the stream mesh (same axis run_data_batch
+    shards)."""
+    vf = jax.jit(jax.vmap(per_sample))
+
+    def dispatch(prepared):
+        xs, num_ts, ba, bo = (_shard_batched(a) for a in prepared)
+        return vf(xs, num_ts, ba, bo)
+
+    return dispatch
+
+
+def _fused_linear(frag: CompiledFragment) -> FusedRunner:
+    meta, act = frag.meta, int(frag.key[3])
+    I, O, bw = meta["I"], meta["O"], meta["bw"]
+    # pe_w / pe_b exactly as the setup stream leaves them (zero padding)
+    wp = np.zeros((MAX_OUT, MAX_IN), np.float32)
+    wp[:O, :I] = meta["w"]
+    bp = np.zeros((MAX_OUT,), np.float32)
+    bp[:O] = meta["b"]
+    m_in = (np.arange(MAX_IN) < I).astype(np.float32)
+    m_out = (np.arange(MAX_OUT) < O).astype(np.float32)
+    lowering = fused_lowering()
+
+    if lowering == "pallas" and act == ACT_NONE:
+        from ..kernels import ops as kops
+        from ..kernels.af_gemm import af_gemm
+
+        wp_j, bp_j, m_out_j = jnp.asarray(wp), jnp.asarray(bp), jnp.asarray(m_out)
+
+        def one(x, n_ts, ba, bo):
+            # activation rows/cols beyond (T, I) are zero, and AFq(0) == 0,
+            # so the input masks are implicit; Y's bias rows past T are
+            # cleared by the post-mask, exactly as _fn_linear's m_ts does
+            y = af_gemm(x, wp_j, bp_j, ba, bw, bo, spec=AF,
+                        interpret=kops.INTERPRET)
+            m_ts = _mask1(n_ts, MAX_TS)
+            return (y * m_ts[:, None] * m_out_j[None, :])[:, :MAX_IN]
+    else:
+        lowering = "xla"
+        m_in_j, m_out_j = jnp.asarray(m_in), jnp.asarray(m_out)
+        Wq = _afq(jnp.asarray(wp), bw) * m_out_j[:, None] * m_in_j[None, :]
+        bvec = jnp.asarray(bp * m_out)
+        act_fn = [
+            lambda v: v,
+            lambda v: jnp.maximum(v, 0.0),
+            lambda v: 1.0 / (1.0 + jnp.exp(-v)),
+            lambda v: jnp.tanh(v),
+        ][act]
+
+        def one(x, n_ts, ba, bo):
+            m_ts = _mask1(n_ts, MAX_TS)
+            Xq = _afq(x, ba) * m_ts[:, None] * m_in_j[None, :]
+            Y = act_fn(Xq @ Wq.T + bvec[None, :])
+            Y = _afq(Y, bo) * m_ts[:, None] * m_out_j[None, :]
+            return Y[:, :MAX_IN]
+
+    return FusedRunner(f"flexasr-linear-{lowering}", _fused_stack,
+                       _fused_dispatch(one), read=read_full, lowering=lowering)
+
+
+def _fused_lstm(frag: CompiledFragment) -> FusedRunner:
+    meta = frag.meta
+    I, H, bw = meta["I"], meta["H"], meta["bw"]
+    wip = np.zeros((MAX_OUT, MAX_IN), np.float32)
+    wip[:, :I] = meta["wi_p"]
+    whp = np.zeros((MAX_OUT, MAX_H), np.float32)
+    whp[:, :H] = meta["wh_p"]
+    bvec = jnp.asarray(meta["b_p"])
+    m_in = jnp.asarray((np.arange(MAX_IN) < I).astype(np.float32))
+    m_h = jnp.asarray((np.arange(MAX_H) < H).astype(np.float32))
+    Wi = _afq(jnp.asarray(wip), bw) * m_in[None, :]
+    Wh = _afq(jnp.asarray(whp), bw) * m_h[None, :]
+
+    def one(x, n_ts, ba, bo):
+        Xq = _afq(x, ba) * m_in[None, :]
+        Gx = Xq @ Wi.T  # (MAX_TS, 4H) input projection hoisted off the scan
+
+        def cell(carry, gx_t):
+            h, c = carry
+            gates = gx_t + Wh @ h + bvec
+            i = jax.nn.sigmoid(gates[0 * MAX_H : 1 * MAX_H])
+            f = jax.nn.sigmoid(gates[1 * MAX_H : 2 * MAX_H])
+            g = jnp.tanh(gates[2 * MAX_H : 3 * MAX_H])
+            o = jax.nn.sigmoid(gates[3 * MAX_H : 4 * MAX_H])
+            c2 = _afq(f * c + i * g, bo) * m_h
+            h2 = _afq(o * jnp.tanh(c2), bo) * m_h
+            return (h2, c2), h2
+
+        zero = jnp.zeros((MAX_H,), jnp.float32)
+        _, hs = jax.lax.scan(cell, (zero, zero), Gx)
+        hs = hs * _mask1(n_ts, MAX_TS)[:, None]
+        return jnp.zeros((MAX_TS, MAX_IN), jnp.float32).at[:, :MAX_H].set(hs)
+
+    return FusedRunner("flexasr-lstm-xla", _fused_stack, _fused_dispatch(one),
+                       read=read_full, lowering="xla")
+
+
+def _fused_factory(frag: CompiledFragment):
+    """``declare_fused`` hook: runners for the hot data-stream shapes."""
+    if frag.key[0] == "fasr_linear":
+        return _fused_linear(frag)
+    if frag.key[0] == "fasr_lstm":
+        return _fused_lstm(frag)
+    return None
+
+
+# --------------------------------------------------------------------------
 # Registration: everything the core needs, through the public API
 # --------------------------------------------------------------------------
 
@@ -1244,6 +1400,7 @@ TARGET.add_intrinsic(Intrinsic(
     "fasr_store", passthrough=True, doc="HBM -> accelerator transfer marker"))
 TARGET.add_intrinsic(Intrinsic(
     "fasr_load", passthrough=True, doc="accelerator -> HBM transfer marker"))
+TARGET.declare_fused(_fused_factory)
 TARGET.add_rewrites(_rewrites)
 TARGET.add_cost_model(COSTS)
 TARGET.add_vt2_cases(_vt2)

@@ -35,7 +35,15 @@ import numpy as np
 
 from ..core import ir
 from ..core.egraph import Rewrite
-from ..core.ila import ILA, TARGETS, CompiledFragment, DataStream, FragmentCache
+from ..core.ila import (
+    ILA,
+    TARGETS,
+    CompiledFragment,
+    DataStream,
+    FragmentCache,
+    FusedRunner,
+    fused_lowering,
+)
 
 
 @dataclasses.dataclass
@@ -390,6 +398,10 @@ class AcceleratorTarget:
         self._mapping_fns: List[Callable] = []
         #: static-analysis declarations consumed by ``core.ilalint``
         self.lint = LintDecl()
+        #: fused fast-path factories (``declare_fused``) + per-fragment
+        #: resolution memo, keyed by (frag.key, active lowering)
+        self._fused_fns: List[Callable[[CompiledFragment], Optional[FusedRunner]]] = []
+        self._fused_cache: Dict[Tuple, Optional[FusedRunner]] = {}
 
     # -- declaration ------------------------------------------------------
     def declare_lint(self, **kw) -> "LintDecl":
@@ -428,6 +440,41 @@ class AcceleratorTarget:
         """fn(rng) -> [(operation_label, case_fn)] where case_fn() returns
         (reference, simulated) for one random input (Table 2)."""
         self._mapping_fns.append(fn)
+
+    def declare_fused(
+        self, factory: Callable[[CompiledFragment], Optional[FusedRunner]]
+    ) -> None:
+        """Register a fused fast-path factory: ``factory(frag)`` returns a
+        :class:`~repro.core.ila.FusedRunner` for fragment families it can
+        lower (consulting :func:`~repro.core.ila.fused_lowering` for the
+        Pallas-vs-XLA leg) or ``None`` to decline. The Executor's
+        ``engine="fused"`` consults :meth:`fused_runner` per fragment and
+        falls back to the compiled tier for undeclared signatures, so a
+        target never *needs* to declare one — fusion is a pure
+        acceleration, validated against the compiled oracle."""
+        self._fused_fns.append(factory)
+
+    def fused_runner(self, frag: CompiledFragment) -> Optional[FusedRunner]:
+        """Resolve (and memoize) the fused runner for one compiled
+        fragment. The memo key includes the active lowering so flipping
+        ``REPRO_FUSED_FALLBACK``/``REPRO_FUSED_PALLAS`` re-resolves.
+
+        Runners are built from the fragment's *golden* build-time meta, not
+        from the ILA's instruction semantics — a fragment bound to a mutated
+        ILA clone (campaign fault injection) shares the golden key but must
+        not take the fast path, or the fault would be masked."""
+        if frag.ila is not self.ila:
+            return None
+        key = (frag.key, fused_lowering())
+        if key in self._fused_cache:
+            return self._fused_cache[key]
+        runner = None
+        for fn in self._fused_fns:
+            runner = fn(frag)
+            if runner is not None:
+                break
+        self._fused_cache[key] = runner
+        return runner
 
     # -- what the core layers consume -------------------------------------
     def rewrites(self) -> List[Rewrite]:
@@ -472,7 +519,13 @@ class AcceleratorTarget:
     def cache_info(self) -> Dict[str, Any]:
         """Warm-cache health for the serving path: fragment-cache hit/miss
         plus the ILA's jit trace / compiled-runner counters."""
-        return {"fragments": self.fragments.info(), **self.ila.jit_cache_info()}
+        return {
+            "fragments": self.fragments.info(),
+            "fused_runners": sum(
+                1 for v in self._fused_cache.values() if v is not None
+            ),
+            **self.ila.jit_cache_info(),
+        }
 
 
 def register_target(target: AcceleratorTarget) -> AcceleratorTarget:

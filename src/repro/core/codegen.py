@@ -45,6 +45,18 @@ are the compiled engine's, so results stay bit-exact and deterministic
 (materialization and stat recording follow submission order). Set
 ``REPRO_ENGINE=pipelined`` to make it the process default.
 
+``engine="fused"`` keeps the pipelined engine's scheduling (pack worker,
+async dispatch, assemble barriers) but, per signature group, consults the
+owning target for a :class:`~repro.core.ila.FusedRunner` — a registered
+fast path that lowers bulk-write + per-sample compute + read-out into one
+fused computation on the stream payloads, skipping architectural-state
+materialization (see ``docs/simulation.md``). Groups without a declared
+runner execute on the compiled path unchanged, so the engine is safe for
+every target; the compiled tier remains the bit-exactness oracle the fused
+tier is conformance-checked against. ``REPRO_ENGINE=fused`` flips the
+process default; ``REPRO_FUSED_FALLBACK=1`` forces runners' XLA-fused
+fallback lowering even where Pallas is available.
+
 Multi-device scheduling
 -----------------------
 
@@ -84,7 +96,7 @@ from ..accel.target import (  # importing registers bundled targets
 from . import ir
 from .ila import TARGETS, CompiledFragment, FragmentCache
 
-ENGINES = ("compiled", "pipelined", "jit", "eager")
+ENGINES = ("compiled", "pipelined", "fused", "jit", "eager")
 
 #: process-wide pack worker for the pipelined engine. One thread by design:
 #: numpy packing releases the GIL and overlaps XLA compute, but multiple
@@ -139,6 +151,10 @@ class _NullDeviceType:
 
     index = 0
 
+    @staticmethod
+    def is_cold(frag) -> bool:
+        return False
+
 
 _NullDevice = _NullDeviceType()
 
@@ -167,10 +183,21 @@ class SimDevice:
         """This device's instance of ``frag`` (device-local setup state)."""
         if self.index == 0:
             return frag
+        # keyed by ILA identity as well as fragment key: fragment keys hash
+        # op/shapes/params only, so two ILAs with divergent semantics (the
+        # fault campaign's golden target vs its mutants, run through one
+        # long-lived Executor) can build same-key fragments. The cached
+        # clone pins frag.ila alive, so the id cannot be recycled while the
+        # entry is resident.
         return self.fragments.get(
-            frag.key,
+            (frag.key, id(frag.ila)),
             lambda: CompiledFragment(frag.ila, frag.key, frag.setup, dict(frag.meta)),
         )
+
+    def is_cold(self, frag: CompiledFragment) -> bool:
+        """True when resolving ``frag`` here would re-simulate its setup
+        stream (device-local weight load not yet cached)."""
+        return self.index > 0 and (frag.key, id(frag.ila)) not in self.fragments
 
     def account(self, n_jobs: int, cycles: float) -> None:
         self.n_groups += 1
@@ -347,10 +374,10 @@ class Executor:
                 ]
                 if (
                     self.mode == "ila"
-                    and self.engine in ("compiled", "pipelined")
+                    and self.engine in ("compiled", "pipelined", "fused")
                     and TARGETS.has_planner(x.op)
                 ):
-                    if self.engine == "pipelined":
+                    if self.engine in ("pipelined", "fused"):
                         v = self._node_pipelined(x, sample_args)
                     else:
                         plans, jobs = [], []
@@ -442,12 +469,27 @@ class Executor:
         — the stage the group actually occupies the pipeline for — instead
         of their serial sum."""
         n = sum(len(jobs[i].data) for i in idxs)
-        if device.index > 0 and frag.key not in device.fragments:
+        if device.is_cold(frag):
             n += len(frag.setup)
         model = target.cost_model if target is not None else None
         if model is None:
             return float(n)
-        return model.job_cycles(n, pipelined=self.engine == "pipelined")
+        return model.job_cycles(n, pipelined=self.engine in ("pipelined", "fused"))
+
+    def _fused_for(self, frag, read, target):
+        """The fused fast-path runner for one job group, or None when the
+        compiled tier should execute it: only under ``engine="fused"``, only
+        for fragments whose owning target resolves a
+        :class:`~repro.core.ila.FusedRunner` for the signature, and only
+        when the runner fuses the group's read function (runners bake the
+        read-out into the kernel; a planner using a different read falls
+        back to the oracle path)."""
+        if self.engine != "fused" or target is None:
+            return None
+        runner = target.fused_runner(frag)
+        if runner is None or (runner.read is not None and runner.read is not read):
+            return None
+        return runner
 
     @staticmethod
     def _group_jobs(jobs: List[SimJob]) -> Dict[Tuple, List[int]]:
@@ -504,35 +546,63 @@ class Executor:
                     frag = jobs[idxs[0]].frag
                     key = (id(frag), jobs[idxs[0]].data.sig())
                     if key not in preps:
-                        preps[key] = _pack_pool().submit(
-                            frag.prepare_batch, [jobs[i].data for i in idxs]
-                        )
+                        runner = self._fused_for(frag, jobs[idxs[0]].read, _t)
+                        datas = [jobs[i].data for i in idxs]
+                        if runner is not None:
+                            preps[key] = _pack_pool().submit(
+                                lambda r=runner, ds=datas: ("fused", r.prepare(ds))
+                            )
+                        else:
+                            preps[key] = _pack_pool().submit(
+                                frag.prepare_batch, datas
+                            )
         t_disp = time.perf_counter()
         for _rank, idxs, target in order:
             frag = jobs[idxs[0]].frag
             read = jobs[idxs[0]].read
+            # fused resolution happens on the *shared* fragment, before any
+            # device-local clone: runners compute from fragment meta, so a
+            # fused group never pays a per-device setup re-simulation
+            runner = self._fused_for(frag, read, target)
             n_cmds = sum(len(jobs[i].data) for i in idxs)
             if target is not None:
                 device = self.devices.pick(target)
                 # book against the chosen device, including its cold-setup
                 # cost (the ranking pass above is placement-blind)
-                if device.index > 0 and frag.key not in device.fragments:
+                if runner is None and device.is_cold(frag):
                     n_cmds += len(frag.setup)
                 device.account(
                     len(idxs),
-                    self._group_cycles(frag, idxs, jobs, target, device),
+                    self._group_cycles(
+                        frag, idxs, jobs, target,
+                        _NullDevice if runner is not None else device,
+                    ),
                 )
-                frag = device.resolve(frag)
+                if runner is None:
+                    frag = device.resolve(frag)
             stack_dt = 0.0
             if len(idxs) == 1:
                 t0 = time.perf_counter()
                 j = jobs[idxs[0]]
-                out = read(frag.run(j.data))
-                group = _GroupResult(out)
-                handles[idxs[0]] = (
-                    lambda g=group, w=j.window: g.materialize()[w]
-                )
+                if runner is not None:
+                    group = _GroupResult(runner.run([j.data]))
+                    handles[idxs[0]] = (
+                        lambda g=group, w=j.window: g.materialize()[0][w]
+                    )
+                else:
+                    out = read(frag.run(j.data))
+                    group = _GroupResult(out)
+                    handles[idxs[0]] = (
+                        lambda g=group, w=j.window: g.materialize()[w]
+                    )
             else:
+                datas = [jobs[i].data for i in idxs]
+
+                def _prep():
+                    if runner is not None:
+                        return ("fused", runner.prepare(datas))
+                    return frag.prepare_batch(datas)
+
                 prep = preps.get((id(jobs[idxs[0]].frag), jobs[idxs[0]].data.sig()))
                 if prep is not None:
                     prepared = prep.result() if hasattr(prep, "result") else prep
@@ -541,17 +611,24 @@ class Executor:
                     # split matches what the pipelined engine's pack stage
                     # actually covers (planner packing + group stacking)
                     t0 = time.perf_counter()
-                    prepared = frag.prepare_batch([jobs[i].data for i in idxs])
+                    prepared = _prep()
                     stack_dt = time.perf_counter() - t0
                 else:
-                    prepared = frag.prepare_batch([jobs[i].data for i in idxs])
+                    prepared = _prep()
+                # a staged prep can disagree with the resolved path when the
+                # fused env flags flip between pack and dispatch — re-prep
+                if (prepared[0] == "fused") != (runner is not None):
+                    prepared = _prep()
                 t0 = time.perf_counter()
-                sts = frag.run_prepared(prepared)
-                entry = self._batched_reads.get(id(read))
-                if entry is None:
-                    entry = (read, jax.jit(jax.vmap(read)))
-                    self._batched_reads[id(read)] = entry
-                fulls = entry[1](sts)
+                if runner is not None:
+                    fulls = runner.dispatch(prepared[1])
+                else:
+                    sts = frag.run_prepared(prepared)
+                    entry = self._batched_reads.get(id(read))
+                    if entry is None:
+                        entry = (read, jax.jit(jax.vmap(read)))
+                        self._batched_reads[id(read)] = entry
+                    fulls = entry[1](sts)
                 group = _GroupResult(fulls)
                 for bi, i in enumerate(idxs):
                     handles[i] = (
@@ -616,11 +693,20 @@ class Executor:
             t0 = time.perf_counter()
             planned = [self._plan(x, sample_args[s]) for s in span]
             jobs = [j for js, _ in planned for j in js]
-            preps = {
-                key: jobs[idxs[0]].frag.prepare_batch([jobs[i].data for i in idxs])
-                for key, idxs in self._group_jobs(jobs).items()
-                if len(idxs) > 1
-            }
+            preps = {}
+            for key, idxs in self._group_jobs(jobs).items():
+                if len(idxs) <= 1:
+                    continue
+                frag0 = jobs[idxs[0]].frag
+                runner = self._fused_for(
+                    frag0, jobs[idxs[0]].read, self.devices.owner(frag0)
+                )
+                datas = [jobs[i].data for i in idxs]
+                preps[key] = (
+                    ("fused", runner.prepare(datas))
+                    if runner is not None
+                    else frag0.prepare_batch(datas)
+                )
             dt = time.perf_counter() - t0
             self.stage_seconds["pack_s"] += dt
             if self.collect_stats:
@@ -729,7 +815,11 @@ class Executor:
         return dict(
             self.stage_seconds,
             groups=float(len(self.group_timings)),
-            overlap_s=min(packed, busy) if self.engine == "pipelined" else 0.0,
+            overlap_s=(
+                min(packed, busy)
+                if self.engine in ("pipelined", "fused")
+                else 0.0
+            ),
         )
 
     def cache_info(self, targets: Optional[Sequence[str]] = None) -> Dict[str, Dict]:

@@ -159,12 +159,13 @@ class CosimResult:
 
 
 def _pipeline_batch(executor: Executor, batch_size: int) -> int:
-    """Feed ``run_many`` through the pipelined engine with at least two
-    pack/sim chunks per minibatch — a single-chunk minibatch has nothing to
-    overlap, so the pack worker would idle. No-op for synchronous engines
+    """Feed ``run_many`` through the pipelined/fused engines with at least
+    two pack/sim chunks per minibatch — a single-chunk minibatch has nothing
+    to overlap, so the pack worker would idle (the fused engine shares the
+    pipelined prepare/dispatch split). No-op for synchronous engines
     (identical numerics either way: batch composition never changes
     per-sample results)."""
-    if getattr(executor, "engine", None) == "pipelined":
+    if getattr(executor, "engine", None) in ("pipelined", "fused"):
         return max(batch_size, 2 * executor.pipeline_chunk)
     return batch_size
 

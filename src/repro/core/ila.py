@@ -66,6 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import threading
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -800,6 +801,73 @@ class FragmentCache:
 
     def info(self) -> Dict[str, int]:
         return {"size": len(self._entries), "hits": self.hits, "misses": self.misses}
+
+
+# --------------------------------------------------------------------------
+# Fused fast-path tier
+# --------------------------------------------------------------------------
+
+
+def fused_lowering() -> str:
+    """Which lowering a fused runner should build: ``"pallas"`` when a
+    native accelerator backend is available (or ``REPRO_FUSED_PALLAS=1``
+    forces the Pallas leg, interpret mode included), ``"xla"`` otherwise.
+    ``REPRO_FUSED_FALLBACK=1`` forces the XLA-fused fallback everywhere —
+    the conformance suite uses it so the fallback leg is exercised even on
+    hosts where Pallas lowers natively."""
+    if os.environ.get("REPRO_FUSED_FALLBACK", "") == "1":
+        return "xla"
+    if os.environ.get("REPRO_FUSED_PALLAS", "") == "1":
+        return "pallas"
+    return "pallas" if jax.default_backend() != "cpu" else "xla"
+
+
+def fused_pad_streams(datas: Sequence["DataStream"]) -> List["DataStream"]:
+    """Pad a fused batch exactly like :meth:`ILA._host_data_batch` pads the
+    compiled tier's: bucket to a power of two (times the stream-mesh size)
+    by replaying the last stream. Keeping the two tiers' padding identical
+    bounds retraces the same way and keeps ``[b]`` handle indexing aligned."""
+    B = len(datas)
+    Bp = mesh_pad(bucket_length(B, min_len=1))
+    return list(datas) + [datas[-1]] * (Bp - B)
+
+
+@dataclasses.dataclass
+class FusedRunner:
+    """A target-registered fast path for one compiled-fragment family.
+
+    The compiled tier simulates a ``DataStream`` through architectural
+    state: ``dynamic_update_slice`` bulk writes into the state buffers, an
+    unrolled config tail, the FN_START update, then a read-out slice. A
+    ``FusedRunner`` lowers that whole round trip — bulk write + per-sample
+    compute + read-out — into one fused computation on the stream payloads
+    themselves, skipping state materialization entirely.
+
+    Contract: ``dispatch(prepare(datas))`` must return the stacked
+    full-region read of the fragment's output — element ``b`` equal (within
+    the owning intrinsic's declared tolerance; bit-exact where the numerics
+    round-trip exactly) to ``read(frag.run(datas[b]))`` for the planner's
+    read function, for every ``b < len(datas)``. Entries past ``len(datas)``
+    (bucket padding) are unconstrained. The compiled tier stays the
+    bit-exactness oracle — conformance diffs the two on every intrinsic.
+
+    ``prepare`` is the host half (pure numpy — safe on the pipelined
+    engine's pack worker thread); ``dispatch`` is the device half and
+    should return asynchronously (un-materialized jax arrays), sharding
+    batch-leading payloads with :func:`_shard_batched` so ``set_stream_mesh``
+    composes. ``read`` optionally pins the planner read function the runner
+    fuses; the Executor falls back to the compiled tier when a job's read
+    differs.
+    """
+
+    name: str
+    prepare: Callable[[Sequence["DataStream"]], Any]
+    dispatch: Callable[[Any], jnp.ndarray]
+    read: Optional[Callable] = None
+    lowering: str = "xla"
+
+    def run(self, datas: Sequence["DataStream"]) -> jnp.ndarray:
+        return self.dispatch(self.prepare(datas))
 
 
 # --------------------------------------------------------------------------

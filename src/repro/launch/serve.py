@@ -26,8 +26,12 @@ every target's wall-clock CostModel (``Executor.calibrate_from_timings``);
 measured requests then run on ``--engine`` (default ``pipelined``, or
 ``REPRO_ENGINE``) — the async serving path, with host packing overlapping
 device simulation and, under ``--mesh auto``, the vmapped batch axis
-sharded over the host's devices. All engines are bit-exact, so the switch
-never changes results. After the request loop the per-device utilization,
+sharded over the host's devices. ``--engine fused`` serves through the
+fused fast-path runners (docs/simulation.md), reporting fused cold vs
+steady ms/sample alongside the compiled warmup numbers. The
+compiled/jit/eager/pipelined engines are bit-exact, so the switch never
+changes results; the fused tier is tolerance-validated against compiled
+in conformance. After the request loop the per-device utilization,
 pipeline-stage and cache-health tables are printed.
 """
 from __future__ import annotations
@@ -111,11 +115,14 @@ def serve_cosim(args) -> None:
               f"pack {fit.get('pack_us_per_command', 0):.1f} us/cmd "
               f"({fit.get('n_groups', 0):.0f} groups)")
     ex.engine = engine
+    engine_cold = None
     if engine != "compiled":
         # one excluded request on the measured engine: its batch chunking
-        # traces its own vmap shapes, which must not pollute steady state
-        dt = request(warmup)
-        print(f"warmup {warmup}: engine={engine} {dt:.3f}s [engine traces]")
+        # traces its own vmap shapes (and, for engine=fused, resolves +
+        # traces the per-fragment fused runners), which must not pollute
+        # steady state — but it IS the engine's cold number, reported below
+        engine_cold = request(warmup)
+        print(f"warmup {warmup}: engine={engine} {engine_cold:.3f}s [engine traces]")
     ex.reset_stats()   # measured section starts clean (incl. device rows)
 
     warm_dts = [request(warmup + r) for r in range(args.requests)]
@@ -128,6 +135,11 @@ def serve_cosim(args) -> None:
     print(f"\ncold vs steady state: {cold_ms:.1f} ms/sample (first request, "
           f"compiled) vs {warm_ms:.1f} ms/sample (mean of {len(warm_dts)} "
           f"measured, {engine}) -> {cold_ms / warm_ms:.1f}x")
+    if engine_cold is not None:
+        ec_ms = engine_cold / args.batch * 1e3
+        print(f"{engine} cold vs steady: {ec_ms:.1f} ms/sample (first "
+              f"{engine} request, engine traces) vs {warm_ms:.1f} ms/sample "
+              f"-> {ec_ms / warm_ms:.1f}x")
 
     print("\nper-target summary (devices: jobs / est cycles / utilization):")
     for tname, row in sorted(ex.stats_summary().items()):
@@ -139,7 +151,7 @@ def serve_cosim(args) -> None:
             print(f"    {dname}: jobs={d['jobs']} groups={d['groups']} "
                   f"est_cycles={d['est_cycles']:.0f} "
                   f"utilization={d['utilization']:.2f}")
-    if engine == "pipelined":
+    if engine in ("pipelined", "fused"):
         stages = ex.pipeline_summary()
         print("pipeline stages (measured requests): "
               f"pack {stages['pack_s']:.3f}s / dispatch {stages['dispatch_s']:.3f}s "
@@ -198,7 +210,7 @@ def main():
     ap.add_argument("--devices-per-target", type=int, default=1,
                     help="simulated device instances per accelerator target")
     ap.add_argument("--engine", default=None,
-                    choices=["compiled", "pipelined", "jit", "eager"],
+                    choices=["compiled", "pipelined", "fused", "jit", "eager"],
                     help="co-sim engine for measured requests (default: "
                          "REPRO_ENGINE or pipelined); warmup always runs "
                          "compiled to calibrate the cost models")

@@ -30,11 +30,20 @@ draws random operands within the target's declared capability limits):
   batch tier matches unsharded execution (skipped on single-device hosts —
   CI forces 4 virtual devices with XLA_FLAGS).
 
+* fused engine: ``engine="fused"`` matches the compiled oracle within each
+  intrinsic's declared tolerance for every target and device count —
+  targets registering fused runners (``declare_fused``) take the fast
+  path, everything else falls back to per-group compiled execution — and
+  the forced XLA-fallback lowering (``REPRO_FUSED_FALLBACK=1``) is
+  exercised explicitly so the ``jnp`` leg stays covered even on hosts
+  where Pallas lowers natively.
+
 Set ``REPRO_DEVICES_PER_TARGET=2`` (as CI does in a dedicated step) to run
 the *whole* suite through the multi-device scheduler path, and/or
-``REPRO_ENGINE=pipelined`` (every Executor constructed without an explicit
-engine — including the ones inside cosim/serving helpers — picks it up) to
-run it through the async pipeline.
+``REPRO_ENGINE=pipelined`` / ``REPRO_ENGINE=fused`` (every Executor
+constructed without an explicit engine — including the ones inside
+cosim/serving helpers — picks it up) to run it through the async pipeline
+or the fused fast path.
 
 A new backend that registers through ``repro.accel.target`` is covered here
 automatically — this file never names a target.
@@ -110,6 +119,44 @@ def test_engines_bit_exact(t, intr):
     ref2 = np.asarray(_executor(t, intr).run(expr, env2))
     outs_m2 = _executor(t, intr).run_many(expr, [env, env2])
     np.testing.assert_array_equal(ref2, np.asarray(outs_m2[1]))
+
+
+@pytest.mark.parametrize("mode", ("auto", "fallback"))
+@pytest.mark.parametrize("ndev", (1, 2), ids=("1dev", "2dev"))
+@pytest.mark.parametrize("t,intr", _intrinsic_params())
+def test_fused_parity_within_declared_tol(t, intr, ndev, mode, monkeypatch):
+    """engine="fused" tracks the compiled oracle within the intrinsic's
+    declared tolerance (bit-exact where the fused numerics round-trip the
+    compiled arithmetic — asserted per-target in test_fused.py), through
+    run and run_many, across device counts. ``mode=fallback`` forces the
+    XLA-fused lowering (``REPRO_FUSED_FALLBACK=1``) so the ``jnp`` leg is
+    covered even on hosts where Pallas lowers natively; targets without a
+    registered fused runner execute per-group compiled and must stay
+    bit-exact either way."""
+    if intr.planner is None:
+        pytest.skip("pass-through intrinsic: nothing to fuse")
+    if mode == "fallback":
+        monkeypatch.setenv("REPRO_FUSED_FALLBACK", "1")
+    expr, env = _case(t, intr, 2)
+    _, env2 = _case(t, intr, 3)
+    ref = np.asarray(_executor(t, intr, engine="compiled").run(expr, env))
+    got = np.asarray(
+        _executor(t, intr, engine="fused", devices_per_target=ndev).run(expr, env)
+    )
+    assert got.shape == ref.shape
+    err = validate.frob_rel_err(ref, got)
+    assert err <= intr.tol, (
+        f"{t.name}:{intr.op} fused-vs-compiled rel err {err} > tol {intr.tol}"
+    )
+    # batched parity through run_many (the vmapped/fused-dispatch path)
+    refs = _executor(t, intr, engine="compiled").run_many(expr, [env, env2, env])
+    outs = _executor(t, intr, engine="fused",
+                     devices_per_target=ndev).run_many(expr, [env, env2, env])
+    for r, o in zip(refs, outs):
+        e = validate.frob_rel_err(np.asarray(r), np.asarray(o))
+        assert e <= intr.tol, (
+            f"{t.name}:{intr.op} fused run_many rel err {e} > tol {intr.tol}"
+        )
 
 
 def _vt2_params():
@@ -416,9 +463,10 @@ def test_mesh_sharded_batch_parity(t, intr):
     try:
         outs = _executor(t, intr, engine="compiled").run_many(expr, envs)
         outs_p = _executor(t, intr, engine="pipelined").run_many(expr, envs)
+        outs_f = _executor(t, intr, engine="fused").run_many(expr, envs)
     finally:
         ila_mod.set_stream_mesh(None)
-    for r, o, p in zip(ref, outs, outs_p):
+    for r, o, p, f in zip(ref, outs, outs_p, outs_f):
         np.testing.assert_array_equal(
             np.asarray(r), np.asarray(o),
             err_msg=f"{t.name}:{intr.op} mesh-sharded batch != unsharded",
@@ -426,4 +474,8 @@ def test_mesh_sharded_batch_parity(t, intr):
         np.testing.assert_array_equal(
             np.asarray(r), np.asarray(p),
             err_msg=f"{t.name}:{intr.op} mesh+pipelined != unsharded",
+        )
+        err = validate.frob_rel_err(np.asarray(r), np.asarray(f))
+        assert err <= intr.tol, (
+            f"{t.name}:{intr.op} mesh+fused rel err {err} > tol {intr.tol}"
         )
