@@ -1,0 +1,242 @@
+"""Continuous-batching serving benchmark (repro.core.serving).
+
+Measures the two scheduling wins the serving layer claims, under a
+latency-SLO-style load generator (Poisson arrivals, mixed applications,
+mixed request batch sizes 1..4, bounded outstanding requests):
+
+* **Cross-request coalescing** — the same Poisson workload driven through
+  a serial server (coalesce off, overlap off: one request per dispatch,
+  pipeline drained between requests — the pre-serving behavior) vs the
+  coalescing server (queued same-app requests merged into shared vmapped
+  dispatches). Reported: sustained QPS ratio at p50/p95/p99 request
+  latency. Acceptance: >= 1.5x QPS at equal-or-better p95. The measured
+  runs double as a bit-exactness check: both servers receive the identical
+  submit sequence, so matching request ids must produce byte-identical
+  outputs.
+
+* **Request overlap** — back-to-back requests on the pack-heavy
+  FlexASR LSTM application (coalescing off on both sides to isolate the
+  effect): draining scheduler (every request materializes at its assemble
+  barrier before the next is dequeued) vs the overlapped scheduler
+  (submit_many defers the readback tail; prepack_many stages the next
+  request's host packing into the barrier gap). Acceptance: >= 1.2x on
+  multi-core hosts; a single-core host timeshares the pack worker, XLA
+  and the dispatch thread on one CPU, so the ratio is reported but not
+  judged there (docs/serving.md, "When coalescing wins").
+
+Both comparisons share one Executor per pair (identical warm caches on
+both sides) and run the full workload once unmeasured first, so neither
+side pays first-trace costs inside the timed region. Run as __main__ the
+rows merge into BENCH_cosim.json (benchmarks/_bench_io).
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--fast]
+
+Env knobs: REPRO_SERVING_N (mixed-load requests, default 24),
+REPRO_SERVING_LSTM_N (overlap-bench requests, default 8).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import apps as app_registry
+from repro.core.codegen import Executor
+from repro.core.compile import compile_program
+from repro.core.serving import CosimServer, percentiles_ms
+
+
+def _compiled_apps(names):
+    out = {}
+    for name in names:
+        builder, _dsl = {k.lower(): v for k, v in
+                         app_registry.APPLICATIONS.items()}[name]
+        expr, params = builder()
+        out[name] = (compile_program(expr).program, params)
+    return out
+
+
+def _drive(server, workload, gaps, concurrency=12):
+    """Submit (app, batch) requests with the given inter-arrival gaps,
+    keeping at most ``concurrency`` outstanding; returns (handles, wall_s)
+    with wall measured from first submit to last completion."""
+    handles = []
+    t0 = time.perf_counter()
+    for (app, batch), gap in zip(workload, gaps):
+        outstanding = [h for h in handles if not h.done()]
+        while len(outstanding) >= concurrency:
+            outstanding[0].wait()
+            outstanding = [h for h in outstanding if not h.done()]
+        handles.append(server.submit(app, batch=batch))
+        if gap:
+            time.sleep(gap)
+    for h in handles:
+        h.wait()
+    return handles, time.perf_counter() - t0
+
+
+def _serve_pass(executor, progs, workload, gaps, *, warmup, **server_kw):
+    """One server configuration over the workload: an unmeasured warm pass
+    filling every trace/bucket the measured pass can touch, then the
+    measured Poisson pass. Returns (handles, wall_s, summary)."""
+    from repro.core import ila
+
+    srv = CosimServer(executor=executor, queue_depth=4 * len(workload) + 8,
+                      **server_kw)
+    for name, (prog, params) in progs.items():
+        srv.add_program(name, prog, params)
+    srv.start(warmup=warmup, warm_batch=4)
+    # the coalescer's merged batch size is load-dependent: pre-trace every
+    # batch bucket it can produce so no measured dispatch pays a retrace
+    sizes = sorted({ila.batch_bucket(n) for n in range(1, srv.max_batch + 1)})
+    for name, (prog, _params) in progs.items():
+        for n in sizes:
+            executor.run_many(prog, srv.request_envs(name, 1_000_000 + n, n))
+    _drive(srv, workload, [0.0] * len(workload), concurrency=len(workload))
+    handles, wall = _drive(srv, workload, gaps, concurrency=len(workload))
+    summ = srv.summary()
+    srv.close(drain=True)
+    assert all(h.status == "done" for h in handles), (
+        "measured request rejected/failed: " +
+        str([(h.id, h.status, h.reject_reason) for h in handles
+             if h.status != "done"]))
+    return handles, wall, summ
+
+
+def _samples(workload):
+    return sum(b for _a, b in workload)
+
+
+def bench_coalescing(n_requests=24, seed=0):
+    """Serial vs coalescing server on a mixed-app, mixed-batch Poisson
+    workload; returns (rows, serial_handles, coalesced_handles)."""
+    progs = _compiled_apps(["resmlp"])
+    rng = np.random.default_rng(seed)
+    names = list(progs)
+    workload = [(names[i % len(names)], 1 + i % 4) for i in range(n_requests)]
+
+    # one chunk per dispatch: the vmapped simulator call has a large fixed
+    # cost, so chopping a merged batch into small chunks forfeits exactly
+    # the amortization coalescing exists to buy
+    max_batch = 24
+    ex = Executor("ila", engine="pipelined", pipeline_chunk=max_batch)
+    # serial first: its throughput calibrates the offered Poisson rate
+    # (3x serial capacity: clearly saturating, so coalescing has queued
+    # same-app requests to merge, yet arrivals stay stochastic)
+    sh, s_wall, _ = _serve_pass(
+        ex, progs, workload, [0.0] * n_requests, warmup=1,
+        coalesce=False, overlap=False, seed=seed)
+    rate = 3.0 * len(workload) / s_wall
+    gaps = list(rng.exponential(1.0 / rate, size=n_requests))
+    sh, s_wall, _ = _serve_pass(
+        ex, progs, workload, gaps, warmup=0,
+        coalesce=False, overlap=False, seed=seed)
+    # overlap off on BOTH sides: this row isolates coalescing (the overlap
+    # row below isolates overlap the same way), and on a single-core host
+    # the overlap threads would only add contention to the coalesced side
+    ch, c_wall, c_summ = _serve_pass(
+        ex, progs, workload, gaps, warmup=0,
+        coalesce=True, overlap=False, max_batch=max_batch, seed=seed)
+
+    # identical submit sequences => identical request ids => the seeded
+    # per-request operands match, so outputs must be bit-identical
+    for a, b in zip(sh, ch):
+        assert a.id == b.id and a.app == b.app
+        for x, y in zip(a.outputs, b.outputs):
+            np.testing.assert_array_equal(
+                x, y, err_msg=f"request {a.id}: coalesced != serial")
+
+    s_qps, c_qps = len(sh) / s_wall, len(ch) / c_wall
+    s_pct = percentiles_ms([h.latency_s for h in sh])
+    c_pct = percentiles_ms([h.latency_s for h in ch])
+    speed = c_qps / s_qps
+    print(f"serial:    {s_qps:6.2f} req/s ({_samples(workload)/s_wall:6.1f} "
+          f"samples/s)  p50 {s_pct['p50_ms']:7.1f}  p95 {s_pct['p95_ms']:7.1f} ms")
+    print(f"coalesced: {c_qps:6.2f} req/s ({_samples(workload)/c_wall:6.1f} "
+          f"samples/s)  p50 {c_pct['p50_ms']:7.1f}  p95 {c_pct['p95_ms']:7.1f} ms"
+          f"  (mean {c_summ['mean_batch']:.1f} req/dispatch, "
+          f"max {c_summ['coalesced_max']})")
+    print(f"coalescing speedup: {speed:.2f}x QPS "
+          f"(acceptance >= 1.5x at equal p95: "
+          f"{'PASS' if speed >= 1.5 and c_pct['p95_ms'] <= s_pct['p95_ms'] else 'MISS'})")
+    rows = [
+        ("serving_serial_qps", 1e6 / s_qps,
+         f"{s_qps:.2f} req/s p95 {s_pct['p95_ms']:.0f}ms (coalesce off, "
+         f"overlap off; {n_requests} reqs batch 1-4 poisson)"),
+        ("serving_coalesced_qps", 1e6 / c_qps,
+         f"{c_qps:.2f} req/s p95 {c_pct['p95_ms']:.0f}ms = {speed:.2f}x serial "
+         f"(mean {c_summ['mean_batch']:.1f} req/dispatch, bit-exact vs serial)"),
+    ]
+    return rows
+
+
+def bench_overlap(n_requests=8, batch=16, seed=0):
+    """Draining vs overlapped scheduler on the pack-heavy LSTM app,
+    coalescing off on both sides (isolates the submit/prepack overlap).
+    LSTM co-sim is host-dominated — per-sample stream packing and
+    readback, with only a sliver of vmapped simulation — so the draining
+    scheduler's request boundaries are almost pure stall: the readback
+    tail + host epilogue of request k and the packing ramp of request
+    k+1 serialize. batch 16 / chunk 4 keeps several spans per request in
+    flight for the deferral to reorder around."""
+    progs = _compiled_apps(["lstm-wlm"])
+    workload = [("lstm-wlm", batch)] * n_requests
+    gaps = [0.0] * n_requests  # back-to-back: the barrier gap is the story
+
+    ex = Executor("ila", engine="pipelined", pipeline_chunk=4)
+    dh, d_wall, _ = _serve_pass(
+        ex, progs, workload, gaps, warmup=1,
+        coalesce=False, overlap=False, seed=seed)
+    oh, o_wall, _ = _serve_pass(
+        ex, progs, workload, gaps, warmup=0,
+        coalesce=False, overlap=True, seed=seed)
+    for a, b in zip(dh, oh):
+        for x, y in zip(a.outputs, b.outputs):
+            np.testing.assert_array_equal(
+                x, y, err_msg=f"request {a.id}: overlapped != drained")
+
+    d_sps = _samples(workload) / d_wall
+    o_sps = _samples(workload) / o_wall
+    speed = o_sps / d_sps
+    cores = os.cpu_count() or 1
+    print(f"drain:   {d_sps:6.2f} samples/s  ({d_wall:.2f}s, lstm-wlm x{batch})")
+    print(f"overlap: {o_sps:6.2f} samples/s  ({o_wall:.2f}s)")
+    if cores >= 2:
+        verdict = "PASS" if speed >= 1.2 else "MISS"
+    else:
+        # overlap moves pack/readback work onto concurrent threads; on a
+        # single-core host every thread shares one CPU, so scheduling
+        # overlap cannot beat draining (same gating as bench_campaign's
+        # multi-worker row) — report the ratio, don't judge it
+        verdict = "unmeasurable on a 1-core host"
+    print(f"overlap speedup: {speed:.2f}x (acceptance >= 1.2x: {verdict})")
+    return [
+        ("serving_overlap_lstm", 1e6 * o_wall / _samples(workload),
+         f"{speed:.2f}x vs draining scheduler ({o_sps:.1f} vs {d_sps:.1f} "
+         f"samples/s, lstm-wlm batch {batch}, coalesce off, bit-exact, "
+         f"{cores}-core host)"),
+    ]
+
+
+def run():
+    fast = "--fast" in sys.argv
+    n_mix = int(os.environ.get("REPRO_SERVING_N", "12" if fast else "24"))
+    n_lstm = int(os.environ.get("REPRO_SERVING_LSTM_N", "4" if fast else "8"))
+    print("== serving: cross-request coalescing (mixed Poisson load) ==")
+    rows = bench_coalescing(n_requests=n_mix)
+    print("\n== serving: request overlap (pack-heavy LSTM) ==")
+    rows += bench_overlap(n_requests=n_lstm)
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    try:
+        from benchmarks._bench_io import write_bench_json
+    except ImportError:  # invoked as a script: benchmarks/ itself is on sys.path
+        from _bench_io import write_bench_json
+
+    path = write_bench_json(rows)
+    print(f"\nwrote {len(rows)} rows to {path}")

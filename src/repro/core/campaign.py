@@ -279,8 +279,8 @@ def _nonidentity(reports):
 #: a resumed or re-sharded campaign must produce the identical matrix.
 _FINGERPRINT_KEYS = (
     "targets", "faults", "apps", "engine", "devices_per_target", "ladder",
-    "n_eval", "train_steps", "op_samples", "vt2_n", "acc_delta", "ppl_ratio",
-    "seed", "stat_floor", "stat_calib_seeds",
+    "n_eval", "train_steps", "op_samples", "op_boundary", "vt2_n",
+    "acc_delta", "ppl_ratio", "seed", "stat_floor", "stat_calib_seeds",
 )
 
 
@@ -647,9 +647,19 @@ def _tier_frag_sim(target, cases, engine: str, devices: int, seed: int,
 
 
 def _golden_op_outputs(target, n_samples: int, seed: int,
-                       engine: str, devices: int) -> Dict[str, List]:
+                       engine: str, devices: int,
+                       boundary: int = 0) -> Dict[str, List]:
     """Reference outputs of every sampled intrinsic on the *golden* target,
-    cached per campaign so every mutant diffs against the same baselines."""
+    cached per campaign so every mutant diffs against the same baselines.
+
+    ``boundary`` > 0 appends that many *range-directed* samples per op:
+    the intrinsic's own operand draw, with its activation operand
+    (``args[0]``) overwritten by :func:`ilalint.boundary_inputs` values
+    straddling the target's statically computed saturation point. Uniform
+    draws almost never land within the wrap window, which is exactly how
+    ``sat_wrap``-class faults escape the op tier; aimed draws make the
+    same one-op diff catch them. The default (0) keeps the historical
+    uniform-only pool — and the escape matrix — unchanged."""
     out: Dict[str, List] = {}
     ex = _executor(engine, devices)
     for op, intr in target.intrinsics.items():
@@ -660,8 +670,14 @@ def _golden_op_outputs(target, n_samples: int, seed: int,
         rng = np.random.default_rng(
             zlib.crc32(f"{target.name}:{op}:{seed}".encode())
         )
-        for _ in range(n_samples):
+        for k in range(n_samples + boundary):
             args, attrs = intr.sample(rng)
+            if k >= n_samples:
+                x0 = np.asarray(args[0])
+                bv = ilalint.boundary_inputs(
+                    target, n=x0.size, seed=seed * 8191 + k
+                )
+                args = [bv.reshape(x0.shape)] + list(args[1:])
             vs = tuple(ir.Var(f"_{i}", a.shape) for i, a in enumerate(args))
             expr = ir.call(op, *vs, **attrs)
             env = {f"_{i}": a for i, a in enumerate(args)}
@@ -787,6 +803,7 @@ def _resolve_config(
     n_eval: int = 32,
     train_steps: int = 120,
     op_samples: int = 2,
+    op_boundary: int = 0,
     vt2_n: int = 4,
     acc_delta: float = 0.02,
     ppl_ratio: float = 1.02,
@@ -802,7 +819,8 @@ def _resolve_config(
         apps=list(apps), engine=engine,
         devices_per_target=devices_per_target, ladder=ladder,
         n_eval=n_eval, train_steps=train_steps, op_samples=op_samples,
-        vt2_n=vt2_n, acc_delta=acc_delta, ppl_ratio=ppl_ratio, seed=seed,
+        op_boundary=op_boundary, vt2_n=vt2_n, acc_delta=acc_delta,
+        ppl_ratio=ppl_ratio, seed=seed,
         stat_floor=stat_floor, stat_calib_seeds=stat_calib_seeds,
     )
 
@@ -895,7 +913,8 @@ def _prepare(config: Dict[str, Any], say) -> _Ctx:
             f"offloads={app.offloads}")
     golden_ops = {
         t.name: _golden_op_outputs(t, config["op_samples"], seed, engine,
-                                   devices)
+                                   devices,
+                                   boundary=config.get("op_boundary", 0))
         for t in selected
     }
     vt2_cases = {t.name: t.vt2_cases(8, 32) for t in selected}
@@ -981,6 +1000,7 @@ def run_campaign(
     n_eval: int = 32,
     train_steps: int = 120,
     op_samples: int = 2,
+    op_boundary: int = 0,
     vt2_n: int = 4,
     acc_delta: float = 0.02,
     ppl_ratio: float = 1.02,
@@ -1008,7 +1028,8 @@ def run_campaign(
     config = _resolve_config(
         targets=targets, faults=faults, apps=apps, engine=engine,
         devices_per_target=devices_per_target, ladder=ladder, n_eval=n_eval,
-        train_steps=train_steps, op_samples=op_samples, vt2_n=vt2_n,
+        train_steps=train_steps, op_samples=op_samples,
+        op_boundary=op_boundary, vt2_n=vt2_n,
         acc_delta=acc_delta, ppl_ratio=ppl_ratio, seed=seed,
         stat_floor=stat_floor, stat_calib_seeds=stat_calib_seeds,
     )

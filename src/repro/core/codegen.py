@@ -145,6 +145,82 @@ class _GroupResult:
         return self._np
 
 
+class _Deferred:
+    """A run_many value whose host materialization is postponed: the
+    simulation work behind it is already dispatched (async), but the
+    readback barrier / host evaluation runs only at :meth:`force` — the
+    mechanism behind :meth:`Executor.submit_many`'s deferred request
+    tails. Idempotent: the thunk runs once and the result is cached."""
+
+    __slots__ = ("_thunk", "_v")
+
+    def __init__(self, thunk: Callable[[], List[Any]]):
+        self._thunk = thunk
+        self._v = None
+
+    def force(self) -> List[Any]:
+        if self._thunk is not None:
+            self._v = self._thunk()
+            self._thunk = None
+        return self._v
+
+
+def _forced(v):
+    return v.force() if isinstance(v, _Deferred) else v
+
+
+class Submission:
+    """One in-flight :meth:`Executor.run_many` request.
+
+    Returned by :meth:`Executor.submit_many`: every accelerator invocation
+    has been planned and *dispatched* (simulation runs asynchronously on
+    the devices), but the terminal readback barrier and any host epilogue
+    ops downstream of the last accelerator call are deferred until
+    :meth:`result`. A serving scheduler can therefore start packing the
+    next request on the pack worker while this request's simulation tail
+    is still in flight — instead of draining the pipeline at every
+    request's assemble barrier. Results are bit-identical to
+    :meth:`Executor.run_many` (deferral reorders *when* host code runs,
+    never what it computes)."""
+
+    __slots__ = ("_thunk", "_outs", "_done")
+
+    def __init__(self, thunk: Optional[Callable[[], List[Any]]] = None,
+                 outs: Optional[List[Any]] = None):
+        self._thunk = thunk
+        self._outs = outs
+        self._done = thunk is None
+
+    @property
+    def done(self) -> bool:
+        """True once :meth:`result` has materialized the outputs (or the
+        submission was created already-complete, e.g. on a sync engine)."""
+        return self._done
+
+    def result(self) -> List[Any]:
+        """Materialize and return the per-environment outputs (the readback
+        barrier + deferred host epilogue). Idempotent."""
+        if not self._done:
+            self._outs = self._thunk()
+            self._thunk = None
+            self._done = True
+        return self._outs
+
+
+class Prepack:
+    """Host packings staged ahead of a future submit_many/run_many over the
+    same ``(program, envs)`` pair — see :meth:`Executor.prepack_many`."""
+
+    __slots__ = ("program", "envs", "spans")
+
+    def __init__(self, program: ir.Expr, envs: Sequence[Dict[str, Any]]):
+        self.program = program
+        self.envs = envs
+        #: leading accel node -> list of pack-pool futures, one per
+        #: pipeline_chunk span, each resolving to (planned, jobs, preps)
+        self.spans: Dict[ir.Expr, List[Any]] = {}
+
+
 class _NullDeviceType:
     """Placement stand-in for fragments of unregistered ILAs (no device
     pool): index 0 means "setup already cached", so no cold-load term."""
@@ -322,6 +398,8 @@ class Executor:
         )
         #: programs already shape/dtype-checked (once per distinct Expr)
         self._checked: set = set()
+        #: per-program deferral analysis for submit_many (Expr -> node set)
+        self._defer_sets: Dict[ir.Expr, set] = {}
 
     # ------------------------------------------------------------------
     def _precheck(self, e: ir.Expr, env: Dict[str, Any]) -> None:
@@ -406,6 +484,161 @@ class Executor:
             return v
 
         return rec(e)
+
+    # -- request-level submit/prepack API (continuous-batching serving) --
+    def _defer_split(self, e: ir.Expr) -> set:
+        """Nodes whose materialization :meth:`submit_many` defers: every
+        node that (a) does not feed any accelerator call's operands and
+        (b) has an accelerator call somewhere in its subtree. Those are
+        exactly the nodes nothing further on the device depends on — the
+        request's *tail*: terminal accelerator calls (readback barrier)
+        and the host epilogue above them. Nodes feeding an accelerator
+        operand are never deferred, so the dispatch order of simulation
+        work is unchanged. Cached per distinct program."""
+        cached = self._defer_sets.get(e)
+        if cached is not None:
+            return cached
+        nodes = list(ir.postorder(e))
+        feeds: set = set()
+        for x in nodes:
+            if isinstance(x, ir.Call) and x.op in ir.ACCEL_OPS:
+                for a in x.args:
+                    feeds.update(ir.postorder(a))
+        has_accel: Dict[ir.Expr, bool] = {}
+        for x in nodes:  # postorder: children resolved first
+            has_accel[x] = isinstance(x, ir.Call) and (
+                x.op in ir.ACCEL_OPS
+                or any(has_accel.get(a, False) for a in x.args)
+            )
+        deferred = {x for x in nodes if x not in feeds and has_accel[x]}
+        self._defer_sets[e] = deferred
+        return deferred
+
+    def submit_many(
+        self,
+        e: ir.Expr,
+        envs: Sequence[Dict[str, Any]],
+        prepack: Optional[Prepack] = None,
+    ) -> Submission:
+        """Asynchronous :meth:`run_many`: plan and *dispatch* every
+        accelerator invocation, but defer the terminal readback barrier and
+        the host epilogue downstream of the last accelerator call to
+        ``Submission.result()``. Between ``submit_many(k)`` returning and
+        ``result(k)`` being called, the pack worker is free — a serving
+        scheduler uses the gap to pre-pack request ``k+1``
+        (:meth:`prepack_many`) while request ``k``'s simulation tail
+        completes, instead of draining the pipeline per request.
+
+        ``prepack`` hands in host packings staged earlier for the *same*
+        program and environment list (anything else is ignored). On
+        synchronous engines (or non-ILA modes) this degrades to an
+        already-complete submission wrapping :meth:`run_many`: correct
+        everywhere, overlapped only where the engine pipelines."""
+        if self.mode != "ila" or self.engine not in ("pipelined", "fused") \
+                or not envs:
+            return Submission(outs=self.run_many(e, envs))
+        self._precheck(e, envs[0])
+        if prepack is not None and (
+            prepack.program is not e or prepack.envs is not envs
+        ):
+            prepack = None
+        deferred = self._defer_split(e)
+        B = len(envs)
+        memo: Dict[ir.Expr, Any] = {}
+
+        def rec(x: ir.Expr):
+            if x in memo:
+                return memo[x]
+            if isinstance(x, ir.Call) and x.op in ir.ACCEL_OPS:
+                # operand subtrees feed an accelerator call, so they are
+                # never deferred: args_b holds plain per-sample lists
+                args_b = [rec(a) for a in x.args]
+                sample_args = [
+                    [np.asarray(args_b[k][s]) for k in range(len(args_b))]
+                    for s in range(B)
+                ]
+                if TARGETS.has_planner(x.op):
+                    v = self._node_pipelined(
+                        x, sample_args, defer=x in deferred,
+                        prepacked=(
+                            prepack.spans.get(x) if prepack is not None
+                            else None
+                        ),
+                    )
+                else:
+                    v = [self._exec_accel(x, sample_args[s]) for s in range(B)]
+            elif x in deferred:
+                # host epilogue above the last accelerator call: record the
+                # children now (dispatching any accel work below), evaluate
+                # lazily at result() time
+                for a in x.args:
+                    rec(a)
+                v = _Deferred(lambda x=x: [
+                    ir._eval(x, (lambda a, s=s: _forced(memo[a])[s]), envs[s])
+                    for s in range(B)
+                ])
+            else:
+                v = [
+                    ir._eval(x, (lambda a, s=s: rec(a)[s]), envs[s])
+                    for s in range(B)
+                ]
+            memo[x] = v
+            return v
+
+        root = rec(e)
+        if isinstance(root, _Deferred):
+            return Submission(thunk=root.force)
+        return Submission(outs=root)
+
+    def prepack_many(
+        self, e: ir.Expr, envs: Sequence[Dict[str, Any]]
+    ) -> Prepack:
+        """Stage the *leading* accelerator nodes' host packing (planner
+        calls + batch stacking, pure numpy) on the pack worker, ahead of a
+        later :meth:`submit_many`/:meth:`run_many` over the exact same
+        ``(e, envs)``. Leading nodes are accelerator calls whose operand
+        subtrees contain no other accelerator call — their operands are
+        computable from the environments alone, so their packing needs
+        nothing from the current request. The serving scheduler calls this
+        for request ``k+1`` while request ``k``'s simulation tail is in
+        flight: the single pack worker fills the readback gap instead of
+        idling. Numerics are unchanged (same planners, same span grouping
+        as :meth:`_node_pipelined`); on synchronous engines this is a
+        no-op."""
+        pre = Prepack(e, envs)
+        if self.mode != "ila" or self.engine not in ("pipelined", "fused") \
+                or not envs:
+            return pre
+        self._precheck(e, envs[0])
+        B = len(envs)
+        for x in ir.postorder(e):
+            if not (isinstance(x, ir.Call) and x.op in ir.ACCEL_OPS
+                    and TARGETS.has_planner(x.op)):
+                continue
+            if any(
+                isinstance(n, ir.Call) and n.op in ir.ACCEL_OPS
+                for a in x.args for n in ir.postorder(a)
+            ):
+                continue  # not leading: operands depend on accel results
+            sample_args = []
+            for s in range(B):
+                ememo: Dict[ir.Expr, Any] = {}
+
+                def ev(a, s=s, ememo=ememo):
+                    if a in ememo:
+                        return ememo[a]
+                    v = ir._eval(a, ev, envs[s])
+                    ememo[a] = v
+                    return v
+
+                sample_args.append([np.asarray(ev(a)) for a in x.args])
+            spans = [
+                range(i, min(i + self.pipeline_chunk, B))
+                for i in range(0, B, self.pipeline_chunk)
+            ]
+            plan_span = self._make_plan_span(x, sample_args)
+            pre.spans[x] = [_pack_pool().submit(plan_span, sp) for sp in spans]
+        return pre
 
     # ------------------------------------------------------------------
     def _record(self, op, backend, out, ideal, ncmds, est=None):
@@ -666,30 +899,16 @@ class Executor:
             self.stage_seconds["readback_s"] += time.perf_counter() - t0
         return results
 
-    def _node_pipelined(self, x: ir.Call, sample_args: List[List[np.ndarray]]):
-        """Pipelined execution of one accelerator IR node across the B
-        samples of a ``run_many`` minibatch: samples are planned (host
-        packing, pure numpy) in :attr:`pipeline_chunk`-sized chunks on the
-        pack worker while the main thread dispatches the previous chunk's
-        simulations to the device queues; results materialize at the final
-        assemble barrier, in submission order (deterministic stats/order).
-        Chunking only regroups the vmapped batches — per-sample numerics
-        are grouping-independent, so results match the compiled engine
-        bit-for-bit."""
-        B = len(sample_args)
-        if B == 0:
-            return []
-        spans = [
-            range(i, min(i + self.pipeline_chunk, B))
-            for i in range(0, B, self.pipeline_chunk)
-        ]
+    def _make_plan_span(self, x: ir.Call, sample_args: List[List[np.ndarray]]):
+        """Build the pack-stage closure for one accelerator node: plan every
+        sample of a span (planner packing, pure numpy) AND pre-stack its
+        batchable groups, so the main thread's dispatch is jit lookup +
+        async call only. Shared by :meth:`_node_pipelined` (packing one
+        span ahead within a request) and :meth:`prepack_many` (staging a
+        whole later request's leading nodes)."""
         target, _intr = TARGETS.intrinsic(x.op)
 
         def plan_span(span):
-            """Pack stage, on the worker: plan every sample of the span
-            (planner packing, pure numpy) AND pre-stack its batchable
-            groups, so the main thread's dispatch is jit lookup + async
-            call only."""
             t0 = time.perf_counter()
             planned = [self._plan(x, sample_args[s]) for s in span]
             jobs = [j for js, _ in planned for j in js]
@@ -716,24 +935,70 @@ class Executor:
                 ))
             return planned, jobs, preps
 
-        fut = _pack_pool().submit(plan_span, spans[0])
+        return plan_span
+
+    def _node_pipelined(
+        self,
+        x: ir.Call,
+        sample_args: List[List[np.ndarray]],
+        defer: bool = False,
+        prepacked: Optional[List[Any]] = None,
+    ):
+        """Pipelined execution of one accelerator IR node across the B
+        samples of a ``run_many`` minibatch: samples are planned (host
+        packing, pure numpy) in :attr:`pipeline_chunk`-sized chunks on the
+        pack worker while the main thread dispatches the previous chunk's
+        simulations to the device queues; results materialize at the final
+        assemble barrier, in submission order (deterministic stats/order).
+        Chunking only regroups the vmapped batches — per-sample numerics
+        are grouping-independent, so results match the compiled engine
+        bit-for-bit.
+
+        ``defer=True`` (submit_many's terminal nodes) dispatches every span
+        but returns a :class:`_Deferred` whose force runs the assemble
+        barrier — the caller decides when to pay the readback.
+        ``prepacked`` passes span packings already staged on the pack
+        worker by :meth:`prepack_many` (one future per span); span
+        boundaries depend only on B and :attr:`pipeline_chunk`, and a
+        length mismatch falls back to packing here."""
+        B = len(sample_args)
+        if B == 0:
+            return _Deferred(list) if defer else []
+        spans = [
+            range(i, min(i + self.pipeline_chunk, B))
+            for i in range(0, B, self.pipeline_chunk)
+        ]
+        if prepacked is not None and len(prepacked) != len(spans):
+            prepacked = None
+        plan_span = self._make_plan_span(x, sample_args)
+
+        def stage(ci):
+            if prepacked is not None:
+                return prepacked[ci]
+            return _pack_pool().submit(plan_span, spans[ci])
+
+        fut = stage(0)
         stages = []
         for ci in range(len(spans)):
             planned, jobs, preps = fut.result()
             if ci + 1 < len(spans):
-                fut = _pack_pool().submit(plan_span, spans[ci + 1])
+                fut = stage(ci + 1)
             handles = self._dispatch_jobs(jobs, preps=preps)
             stages.append((planned, handles))
-        t0 = time.perf_counter()
-        v = []
-        for planned, handles in stages:
-            outs = [h() for h in handles]
-            o = 0
-            for js, asm in planned:
-                v.append(asm(outs[o : o + len(js)]))
-                o += len(js)
-        self.stage_seconds["readback_s"] += time.perf_counter() - t0
-        return v
+
+        def readback():
+            t0 = time.perf_counter()
+            v = []
+            for planned, handles in stages:
+                outs = [h() for h in handles]
+                o = 0
+                for js, asm in planned:
+                    v.append(asm(outs[o : o + len(js)]))
+                    o += len(js)
+            self.stage_seconds["readback_s"] += time.perf_counter() - t0
+            return v
+
+        return _Deferred(readback) if defer else readback()
 
     # -- statistics & cache surfacing ------------------------------------
     def reset_stats(self) -> None:

@@ -170,6 +170,24 @@ def _pipeline_batch(executor: Executor, batch_size: int) -> int:
     return batch_size
 
 
+def _iter_batch_outputs(executor: Executor, program, env_batches):
+    """Depth-1 minibatch lookahead over ``Executor.submit_many``: minibatch
+    k+1 is submitted — its host packing starts on the pack worker — before
+    minibatch k's deferred readback barrier is paid, so the pipeline never
+    drains at minibatch boundaries. On synchronous engines ``submit_many``
+    degenerates to ``run_many`` and this is a plain loop. Yields each
+    minibatch's outputs in submission order (bit-identical to ``run_many``
+    per minibatch)."""
+    pending = None
+    for envs in env_batches:
+        sub = executor.submit_many(program, envs)
+        if pending is not None:
+            yield pending.result()
+        pending = sub
+    if pending is not None:
+        yield pending.result()
+
+
 def eval_classification(program, params, X, y, executor: Executor, n_eval=100, batch_size=16):
     """Co-simulated accuracy, evaluated in minibatches: each batch's
     accelerator invocations run through one vmapped simulator call per IR
@@ -180,10 +198,10 @@ def eval_classification(program, params, X, y, executor: Executor, n_eval=100, b
     correct = 0
     batch_size = _pipeline_batch(executor, batch_size)
     t0 = time.perf_counter()
-    for i0 in range(0, n_eval, batch_size):
-        idx = range(i0, min(i0 + batch_size, n_eval))
-        envs = [dict(params, x=X[i]) for i in idx]
-        outs = executor.run_many(program, envs)
+    batches = [range(i0, min(i0 + batch_size, n_eval))
+               for i0 in range(0, n_eval, batch_size)]
+    env_batches = ([dict(params, x=X[i]) for i in idx] for idx in batches)
+    for idx, outs in zip(batches, _iter_batch_outputs(executor, program, env_batches)):
         for out, i in zip(outs, idx):
             logits = np.asarray(out).reshape(-1)
             correct += int(np.argmax(logits) == y[i])
@@ -203,11 +221,11 @@ def eval_outputs(program, params, make_x, indices, executor: Executor,
     noise."""
     batch_size = _pipeline_batch(executor, batch_size)
     idx = list(indices)
+    chunks = [idx[i0 : i0 + batch_size] for i0 in range(0, len(idx), batch_size)]
+    env_batches = ([dict(params, x=make_x(i)) for i in chunk] for chunk in chunks)
     outs = []
-    for i0 in range(0, len(idx), batch_size):
-        chunk = idx[i0 : i0 + batch_size]
-        envs = [dict(params, x=make_x(i)) for i in chunk]
-        outs.extend(np.asarray(o) for o in executor.run_many(program, envs))
+    for batch_outs in _iter_batch_outputs(executor, program, env_batches):
+        outs.extend(np.asarray(o) for o in batch_outs)
     return outs
 
 
@@ -217,10 +235,11 @@ def eval_perplexity(program, params, Xtok, Ytok, executor: Executor, n_eval=50, 
     batch_size = _pipeline_batch(executor, batch_size)
     t0 = time.perf_counter()
     model_params = {k: v for k, v in params.items() if k != "_embed"}
-    for i0 in range(0, n_eval, batch_size):
-        idx = range(i0, min(i0 + batch_size, n_eval))
-        envs = [dict(model_params, x=emb[Xtok[i]][:, None, :]) for i in idx]
-        outs = executor.run_many(program, envs)
+    batches = [range(i0, min(i0 + batch_size, n_eval))
+               for i0 in range(0, n_eval, batch_size)]
+    env_batches = ([dict(model_params, x=emb[Xtok[i]][:, None, :]) for i in idx]
+                   for idx in batches)
+    for idx, outs in zip(batches, _iter_batch_outputs(executor, program, env_batches)):
         for out, i in zip(outs, idx):
             logits = np.asarray(out)
             logp = logits - logits.max(-1, keepdims=True)

@@ -91,6 +91,36 @@ def bucket_length(n: int, min_len: int = MIN_BUCKET) -> int:
     return 1 << (n - 1).bit_length()
 
 
+#: batch-axis bucket ladder for the vmapped simulators. "pow2" (default)
+#: pads the batch dimension to the next power of two; "serving" adds the
+#: 3/4-of-pow2 steps (1,2,3,4,6,8,12,16,24,32,...) so coalesced
+#: cross-request batches — whose sizes are sums of small request batches,
+#: rarely near a power of two — waste less replay padding, at the cost of
+#: at most one extra trace per octave. Process-wide because traced batch
+#: runners are cached per padded shape.
+_BATCH_LADDER = "pow2"
+
+
+def set_batch_ladder(mode: str = "pow2") -> str:
+    """Select the batch-axis bucket ladder ("pow2" or "serving"); returns
+    the previous mode so callers (the serving layer) can restore it.
+    Padding replays the last stream and callers slice [:B], so the ladder
+    never changes results — only padded shapes (and hence retraces)."""
+    global _BATCH_LADDER
+    assert mode in ("pow2", "serving"), f"unknown batch ladder {mode!r}"
+    prev = _BATCH_LADDER
+    _BATCH_LADDER = mode
+    return prev
+
+
+def batch_bucket(n: int) -> int:
+    """Padded batch size for ``n`` streams under the active ladder."""
+    p = bucket_length(n, min_len=1)
+    if _BATCH_LADDER == "serving" and p >= 4 and n <= (3 * p) // 4:
+        return (3 * p) // 4
+    return p
+
+
 # --------------------------------------------------------------------------
 # Stream mesh: shard the stacked batch axis over the host's devices
 # --------------------------------------------------------------------------
@@ -492,7 +522,7 @@ class ILA:
         assert streams, "simulate_batch needs at least one stream"
         L = bucket_length(max(len(s) for s in streams))
         B = len(streams)
-        Bp = mesh_pad(bucket_length(B, min_len=1))
+        Bp = mesh_pad(batch_bucket(B))
         padded = [s.padded(L) for s in streams]
         padded += [padded[-1]] * (Bp - B)
         ops = np.stack([s.ops for s in padded])
@@ -616,7 +646,7 @@ class ILA:
         sig = datas[0].sig()
         assert all(d.sig() == sig for d in datas), "mixed signatures in one batch"
         B = len(datas)
-        Bp = mesh_pad(bucket_length(B, min_len=1))
+        Bp = mesh_pad(batch_bucket(B))
         datas = list(datas) + [datas[-1]] * (Bp - B)
         tail0 = datas[0].tail.data
         shared_mask = tuple(
@@ -824,11 +854,12 @@ def fused_lowering() -> str:
 
 def fused_pad_streams(datas: Sequence["DataStream"]) -> List["DataStream"]:
     """Pad a fused batch exactly like :meth:`ILA._host_data_batch` pads the
-    compiled tier's: bucket to a power of two (times the stream-mesh size)
-    by replaying the last stream. Keeping the two tiers' padding identical
-    bounds retraces the same way and keeps ``[b]`` handle indexing aligned."""
+    compiled tier's: bucket per the active batch ladder (times the
+    stream-mesh size) by replaying the last stream. Keeping the two tiers'
+    padding identical bounds retraces the same way and keeps ``[b]`` handle
+    indexing aligned."""
     B = len(datas)
-    Bp = mesh_pad(bucket_length(B, min_len=1))
+    Bp = mesh_pad(batch_bucket(B))
     return list(datas) + [datas[-1]] * (Bp - B)
 
 

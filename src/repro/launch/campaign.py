@@ -61,6 +61,12 @@ def main() -> None:
     ap.add_argument("--n-eval", type=int, default=32)
     ap.add_argument("--train-steps", type=int, default=120)
     ap.add_argument("--op-samples", type=int, default=2)
+    ap.add_argument("--op-boundary", type=int, default=0,
+                    help="range-directed op-tier samples per intrinsic: "
+                         "activation operands straddling the statically "
+                         "computed saturation boundary (ilalint."
+                         "boundary_inputs), aimed at sat_wrap-class "
+                         "faults; 0 (default) keeps the uniform-only pool")
     ap.add_argument("--acc-delta", type=float, default=0.02,
                     help="app-tier detection threshold: |accuracy delta|")
     ap.add_argument("--ppl-ratio", type=float, default=1.02,
@@ -105,6 +111,7 @@ def main() -> None:
         n_eval=args.n_eval,
         train_steps=args.train_steps,
         op_samples=args.op_samples,
+        op_boundary=args.op_boundary,
         acc_delta=args.acc_delta,
         ppl_ratio=args.ppl_ratio,
         seed=args.seed,

@@ -1,38 +1,36 @@
 """Serving launcher: prefill + batched autoregressive decode, or a
-persistent co-simulation service over the accelerator ILAs.
+continuous-batching co-simulation service over the accelerator ILAs.
 
 LLM decode:
 
     python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
         [--batch 4] [--prompt 16] [--gen 16]
 
-Co-sim serving (ROADMAP: persistent Executor with warm fragment caches):
+Co-sim serving (ROADMAP: serving front end over the simulated fleet):
 
     python -m repro.launch.serve --cosim resmlp --devices-per-target 2 \
-        [--requests 4] [--batch 8] [--engine pipelined] [--mesh auto] \
-        [--warmup 1]
+        [--requests 16] [--batch 2] [--engine pipelined] [--mesh auto] \
+        [--warmup 1] [--concurrency 4] [--queue-depth 16] \
+        [--arrival poisson:8] [--no-coalesce] [--no-overlap]
 
-compiles the named application once (cost-driven flexible matching), keeps
-one Executor alive across requests — fragment caches stay warm, compiled
-data runners stay traced — and serves minibatch requests through
-``Executor.run_many``. ``--devices-per-target`` sizes the simulated device
-fleet per accelerator; the Executor's scheduler spreads signature-grouped
-SimJob batches over it by estimated cycles (greedy LPT).
+compiles the named application once (cost-driven flexible matching) and
+serves it through :class:`repro.core.serving.CosimServer`: a bounded
+request queue + single dispatch thread where request k+1's host packing
+overlaps request k's simulation tail (``submit_many``/``prepack_many``),
+queued same-app requests coalesce into one vmapped dispatch, and
+admission control rejects work beyond ``--queue-depth``. Warmup runs on
+the synchronous ``compiled`` engine — filling every fragment cache and
+calibrating each target's wall-clock CostModel — then measured requests
+run on ``--engine`` (default ``pipelined``, or ``REPRO_ENGINE``).
 
-``--warmup N`` requests are excluded from the reported steady-state
-throughput (cold and warm numbers print side by side). Warmup always runs
-on the synchronous ``compiled`` engine, whose per-group timings calibrate
-every target's wall-clock CostModel (``Executor.calibrate_from_timings``);
-measured requests then run on ``--engine`` (default ``pipelined``, or
-``REPRO_ENGINE``) — the async serving path, with host packing overlapping
-device simulation and, under ``--mesh auto``, the vmapped batch axis
-sharded over the host's devices. ``--engine fused`` serves through the
-fused fast-path runners (docs/simulation.md), reporting fused cold vs
-steady ms/sample alongside the compiled warmup numbers. The
-compiled/jit/eager/pipelined engines are bit-exact, so the switch never
-changes results; the fused tier is tolerance-validated against compiled
-in conformance. After the request loop the per-device utilization,
-pipeline-stage and cache-health tables are printed.
+``--concurrency N`` bounds the load generator's outstanding requests;
+``--arrival poisson:RATE`` draws exponential inter-arrival gaps at RATE
+requests/second (default ``asap``: back-to-back). The run reports
+sustained QPS, p50/p95/p99 request latency, rejections, then the
+per-device utilization, pipeline-stage and cache-health tables. All
+engines serve bit-identical results for a given ``--seed`` (request
+operands derive from ``(seed, request_id)``, independent of queue or
+coalescing order). See ``docs/serving.md``.
 """
 from __future__ import annotations
 
@@ -54,10 +52,22 @@ def _force(*trees):
                 leaf.block_until_ready()
 
 
+def _parse_arrival(spec: str):
+    """"asap" -> None (back-to-back); "poisson:RATE" -> RATE (req/s)."""
+    if spec == "asap":
+        return None
+    if spec.startswith("poisson:"):
+        rate = float(spec.split(":", 1)[1])
+        if rate <= 0:
+            raise SystemExit(f"--arrival poisson rate must be > 0, got {rate}")
+        return rate
+    raise SystemExit(f'--arrival must be "asap" or "poisson:RATE", got {spec!r}')
+
+
 def serve_cosim(args) -> None:
-    from ..core import apps, ila, ir
-    from ..core.codegen import Executor
+    from ..core import apps, ila
     from ..core.compile import compile_program
+    from ..core.serving import CosimServer, percentiles_ms
 
     by_name = {k.lower(): v for k, v in apps.APPLICATIONS.items()}
     if args.cosim.lower() not in by_name:
@@ -74,72 +84,80 @@ def serve_cosim(args) -> None:
     if args.mesh != "off":
         print(f"stream mesh: {mesh if mesh is not None else 'disabled (single device host)'}")
 
-    xshape = next(v for v in ir.postorder(expr)
-                  if isinstance(v, ir.Var) and v.name == "x").shape
     # the serving path defaults to the async engine (unlike the Executor's
     # process-wide compiled default): --engine > REPRO_ENGINE > pipelined.
     # The chunk size is clamped so even the default --batch splits into
     # >= 2 pack/sim chunks per node — a single-chunk batch has nothing for
     # the pipeline to overlap.
     engine = args.engine or os.environ.get("REPRO_ENGINE") or "pipelined"
-    ex = Executor("ila", engine=engine,
-                  devices_per_target=args.devices_per_target,
-                  pipeline_chunk=max(1, min(8, -(-args.batch // 2))))
-    rng = np.random.default_rng(args.seed)
+    rate = _parse_arrival(args.arrival)
+    server = CosimServer(
+        engine=engine,
+        devices_per_target=args.devices_per_target,
+        pipeline_chunk=max(1, min(8, -(-args.batch // 2))),
+        queue_depth=args.queue_depth,
+        max_batch=args.max_batch or max(4 * args.batch, 8),
+        coalesce=not args.no_coalesce,
+        overlap=not args.no_overlap,
+        seed=args.seed,
+    )
+    server.add_program(args.cosim.lower(), res.program, params)
+    ex = server.executor
 
-    def request(req: int) -> float:
-        envs = [
-            dict(params, x=rng.standard_normal(xshape).astype(np.float32))
-            for _ in range(args.batch)
-        ]
-        t0 = time.perf_counter()
-        outs = ex.run_many(res.program, envs)
-        _force(outs)
-        return time.perf_counter() - t0
-
-    # Warmup: synchronous engine — fills every cache AND records exact
-    # per-group sim timings that calibrate the wall-clock cost models the
-    # pipelined scheduler prices groups with. Engines are bit-exact, so
-    # switching after warmup never changes served results.
     warmup = max(args.warmup, 1)
-    ex.engine = "compiled"
-    cold_dts = [request(r) for r in range(warmup)]
-    for r, dt in enumerate(cold_dts):
-        print(f"warmup {r}: batch={args.batch} {dt:.3f}s "
-              f"({dt / args.batch * 1e3:.1f} ms/sample)"
-              f"{'   [cold caches]' if r == 0 else ''}")
-    fits = ex.calibrate_from_timings()
-    for tname, fit in sorted(fits.items()):
-        print(f"calibrated {tname}: "
-              f"sim {fit.get('sim_us_per_command', 0):.1f} us/cmd, "
-              f"pack {fit.get('pack_us_per_command', 0):.1f} us/cmd "
-              f"({fit.get('n_groups', 0):.0f} groups)")
-    ex.engine = engine
-    engine_cold = None
-    if engine != "compiled":
-        # one excluded request on the measured engine: its batch chunking
-        # traces its own vmap shapes (and, for engine=fused, resolves +
-        # traces the per-fragment fused runners), which must not pollute
-        # steady state — but it IS the engine's cold number, reported below
-        engine_cold = request(warmup)
-        print(f"warmup {warmup}: engine={engine} {engine_cold:.3f}s [engine traces]")
-    ex.reset_stats()   # measured section starts clean (incl. device rows)
+    t0 = time.perf_counter()
+    server.start(warmup=warmup, warm_batch=args.batch)
+    warm_s = time.perf_counter() - t0
+    cold_ms = warm_s / (warmup * args.batch) * 1e3
+    print(f"warmup: {warmup} request(s) x batch {args.batch} in {warm_s:.3f}s "
+          f"({cold_ms:.1f} ms/sample incl. compile+traces, compiled engine) "
+          f"-> serving on {engine}")
 
-    warm_dts = [request(warmup + r) for r in range(args.requests)]
-    for r, dt in enumerate(warm_dts):
-        print(f"request {r}: engine={engine} batch={args.batch} {dt:.3f}s "
-              f"({dt / args.batch * 1e3:.1f} ms/sample)")
+    arrival_rng = np.random.default_rng(args.seed)
+    handles = []
+    t_load = time.perf_counter()
+    for _r in range(args.requests):
+        outstanding = [h for h in handles if not h.done()]
+        while len(outstanding) >= max(1, args.concurrency):
+            outstanding[0].wait()
+            outstanding = [h for h in outstanding if not h.done()]
+        handles.append(server.submit(args.cosim.lower(), batch=args.batch))
+        if rate is not None:
+            time.sleep(arrival_rng.exponential(1.0 / rate))
+    for h in handles:
+        h.wait()
+    load_s = time.perf_counter() - t_load
+    server.close(drain=True)
 
-    cold_ms = cold_dts[0] / args.batch * 1e3
-    warm_ms = float(np.mean(warm_dts)) / args.batch * 1e3 if warm_dts else float("nan")
-    print(f"\ncold vs steady state: {cold_ms:.1f} ms/sample (first request, "
-          f"compiled) vs {warm_ms:.1f} ms/sample (mean of {len(warm_dts)} "
-          f"measured, {engine}) -> {cold_ms / warm_ms:.1f}x")
-    if engine_cold is not None:
-        ec_ms = engine_cold / args.batch * 1e3
-        print(f"{engine} cold vs steady: {ec_ms:.1f} ms/sample (first "
-              f"{engine} request, engine traces) vs {warm_ms:.1f} ms/sample "
-              f"-> {ec_ms / warm_ms:.1f}x")
+    served = [h for h in handles if h.status == "done"]
+    rejected = [h for h in handles if h.rejected]
+    print(f"load: {len(served)}/{len(handles)} served, "
+          f"{len(rejected)} rejected "
+          f"({args.arrival}, concurrency {args.concurrency}, "
+          f"queue depth {args.queue_depth})")
+
+    # steady-state stats — guarded: with --requests 0 (or every request
+    # rejected / a ~0s warm request) there is nothing to ratio against
+    if served and load_s > 0:
+        lats = [h.latency_s for h in served]
+        pct = percentiles_ms(lats)
+        qps = len(served) / load_s
+        warm_ms = float(np.mean(lats)) / args.batch * 1e3
+        print(f"sustained: {qps:.1f} req/s ({qps * args.batch:.1f} samples/s) "
+              f"| latency p50 {pct['p50_ms']:.1f} / p95 {pct['p95_ms']:.1f} "
+              f"/ p99 {pct['p99_ms']:.1f} ms")
+        summ = server.summary()
+        print(f"coalescing: {summ['batches']} dispatch batch(es), "
+              f"mean {summ['mean_batch']:.1f} req/batch, "
+              f"max {summ['coalesced_max']}")
+        if warm_ms > 0 and np.isfinite(warm_ms) and np.isfinite(cold_ms):
+            print(f"cold vs steady state: {cold_ms:.1f} ms/sample (warmup, "
+                  f"compiled) vs {warm_ms:.1f} ms/sample (mean of "
+                  f"{len(served)} served, {engine}) "
+                  f"-> {cold_ms / warm_ms:.1f}x")
+    else:
+        print("no measured requests (0 requested or all rejected); "
+              "skipping steady-state stats")
 
     print("\nper-target summary (devices: jobs / est cycles / utilization):")
     for tname, row in sorted(ex.stats_summary().items()):
@@ -219,7 +237,24 @@ def main():
                          "int: shard the vmapped batch axis over a device mesh")
     ap.add_argument("--warmup", type=int, default=1,
                     help="warmup requests excluded from steady-state stats")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="measured requests the load generator submits")
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="load generator: max outstanding requests")
+    ap.add_argument("--queue-depth", type=int, default=16,
+                    help="server admission control: max queued requests "
+                         "(beyond this, submissions are rejected)")
+    ap.add_argument("--arrival", default="asap",
+                    help='"asap" (back-to-back) or "poisson:RATE" '
+                         "(exponential inter-arrival gaps, RATE req/s)")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="coalescing cap in samples per dispatch "
+                         "(0: 4x --batch)")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="disable cross-request coalescing (serial baseline)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="drain the pipeline at every request's assemble "
+                         "barrier (pre-serving baseline)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=16)

@@ -365,3 +365,39 @@ def test_some_fault_escapes_fragments_but_app_level_catches_it(
     for m in escapees:
         assert m.escaped_fragment_checks
         assert m.tiers["app"].detected
+
+
+# ---------------------------------------------------------------------------
+# Range-directed op-tier sampling (op_boundary): closing the sat_wrap escape
+# ---------------------------------------------------------------------------
+
+
+def test_boundary_sampling_makes_sat_wrap_op_tier_detectable():
+    """sat_wrap only corrupts activations beyond FlexASR's saturation
+    boundary, which uniform standard-normal op-tier operands essentially
+    never reach — that is exactly why it is the acceptance campaign's
+    application-level-only escape. op_boundary > 0 appends operands from
+    ilalint.boundary_inputs (straddling the statically computed boundary)
+    to the per-op differential pool and must flip the op tier from miss to
+    detect; the default (0) keeps the uniform-only pool so the escape
+    phenomenon above stays reproducible."""
+    base = dict(
+        targets=("flexasr",), faults=("sat_wrap",), apps=(),
+        engine="compiled", devices_per_target=1,
+        op_samples=1, vt2_n=2, stat_calib_seeds=0, ladder="full",
+    )
+    miss = campaign_mod.run_campaign(**base)
+    hit = campaign_mod.run_campaign(op_boundary=2, **base)
+    assert miss.config["op_boundary"] == 0
+    assert hit.config["op_boundary"] == 2
+    assert miss.reports and len(miss.reports) == len(hit.reports)
+    for m in miss.reports:
+        assert m.tiers["op_diff"].detected is False, (
+            f"{m.key}: uniform op-tier samples unexpectedly reach the "
+            "saturation boundary — the app_only escape test is now vacuous"
+        )
+    for m in hit.reports:
+        assert m.tiers["op_diff"].detected is True, (
+            f"{m.key}: boundary-directed samples did not expose sat_wrap "
+            f"at the op tier ({m.tiers['op_diff'].detail})"
+        )

@@ -1,0 +1,186 @@
+"""Continuous-batching co-sim serving tests (repro.core.serving).
+
+Pins the three serving contracts the benchmark assumes:
+
+* coalesced results are bit-exact vs serving the same requests serially
+  (per-request seeded operands + batch-composition-independent engines);
+* admission control rejects — immediately, with a reason — rather than
+  queueing unboundedly under a saturating burst;
+* shutdown drains: every accepted request is served before close()
+  returns, and post-shutdown submissions are rejected.
+"""
+import numpy as np
+import pytest
+
+import repro.accel  # noqa: F401  (registers the bundled targets)
+from repro.core import ila, ir
+from repro.core.codegen import Executor
+from repro.core.serving import (
+    CosimServer, DONE, REJECT_BACKLOG, REJECT_QUEUE_FULL, REJECT_SHUTDOWN,
+    request_rng,
+)
+
+
+def _tiny_program(I=16, O=8, seed=0):
+    """relu(fasr_linear(x, w, b)): one accelerator call + a host epilogue —
+    small enough that serving tests run in seconds."""
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((O, I)) * 0.1).astype(np.float32)
+    b = (rng.standard_normal((O,)) * 0.1).astype(np.float32)
+    expr = ir.call(
+        "relu",
+        ir.call("fasr_linear", ir.Var("x", (4, I)), ir.Var("w", w.shape),
+                ir.Var("b", b.shape)),
+    )
+    return expr, {"w": w, "b": b}
+
+
+def _server(**kw):
+    kw.setdefault("engine", "pipelined")
+    kw.setdefault("pipeline_chunk", 2)
+    srv = CosimServer(**kw)
+    expr, params = _tiny_program()
+    srv.add_program("tiny", expr, params)
+    return srv
+
+
+# ---------------------------------------------------------------------------
+# coalescing: bit-exact vs serial
+# ---------------------------------------------------------------------------
+
+
+def test_coalesced_equals_serial_bit_exact():
+    """Submit a burst of batch-1 requests before start(): the dispatch
+    thread wakes to a full queue and must coalesce them into shared
+    vmapped dispatches, and every request's outputs must be bit-identical
+    to running its (seed, request_id)-derived envs alone on a synchronous
+    executor."""
+    srv = _server(seed=3, max_batch=8, queue_depth=32)
+    handles = [srv.submit("tiny", batch=1) for _ in range(6)]
+    try:
+        srv.start(warmup=1, warm_batch=2)
+        outs = {h.id: h.result(timeout=300) for h in handles}
+    finally:
+        srv.close(drain=True)
+    assert any(h.coalesced_with > 0 for h in handles), (
+        "a 6-request pre-start burst never shared a dispatch: coalescing "
+        "is not happening"
+    )
+    assert srv.summary()["coalesced_max"] > 1
+
+    serial = Executor("ila", engine="compiled")
+    expr, _params = _tiny_program()
+    for h in handles:
+        envs = srv.request_envs("tiny", h.id, 1)
+        # the request's operands are a pure function of (seed, id)
+        np.testing.assert_array_equal(
+            envs[0]["x"], h.envs[0]["x"],
+            err_msg="request_envs is not reproducing the served operands")
+        (ref,) = serial.run_many(expr, envs)
+        assert len(outs[h.id]) == 1
+        np.testing.assert_array_equal(
+            np.asarray(ref), outs[h.id][0],
+            err_msg=f"request {h.id}: coalesced result differs from serial")
+
+
+def test_request_rng_is_interleaving_independent():
+    """The operand stream is keyed by (seed, request_id) alone."""
+    a = request_rng(7, 12).standard_normal(8)
+    b = request_rng(7, 12).standard_normal(8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, request_rng(7, 13).standard_normal(8))
+    assert not np.array_equal(a, request_rng(8, 12).standard_normal(8))
+
+
+def test_serving_batch_ladder_restored_after_close():
+    """start() switches the vmapped batch axis to the serving ladder;
+    close() must restore the process-wide default (other tests and the
+    campaign path rely on pow2 buckets)."""
+    assert ila.batch_bucket(6) == 8  # pow2 default
+    srv = _server()
+    srv.start(warmup=0)
+    try:
+        assert ila.batch_bucket(6) == 6  # serving ladder: 3/4-pow2 step
+    finally:
+        srv.close()
+    assert ila.batch_bucket(6) == 8
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_burst_beyond_queue_depth_is_rejected():
+    """A saturating burst: the queue admits queue_depth requests, the rest
+    are rejected immediately with reason queue_full, and every accepted
+    request is still served (drain on close)."""
+    srv = _server(queue_depth=2, coalesce=False)
+    handles = [srv.submit("tiny", batch=1) for _ in range(5)]
+    rejected = [h for h in handles if h.rejected]
+    accepted = [h for h in handles if not h.rejected]
+    assert len(rejected) == 3 and len(accepted) == 2
+    for h in rejected:
+        assert h.reject_reason == REJECT_QUEUE_FULL
+        assert h.done()  # rejection resolves the handle instantly
+        with pytest.raises(RuntimeError, match="queue_full"):
+            h.result(timeout=1)
+    srv.start(warmup=1, warm_batch=2)
+    try:
+        for h in accepted:
+            assert len(h.result(timeout=300)) == 1
+    finally:
+        srv.close(drain=True)
+    assert srv.summary()["rejected"] == {REJECT_QUEUE_FULL: 3}
+
+
+def test_backlog_cycle_backpressure_rejects():
+    """With max_backlog_cycles below two requests' estimated cost, the
+    second pre-start submission is shed with reason backlog."""
+    srv = _server(queue_depth=64)
+    est = srv._apps["tiny"].est_cycles_per_sample
+    assert est > 0, "CostModel produced no estimate for fasr_linear"
+    srv.max_backlog_cycles = 1.5 * est
+    h1 = srv.submit("tiny", batch=1)
+    h2 = srv.submit("tiny", batch=1)
+    assert not h1.rejected
+    assert h2.rejected and h2.reject_reason == REJECT_BACKLOG
+    srv.start(warmup=1, warm_batch=2)
+    try:
+        h1.result(timeout=300)
+        # served work retires its cycles: admission reopens
+        h3 = srv.submit("tiny", batch=1)
+        assert not h3.rejected
+        h3.result(timeout=300)
+    finally:
+        srv.close(drain=True)
+
+
+# ---------------------------------------------------------------------------
+# shutdown semantics
+# ---------------------------------------------------------------------------
+
+
+def test_close_drains_inflight_and_rejects_new():
+    """close(drain=True) serves every accepted request — none are dropped
+    or cancelled — and submissions after shutdown are rejected with
+    reason shutdown."""
+    srv = _server(max_batch=4, queue_depth=32)
+    srv.start(warmup=1, warm_batch=2)
+    handles = [srv.submit("tiny", batch=1) for _ in range(7)]
+    accepted = [h for h in handles if not h.rejected]
+    assert accepted, "every submission was rejected before close()"
+    srv.close(drain=True)
+    for h in accepted:
+        assert h.status == DONE, f"request {h.id} was dropped at shutdown"
+        assert len(h.outputs) == 1
+    late = srv.submit("tiny", batch=1)
+    assert late.rejected and late.reject_reason == REJECT_SHUTDOWN
+
+
+def test_close_without_drain_cancels_queued():
+    srv = _server(coalesce=False, queue_depth=32)
+    handles = [srv.submit("tiny", batch=1) for _ in range(4)]
+    # never started: nothing is in flight, every request is still queued
+    srv.close(drain=False)
+    assert all(h.status == "cancelled" for h in handles)
