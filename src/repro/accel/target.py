@@ -29,6 +29,7 @@ covers every declared intrinsic — a fourth backend needs zero edits to
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -155,6 +156,53 @@ class CostModel:
         #: ``{pack,sim}_overhead_us``, ``n_groups``). Once fitted, one
         #: "cycle" of this model means one microsecond of measured latency.
         self.latency: Dict[str, float] = {}
+        #: streaming predicted-vs-actual drift accumulators fed by
+        #: :meth:`record_drift` (count / log-ratio sums / extremes)
+        self._drift = [0, 0.0, 0.0, float("inf"), float("-inf")]
+
+    def record_drift(self, predicted_cycles: float, actual_us: float) -> None:
+        """One drift observation: the scheduler priced a group at
+        ``predicted_cycles`` and its simulation measured ``actual_us``.
+        On a latency-calibrated model (1 cycle == 1 us) the ratio
+        ``actual / predicted`` is the mispricing factor the admission
+        controller and LPT placement are operating under; before
+        calibration it is the analytic-to-wall-clock conversion. Ratios
+        accumulate in log space so over- and under-prediction average
+        symmetrically."""
+        if predicted_cycles <= 0 or actual_us <= 0:
+            return
+        r = float(actual_us) / float(predicted_cycles)
+        lr = math.log(r)
+        d = self._drift
+        d[0] += 1
+        d[1] += lr
+        d[2] += lr * lr
+        d[3] = min(d[3], r)
+        d[4] = max(d[4], r)
+
+    def drift_summary(self) -> Optional[Dict[str, float]]:
+        """Aggregate predicted-vs-actual drift: geometric-mean ratio of
+        actual microseconds to predicted cycles, its log-space spread, and
+        the extremes. None until :meth:`record_drift` has observations.
+        A calibrated model tracking reality sits near ``ratio_geomean``
+        1.0; a drifting one is the signal to re-run
+        ``calibrate_from_timings``."""
+        n, s, s2, lo, hi = self._drift
+        if n == 0:
+            return None
+        mean = s / n
+        var = max(0.0, s2 / n - mean * mean)
+        return {
+            "n": float(n),
+            "ratio_geomean": math.exp(mean),
+            "log_ratio_std": math.sqrt(var),
+            "ratio_min": lo,
+            "ratio_max": hi,
+            "calibrated": 1.0 if self.latency else 0.0,
+        }
+
+    def reset_drift(self) -> None:
+        self._drift = [0, 0.0, 0.0, float("inf"), float("-inf")]
 
     def op(self, name: str):
         """Decorator registering the pricing rule for intrinsic ``name``."""
@@ -255,6 +303,9 @@ class CostModel:
             self.latency["pack_overhead_us"] = pack_fit[1] * 1e6
         if sim_fit is not None or pack_fit is not None:
             self.latency["n_groups"] = float(len(sims) + len(packs))
+            # pricing just changed: drift observed under the old model no
+            # longer measures this model's error
+            self.reset_drift()
         return dict(self.latency)
 
     def calibrate(self, stats) -> Dict[str, float]:

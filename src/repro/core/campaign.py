@@ -92,6 +92,7 @@ from .codegen import Executor
 from .compile import compile_program
 from .faults import FaultInstance, fault_instances, make_mutant, swapped_in
 from .ila import TARGETS
+from .telemetry import TELEMETRY
 
 TIER_ORDER = ("static", "vt2", "frag_sim", "op_diff", "app", "stat")
 
@@ -938,12 +939,22 @@ def _run_one(ctx: _Ctx, t, inst: FaultInstance) -> MutantReport:
     mutant = make_mutant(t, inst)
     tiers: Dict[str, TierResult] = {}
     outcome, error = "ok", ""
+    mkey = f"{t.name}:{inst.fault}@{inst.instruction}"
+
+    def tier_span(name):
+        # one span per tier, trace-correlated by mutant key; the sharded
+        # runner ships these back with the result (worker-side export)
+        return TELEMETRY.span("campaign.tier", trace_id=mkey, tier=name,
+                              target=t.name, fault=inst.fault)
+
     try:
         with swapped_in(mutant):
             # tier 0: static verification against the golden probe streams
             # — no simulation; under an escalation ladder a static
             # detection skips every simulated tier below
-            tiers["static"] = _tier_static(t, ctx.probes[t.name], inst)
+            with tier_span("static") as sp:
+                tiers["static"] = _tier_static(t, ctx.probes[t.name], inst)
+                sp.set(detected=tiers["static"].detected)
 
             def app_and_stat():
                 app_tier, stat_tier = _tier_app_and_stat(ctx, t)
@@ -973,16 +984,56 @@ def _run_one(ctx: _Ctx, t, inst: FaultInstance) -> MutantReport:
                         tiers.setdefault("app", TierResult(
                             "app", None, detail="skipped (caught earlier)"))
                     continue
-                tiers[name] = run()
+                with tier_span(name) as sp:
+                    tiers[name] = run()
+                    sp.set(detected=tiers[name].detected)
     except KeyboardInterrupt:
         raise
     except Exception as e:
         outcome = "crash"
         error = f"{type(e).__name__}: {e}"
-    return MutantReport(
+    t1 = time.perf_counter()
+    rep = MutantReport(
         t.name, inst.fault, inst.instruction, inst.note, tiers,
-        seconds=time.perf_counter() - t0, outcome=outcome, error=error,
+        seconds=t1 - t0, outcome=outcome, error=error,
     )
+    if TELEMETRY.enabled:
+        TELEMETRY.record_span(
+            "campaign.mutant", t0, t1, trace_id=mkey, outcome=outcome,
+            detected_at=rep.detected_at or "never")
+    return rep
+
+
+def _count_report(rep: Dict[str, Any]) -> None:
+    """Escape-matrix counters into the process metrics registry: every
+    finished mutant increments ``campaign.mutants``, its first detecting
+    tier (or ``campaign.escaped``), its outcome, and the per-mutant
+    wall-clock histogram. Both runners call this — for the sharded runner
+    it runs parent-side on the checkpointed report dict, so worker
+    process boundaries don't lose counts."""
+    TELEMETRY.counter("campaign.mutants").inc()
+    det = rep.get("detected_at")
+    if det:
+        TELEMETRY.counter("campaign.detected", tier=det).inc()
+    else:
+        TELEMETRY.counter("campaign.escaped").inc()
+    TELEMETRY.counter(
+        "campaign.outcome", outcome=rep.get("outcome", "ok")).inc()
+    TELEMETRY.histogram("campaign.mutant_s").observe(
+        float(rep.get("seconds", 0.0)))
+
+
+def _eta_suffix(done: int, total: int, elapsed_s: float) -> str:
+    """The running throughput/ETA tail of a campaign progress line.
+    ``done``/``elapsed_s`` cover only this run (resumed mutants excluded);
+    the rate is published as ``campaign.mutants_per_s`` and the line reads
+    it back from the registry — one source of truth for reporting."""
+    rate = TELEMETRY.gauge("campaign.mutants_per_s")
+    rate.set(done / elapsed_s if elapsed_s > 0 else 0.0)
+    r = rate.value
+    if r <= 0 or done >= total:
+        return ""
+    return f" | {r:.2f} mutants/s, ETA {(total - done) / r:.0f}s"
 
 
 # ---------------------------------------------------------------------------
@@ -1058,6 +1109,9 @@ def run_campaign(
 
     ctx = _prepare(config, say)
     reports: List[MutantReport] = []
+    n_run = 0
+    n_todo = sum(1 for k in ctx.instances if k not in completed)
+    t_run = time.perf_counter()
     for key, (t, inst) in ctx.instances.items():
         if key in completed:
             reports.append(MutantReport.from_dict(completed[key]))
@@ -1065,13 +1119,16 @@ def run_campaign(
         rep = _run_one(ctx, t, inst)
         reports.append(rep)
         completed[key] = rep.to_dict()
+        n_run += 1
+        _count_report(completed[key])
         if checkpoint:
             _save_checkpoint(
                 checkpoint, config, ctx.golden_info, ctx.stat_cal,
                 [r.to_dict() for r in reports],
                 prior_seconds + time.perf_counter() - t_start, partial=True)
         say(f"  {rep.key}: detected_at={rep.detected_at or 'never'} "
-            f"({rep.seconds:.1f}s)")
+            f"({rep.seconds:.1f}s)"
+            + _eta_suffix(n_run, n_todo, time.perf_counter() - t_run))
 
     result = CampaignResult(
         reports, ctx.golden_info, config, ctx.stat_cal,
@@ -1099,7 +1156,13 @@ def _shard_worker(wid: int, config: Dict[str, Any], task_q, result_q) -> None:
     import traceback
     try:
         from .. import accel  # noqa: F401  (registers bundled targets)
+        if config.get("_trace_spans"):
+            # tracing requested in the parent: record spans here too and
+            # ship each mutant's spans back with its result (the ring is
+            # drained per mutant, so worker memory stays bounded)
+            TELEMETRY.enable()
         ctx = _prepare(config, lambda s: None)
+        TELEMETRY.drain_spans()  # prepare/warmup spans are not per-mutant
         result_q.put(("ready", wid, {
             "golden": ctx.golden_info, "stat_calibration": ctx.stat_cal,
         }))
@@ -1121,7 +1184,8 @@ def _shard_worker(wid: int, config: Dict[str, Any], task_q, result_q) -> None:
         try:
             t, inst = ctx.instances[key]
             rep = _run_one(ctx, t, inst)
-            result_q.put(("done", wid, key, rep.to_dict()))
+            spans = TELEMETRY.drain_spans() if TELEMETRY.enabled else []
+            result_q.put(("done", wid, key, rep.to_dict(), spans))
         except BaseException:
             result_q.put(("error", wid, key, traceback.format_exc(limit=20)))
 
@@ -1143,6 +1207,7 @@ def run_campaign_sharded(
     checkpoint: Optional[str] = None,
     resume: bool = False,
     progress: Optional[Callable[[str], None]] = None,
+    trace_spans: Optional[bool] = None,
     **params,
 ) -> CampaignResult:
     """The fault-tolerant sharded campaign: mutants fan out across
@@ -1164,6 +1229,13 @@ def run_campaign_sharded(
       ``resume=True`` continues an interrupted campaign (config fingerprint
       permitting) with a bit-identical final matrix (:func:`matrix_digest`).
 
+    ``trace_spans`` (default: inherit ``TELEMETRY.enabled``) makes each
+    worker record telemetry spans and ship them back with every result;
+    the parent merges them into its own span buffer (per-worker lanes), so
+    an exported trace covers the whole sharded campaign. Runner knobs —
+    including ``trace_spans`` — are outside the config fingerprint, so
+    tracing never invalidates a resume.
+
     Remaining keyword arguments are :func:`run_campaign`'s campaign knobs.
     The escape matrix is deterministic and identical to the serial
     runner's; only wall-clock and attempt counts differ.
@@ -1175,6 +1247,9 @@ def run_campaign_sharded(
     config = _resolve_config(**params)
     run_cfg = dict(config, workers=workers, mutant_timeout=mutant_timeout,
                    retries=retries)
+    if trace_spans is None:
+        trace_spans = TELEMETRY.enabled
+    worker_cfg = dict(config, _trace_spans=bool(trace_spans))
 
     selected = TARGETS.all(config["targets"])
     instances = _enumerate_instances(selected, config["faults"])
@@ -1213,8 +1288,11 @@ def run_campaign_sharded(
     if not pending:
         return finalize()
 
+    n_resumed = len(completed)
+
     def record(key: str, rep: Dict[str, Any]) -> None:
         completed[key] = rep
+        _count_report(rep)
         if checkpoint:
             _save_checkpoint(
                 checkpoint, run_cfg, golden_info, stat_cal,
@@ -1222,7 +1300,10 @@ def run_campaign_sharded(
                 prior_seconds + time.perf_counter() - t_start, partial=True)
         say(f"  [{len(completed)}/{len(keys)}] {key}: "
             f"{rep.get('detected_at') or 'never'} "
-            f"(outcome={rep.get('outcome', 'ok')})")
+            f"(outcome={rep.get('outcome', 'ok')}, "
+            f"{rep.get('seconds', 0.0):.1f}s)"
+            + _eta_suffix(len(completed) - n_resumed, len(keys) - n_resumed,
+                          time.perf_counter() - t_start))
 
     mpctx = mp.get_context("spawn")
     result_q = mpctx.Queue()
@@ -1234,7 +1315,7 @@ def run_campaign_sharded(
         next_wid += 1
         q = mpctx.Queue()
         p = mpctx.Process(target=_shard_worker,
-                          args=(wid, config, q, result_q), daemon=True)
+                          args=(wid, worker_cfg, q, result_q), daemon=True)
         p.start()
         # init covers app training + golden eval + calibration; give it a
         # generous independent watchdog so a wedged init cannot stall the
@@ -1296,6 +1377,9 @@ def run_campaign_sharded(
                 elif kind == "done":
                     key, rep = msg[2], msg[3]
                     rep["attempts"] = attempts.get(key, 1)
+                    spans = msg[4] if len(msg) > 4 else []
+                    if spans:
+                        TELEMETRY.ingest(spans, source=f"worker{wid}")
                     record(key, rep)
                     w["key"], w["deadline"] = None, None
                 elif kind == "error":

@@ -95,6 +95,7 @@ from ..accel.target import (  # importing registers bundled targets
 )
 from . import ir
 from .ila import TARGETS, CompiledFragment, FragmentCache
+from .telemetry import TELEMETRY, MetricsRegistry
 
 ENGINES = ("compiled", "pipelined", "fused", "jit", "eager")
 
@@ -392,14 +393,41 @@ class Executor:
         self._batched_reads: Dict[int, Tuple[Callable, Callable]] = {}
         #: per-group wall-clock records feeding CostModel.calibrate_from_timings
         self.group_timings: List[GroupTiming] = []
-        #: accumulated per-stage wall clock (pack worker / dispatch / barrier)
-        self.stage_seconds: Dict[str, float] = dict.fromkeys(
-            ("pack_s", "dispatch_s", "readback_s"), 0.0
-        )
+        #: this executor's scoped metrics registry — the single source of
+        #: truth for stage timers and invocation aggregates; attached to the
+        #: process TELEMETRY singleton (weakref) so global snapshots see it
+        self.metrics = TELEMETRY.attach(MetricsRegistry(scope="executor"))
+        #: per-stage wall-clock counters (pack worker / dispatch / barrier);
+        #: the legacy ``stage_seconds`` dict is now a read-only view property
+        self._stage = {
+            k: self.metrics.counter(f"pipeline.{k}")
+            for k in ("pack_s", "dispatch_s", "readback_s")
+        }
+        self._groups_ctr = self.metrics.counter("pipeline.groups")
+        self._inv_metrics: Dict[str, Tuple[Any, Any, Any, Any]] = {}
         #: programs already shape/dtype-checked (once per distinct Expr)
         self._checked: set = set()
         #: per-program deferral analysis for submit_many (Expr -> node set)
         self._defer_sets: Dict[ir.Expr, set] = {}
+
+    @property
+    def stage_seconds(self) -> Dict[str, float]:
+        """Per-stage accumulated wall clock, read from the metrics registry
+        (kept as a dict-shaped view for existing callers/tests)."""
+        return {k: c.value for k, c in self._stage.items()}
+
+    def _inv_for(self, tname: str):
+        """The per-target invocation aggregate metrics (lazily created)."""
+        m = self._inv_metrics.get(tname)
+        if m is None:
+            m = (
+                self.metrics.counter("executor.invocations", target=tname),
+                self.metrics.counter("executor.commands", target=tname),
+                self.metrics.counter("executor.est_cycles", target=tname),
+                self.metrics.gauge("executor.max_rel_err_ratio", target=tname),
+            )
+            self._inv_metrics[tname] = m
+        return m
 
     # ------------------------------------------------------------------
     def _precheck(self, e: ir.Expr, env: Dict[str, Any]) -> None:
@@ -464,9 +492,16 @@ class Executor:
                             s_jobs, assemble = self._plan(x, sample_args[s])
                             plans.append((len(jobs), len(s_jobs), assemble))
                             jobs += s_jobs
-                        dt = time.perf_counter() - t0
-                        self.stage_seconds["pack_s"] += dt
+                        t1 = time.perf_counter()
+                        dt = t1 - t0
+                        self._stage["pack_s"].inc(dt)
+                        if TELEMETRY.enabled:
+                            TELEMETRY.record_span(
+                                "pipeline.pack", t0, t1,
+                                target=TARGETS.intrinsic(x.op)[0].name,
+                                jobs=len(jobs))
                         if self.collect_stats:
+                            self._groups_ctr.inc()
                             self.group_timings.append(GroupTiming(
                                 TARGETS.intrinsic(x.op)[0].name, len(jobs),
                                 PlanContext.data_ncmds(jobs), pack_s=dt,
@@ -653,6 +688,12 @@ class Executor:
                 op, backend, err, float(out.min()), float(out.max()), ncmds, est
             )
         )
+        inv, cmds, cyc, rel = self._inv_for(ir.accel_op_target(op) or backend)
+        inv.inc()
+        cmds.inc(ncmds)
+        if est is not None:
+            cyc.inc(est.cycles)
+        rel.set_max(err)
 
     def _estimate(self, target, x: ir.Call, args) -> Optional[CostEstimate]:
         """CostModel prediction for one invocation (None without a model)."""
@@ -793,6 +834,9 @@ class Executor:
         for _rank, idxs, target in order:
             frag = jobs[idxs[0]].frag
             read = jobs[idxs[0]].read
+            t_grp = time.perf_counter()
+            grp_cycles = 0.0
+            dev_name = frag.ila.name
             # fused resolution happens on the *shared* fragment, before any
             # device-local clone: runners compute from fragment meta, so a
             # fused group never pays a per-device setup re-simulation
@@ -804,13 +848,12 @@ class Executor:
                 # cost (the ranking pass above is placement-blind)
                 if runner is None and device.is_cold(frag):
                     n_cmds += len(frag.setup)
-                device.account(
-                    len(idxs),
-                    self._group_cycles(
-                        frag, idxs, jobs, target,
-                        _NullDevice if runner is not None else device,
-                    ),
+                grp_cycles = self._group_cycles(
+                    frag, idxs, jobs, target,
+                    _NullDevice if runner is not None else device,
                 )
+                device.account(len(idxs), grp_cycles)
+                dev_name = device.name
                 if runner is None:
                     frag = device.resolve(frag)
             stack_dt = 0.0
@@ -869,13 +912,28 @@ class Executor:
                     )
             if sync:
                 group.materialize()
+                sim_dt = time.perf_counter() - t0
                 if self.collect_stats:
+                    self._groups_ctr.inc()
                     self.group_timings.append(GroupTiming(
                         target.name if target is not None else frag.ila.name,
                         len(idxs), n_cmds, pack_s=stack_dt,
-                        sim_s=time.perf_counter() - t0,
+                        sim_s=sim_dt,
                     ))
-        self.stage_seconds["dispatch_s"] += time.perf_counter() - t_disp
+                    # drift probe: the scheduler priced this group at
+                    # grp_cycles; the simulation actually took sim_dt. On a
+                    # latency-calibrated model (1 cycle == 1 us) the ratio
+                    # is directly actionable (CostModel.drift_summary)
+                    if target is not None and target.cost_model is not None \
+                            and grp_cycles > 0:
+                        target.cost_model.record_drift(
+                            grp_cycles, sim_dt * 1e6)
+            if TELEMETRY.enabled:
+                TELEMETRY.record_span(
+                    "pipeline.dispatch_group", t_grp, time.perf_counter(),
+                    device=dev_name, jobs=len(idxs),
+                    est_cycles=round(grp_cycles, 1))
+        self._stage["dispatch_s"].inc(time.perf_counter() - t_disp)
         return handles
 
     def _execute_jobs(self, jobs: List[SimJob]) -> List[np.ndarray]:
@@ -896,7 +954,11 @@ class Executor:
         t0 = time.perf_counter()
         results = [h() for h in handles]
         if not sync:
-            self.stage_seconds["readback_s"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            self._stage["readback_s"].inc(t1 - t0)
+            if TELEMETRY.enabled:
+                TELEMETRY.record_span("pipeline.readback", t0, t1,
+                                      jobs=len(jobs))
         return results
 
     def _make_plan_span(self, x: ir.Call, sample_args: List[List[np.ndarray]]):
@@ -907,6 +969,10 @@ class Executor:
         span ahead within a request) and :meth:`prepack_many` (staging a
         whole later request's leading nodes)."""
         target, _intr = TARGETS.intrinsic(x.op)
+        # the pack closure runs on the pack-worker thread, which has no
+        # thread-local trace binding — capture the submitting thread's
+        # current trace id now so the pack span stays request-correlated
+        trace_id = TELEMETRY.current_trace() if TELEMETRY.enabled else None
 
         def plan_span(span):
             t0 = time.perf_counter()
@@ -926,9 +992,14 @@ class Executor:
                     if runner is not None
                     else frag0.prepare_batch(datas)
                 )
-            dt = time.perf_counter() - t0
-            self.stage_seconds["pack_s"] += dt
+            t1 = time.perf_counter()
+            dt = t1 - t0
+            self._stage["pack_s"].inc(dt)
+            if TELEMETRY.enabled:
+                TELEMETRY.record_span("pipeline.pack", t0, t1, trace_id,
+                                      target=target.name, jobs=len(jobs))
             if self.collect_stats:
+                self._groups_ctr.inc()
                 self.group_timings.append(GroupTiming(
                     target.name, len(jobs), PlanContext.data_ncmds(jobs),
                     pack_s=dt,
@@ -986,6 +1057,8 @@ class Executor:
             handles = self._dispatch_jobs(jobs, preps=preps)
             stages.append((planned, handles))
 
+        trace_id = TELEMETRY.current_trace() if TELEMETRY.enabled else None
+
         def readback():
             t0 = time.perf_counter()
             v = []
@@ -995,7 +1068,11 @@ class Executor:
                 for js, asm in planned:
                     v.append(asm(outs[o : o + len(js)]))
                     o += len(js)
-            self.stage_seconds["readback_s"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            self._stage["readback_s"].inc(t1 - t0)
+            if TELEMETRY.enabled:
+                TELEMETRY.record_span("pipeline.readback", t0, t1, trace_id,
+                                      spans=len(stages))
             return v
 
         return _Deferred(readback) if defer else readback()
@@ -1010,8 +1087,7 @@ class Executor:
         state (fragment caches, compiled runners) is untouched."""
         self.stats.clear()
         self.group_timings.clear()
-        for k in self.stage_seconds:
-            self.stage_seconds[k] = 0.0
+        self.metrics.reset()
         for devs in self.devices._devices.values():
             for d in devs:
                 d.reset_accounting()
@@ -1021,20 +1097,19 @@ class Executor:
         interface commands, worst relative error vs the fp32 oracle, total
         CostModel-estimated cycles, and — once jobs have been scheduled —
         per-device rows (jobs, estimated cycles, utilization relative to
-        the target's makespan)."""
+        the target's makespan). A thin view over the executor's metrics
+        registry — ``_record`` aggregates into per-target counters as
+        invocations happen, so this never re-scans ``self.stats``."""
         out: Dict[str, Dict[str, Any]] = {}
-        for s in self.stats:
-            tname = ir.accel_op_target(s.op) or s.backend
-            d = out.setdefault(
-                tname,
-                {"invocations": 0, "commands": 0, "max_rel_err": 0.0,
-                 "est_cycles": 0.0},
-            )
-            d["invocations"] += 1
-            d["commands"] += s.n_commands
-            d["max_rel_err"] = max(d["max_rel_err"], s.rel_err)
-            if s.est is not None:
-                d["est_cycles"] += s.est.cycles
+        for tname, (inv, cmds, cyc, rel) in self._inv_metrics.items():
+            if inv.value == 0 and cmds.value == 0:
+                continue  # reset since last use
+            out[tname] = {
+                "invocations": int(inv.value),
+                "commands": int(cmds.value),
+                "max_rel_err": rel.value,
+                "est_cycles": cyc.value,
+            }
         for tname, devs in self.devices.summary().items():
             out.setdefault(
                 tname,
@@ -1074,12 +1149,14 @@ class Executor:
         """Per-stage accumulated wall clock plus an overlap estimate:
         ``overlap_s`` is pack time hidden behind simulation (pack runs in
         the worker while the main thread dispatches/blocks), the pipelined
-        engine's whole win. All values reset with :meth:`reset_stats`."""
-        packed = self.stage_seconds["pack_s"]
-        busy = self.stage_seconds["dispatch_s"] + self.stage_seconds["readback_s"]
+        engine's whole win. All values reset with :meth:`reset_stats`.
+        A thin view over the registry's ``pipeline.*`` counters."""
+        stages = self.stage_seconds
+        packed = stages["pack_s"]
+        busy = stages["dispatch_s"] + stages["readback_s"]
         return dict(
-            self.stage_seconds,
-            groups=float(len(self.group_timings)),
+            stages,
+            groups=self._groups_ctr.value,
             overlap_s=(
                 min(packed, busy)
                 if self.engine in ("pipelined", "fused")

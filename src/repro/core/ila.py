@@ -75,6 +75,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .telemetry import TELEMETRY
+
 State = Dict[str, jnp.ndarray]
 
 # Reserved opcode: identity state update, used only for bucket padding. No
@@ -807,9 +809,13 @@ class FragmentCache:
             frag = self._entries.get(key)
             if frag is not None:
                 self.hits += 1
+                if TELEMETRY.enabled:
+                    TELEMETRY.counter("fragments.hits").inc()
                 self._entries.move_to_end(key)
                 return frag
             self.misses += 1
+            if TELEMETRY.enabled:
+                TELEMETRY.counter("fragments.misses").inc()
             frag = build()
             frag.key = key
             self._entries[key] = frag

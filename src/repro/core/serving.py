@@ -49,6 +49,7 @@ bench_serving.py`` measures QPS/latency percentiles under Poisson load.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -60,6 +61,7 @@ import numpy as np
 from . import ila, ir
 from .codegen import Executor
 from .ila import TARGETS
+from .telemetry import TELEMETRY, MetricsRegistry
 
 # request lifecycle states
 QUEUED = "queued"
@@ -73,6 +75,21 @@ FAILED = "failed"
 REJECT_QUEUE_FULL = "queue_full"
 REJECT_BACKLOG = "backlog"
 REJECT_SHUTDOWN = "shutdown"
+
+
+#: synthetic per-request lanes in the exported trace (rid mod _REQ_LANES):
+#: request-lifecycle spans overlap in time, so they render on their own
+#: timelines instead of breaking the dispatch thread's flame nesting
+_REQ_LANES = 16
+
+_NULL_CTX = contextlib.nullcontext()
+
+
+def _group_trace(group: Sequence["RequestHandle"]) -> str:
+    """The trace id shared by every span of one coalesced dispatch group —
+    ``req-3+4+5`` — so searching any member's ``req-<id>`` in Perfetto
+    finds the whole correlated flame."""
+    return "req-" + "+".join(str(h.id) for h in group)
 
 
 def request_rng(seed: int, request_id: int) -> np.random.Generator:
@@ -210,13 +227,28 @@ class CosimServer:
         self._stopping = False
         self._thread: Optional[threading.Thread] = None
         self._prev_ladder: Optional[str] = None
-        # serving statistics (guarded by _cond)
-        self._served = 0
         self._inflight_cycles = 0.0
-        self._batches = 0
-        self._coalesced_max = 1
-        self._rejected: Dict[str, int] = {}
-        self._latencies: List[float] = []
+        self._latencies: List[float] = []  # exact percentiles for summary()
+        # serving statistics live in this server's scoped metrics registry
+        # (attached to the process TELEMETRY singleton; summary() is a thin
+        # view). Counters/gauges are always on — they replace the previous
+        # ad-hoc dict accounting at the same cost; spans are enabled-gated.
+        self.metrics = TELEMETRY.attach(MetricsRegistry(scope="serving"))
+        self._m_served = self.metrics.counter("serving.served")
+        self._m_batches = self.metrics.counter("serving.batches")
+        self._m_submitted = self.metrics.counter("serving.submitted")
+        self._m_queue = self.metrics.gauge("serving.queue_depth")
+        self._m_backlog = self.metrics.gauge("serving.backlog_cycles")
+        self._m_inflight = self.metrics.gauge("serving.inflight_batch")
+        self._m_inflight_subs = self.metrics.gauge("serving.inflight_submissions")
+        self._m_coalesced_max = self.metrics.gauge("serving.coalesced_max")
+        self._m_coalesced_max.set(1.0)
+        self._m_latency = self.metrics.histogram("serving.latency_ms")
+        # predicted-vs-actual request pricing: actual served microseconds
+        # over admission-control est_cycles (1.0 == perfectly priced once
+        # the CostModel is latency-calibrated)
+        self._m_drift = self.metrics.histogram("serving.drift_ratio")
+        self._m_rejected: Dict[str, Any] = {}
 
     # -- application registry -------------------------------------------
     def add_program(self, name: str, program: ir.Expr,
@@ -319,9 +351,22 @@ class CosimServer:
                 self._queue.append(h)
                 self._cond.notify()
             if h.status == REJECTED:
-                self._rejected[h.reject_reason] = (
-                    self._rejected.get(h.reject_reason, 0) + 1
-                )
+                ctr = self._m_rejected.get(h.reject_reason)
+                if ctr is None:
+                    ctr = self._m_rejected[h.reject_reason] = (
+                        self.metrics.counter("serving.rejected",
+                                             reason=h.reject_reason)
+                    )
+                ctr.inc()
+            self._m_submitted.inc()
+            self._m_queue.set(len(self._queue))
+            self._m_backlog.set(self._backlog_cycles())
+        if TELEMETRY.enabled:
+            TELEMETRY.record_span(
+                "serving.admission", h.t_submit, time.perf_counter(),
+                trace_id=f"req-{rid}", rid=rid, app=app,
+                outcome=h.status if h.status == REJECTED else "accepted",
+                reason=h.reject_reason, est_cycles=round(h.est_cycles, 1))
         return h
 
     def _backlog_cycles(self) -> float:
@@ -345,6 +390,7 @@ class CosimServer:
                 self._cond.wait(timeout=0.05)
             if not self._queue:
                 return None
+            t0 = time.perf_counter()
             first = self._queue.popleft()
             group = [first]
             if self.coalesce:
@@ -358,6 +404,14 @@ class CosimServer:
                     self._queue.remove(h)
                 group += taken
             self._inflight_cycles += sum(h.est_cycles for h in group)
+            self._m_queue.set(len(self._queue))
+            self._m_backlog.set(self._backlog_cycles())
+        if TELEMETRY.enabled:
+            TELEMETRY.record_span(
+                "serving.coalesce", t0, time.perf_counter(),
+                trace_id=_group_trace(group), app=first.app,
+                requests=len(group),
+                samples=sum(len(h.envs) for h in group))
         return group
 
     def _loop(self) -> None:
@@ -381,20 +435,49 @@ class CosimServer:
                 h.coalesced_with = len(group) - 1
             a = self._apps[group[0].app]
             envs = [e for h in group for e in h.envs]
+            enabled = TELEMETRY.enabled
+            if enabled:
+                grp = _group_trace(group)
+                for h in group:
+                    # queue wait straddles threads (submit thread -> here):
+                    # recorded from explicit endpoints, on a synthetic
+                    # per-request lane so overlapping waits don't fight for
+                    # the dispatch thread's flame nesting
+                    TELEMETRY.record_span(
+                        "serving.queue_wait", h.t_submit, t_start,
+                        trace_id=grp, track=f"req:{h.id % _REQ_LANES}",
+                        rid=h.id)
+            self._m_inflight.set(len(envs))
             try:
                 if self._overlap_active():
                     # stage the new request's leading-node packing *before*
                     # paying any pending readback barrier: the pack worker
-                    # fills the barrier gap instead of idling
-                    pre = self.executor.prepack_many(a.program, envs)
-                    while len(inflight) >= self.max_inflight:
-                        self._finalize(*inflight.popleft())
-                    sub = self.executor.submit_many(a.program, envs, prepack=pre)
+                    # fills the barrier gap instead of idling. The group
+                    # trace id is bound thread-locally here so the executor
+                    # spans this triggers (pipeline.pack on the pack worker,
+                    # pipeline.dispatch_group, the deferred readback) stay
+                    # correlated with this group's serving spans.
+                    with TELEMETRY.trace(grp) if enabled else _NULL_CTX:
+                        with TELEMETRY.span("serving.prepack",
+                                            samples=len(envs)):
+                            pre = self.executor.prepack_many(a.program, envs)
+                        while len(inflight) >= self.max_inflight:
+                            self._finalize(*inflight.popleft())
+                        with TELEMETRY.span("serving.dispatch", app=a.name,
+                                            requests=len(group),
+                                            samples=len(envs)):
+                            sub = self.executor.submit_many(
+                                a.program, envs, prepack=pre)
                     inflight.append((sub, group))
+                    self._m_inflight_subs.set(len(inflight))
                 else:
                     # draining baseline: run to the assemble barrier and
                     # materialize before the next request is even dequeued
-                    outs = self.executor.run_many(a.program, envs)
+                    with TELEMETRY.trace(grp) if enabled else _NULL_CTX:
+                        with TELEMETRY.span("serving.dispatch", app=a.name,
+                                            requests=len(group),
+                                            samples=len(envs)):
+                            outs = self.executor.run_many(a.program, envs)
                     self._complete(group, outs)
             except Exception as e:  # a failed request must not kill the server
                 for h in group:
@@ -403,13 +486,21 @@ class CosimServer:
 
     def _finalize(self, sub, group: List[RequestHandle]) -> None:
         try:
-            self._complete(group, sub.result())
+            # sub.result() is the deferred assemble barrier: the simulation
+            # tail + readback of an overlapped submission is paid here
+            with TELEMETRY.span("serving.readback",
+                                trace_id=(_group_trace(group)
+                                          if TELEMETRY.enabled else None)):
+                outs = sub.result()
+            self._complete(group, outs)
         except Exception as e:
             for h in group:
                 self._retire(h)
                 h._finish(FAILED, error=e)
 
     def _complete(self, group: List[RequestHandle], outs: List[Any]) -> None:
+        enabled = TELEMETRY.enabled
+        t0 = time.perf_counter()
         o = 0
         for h in group:
             n = len(h.envs)
@@ -418,11 +509,30 @@ class CosimServer:
             h.t_done = time.perf_counter()
             self._retire(h)
             h._finish(DONE)
+        if enabled:
+            grp = _group_trace(group)
+            TELEMETRY.record_span(
+                "serving.deinterleave", t0, time.perf_counter(),
+                trace_id=grp, requests=len(group))
         with self._cond:
-            self._served += len(group)
-            self._batches += 1
-            self._coalesced_max = max(self._coalesced_max, len(group))
+            self._m_served.inc(len(group))
+            self._m_batches.inc()
+            self._m_coalesced_max.set_max(len(group))
             self._latencies += [h.latency_s for h in group]
+        for h in group:
+            lat = h.latency_s
+            self._m_latency.observe(lat * 1e3)
+            if h.est_cycles > 0 and h.t_start is not None:
+                # request drift: measured service microseconds over the
+                # est_cycles admission control priced the request at
+                self._m_drift.observe(
+                    (h.t_done - h.t_start) * 1e6 / h.est_cycles)
+            if enabled:
+                TELEMETRY.record_span(
+                    "serving.request", h.t_submit, h.t_done, trace_id=grp,
+                    track=f"req:{h.id % _REQ_LANES}", rid=h.id, app=h.app,
+                    coalesced_with=h.coalesced_with,
+                    latency_ms=round(lat * 1e3, 3))
 
     def _retire(self, h: RequestHandle) -> None:
         with self._cond:
@@ -496,15 +606,19 @@ class CosimServer:
     def summary(self) -> Dict[str, Any]:
         """Serving statistics: served/rejected counts, dispatch batches,
         coalescing reach, and latency percentiles (ms) over completed
-        requests."""
+        requests. A thin view over the server's metrics registry (the
+        ``serving.*`` names documented in docs/observability.md)."""
         with self._cond:
             lat = np.asarray(self._latencies, dtype=np.float64)
+            served = int(self._m_served.value)
+            batches = int(self._m_batches.value)
             out: Dict[str, Any] = {
-                "served": self._served,
-                "batches": self._batches,
-                "coalesced_max": self._coalesced_max,
-                "mean_batch": (self._served / self._batches) if self._batches else 0.0,
-                "rejected": dict(self._rejected),
+                "served": served,
+                "batches": batches,
+                "coalesced_max": int(self._m_coalesced_max.value),
+                "mean_batch": (served / batches) if batches else 0.0,
+                "rejected": {r: int(c.value)
+                             for r, c in self._m_rejected.items()},
                 "queued": len(self._queue),
             }
         if lat.size:

@@ -96,10 +96,21 @@ def main() -> None:
                          "(also the per-mutant checkpoint file)")
     ap.add_argument("--resume", action="store_true",
                     help="continue from the --json checkpoint if present")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record telemetry spans (per-mutant tier spans; "
+                         "sharded workers ship theirs back per result) and "
+                         "export a Perfetto trace_event JSON at exit")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="export a JSON snapshot of the telemetry metrics "
+                         "(escape counters, mutant_s histogram, throughput)")
     args = ap.parse_args()
 
     # importing repro.accel registers the bundled targets
     from .. import accel  # noqa: F401
+    from ..core.telemetry import TELEMETRY
+
+    if args.trace:
+        TELEMETRY.enable()
 
     params = dict(
         targets=_csv(args.targets),
@@ -141,6 +152,14 @@ def main() -> None:
             json.dump(result.to_json(), f, indent=1, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json}")
+    if args.trace:
+        path = TELEMETRY.export_trace(args.trace)
+        print(f"trace: {TELEMETRY.spans_recorded} span(s) "
+              f"({TELEMETRY.spans_dropped} dropped) -> {path}")
+    if args.metrics:
+        bad = TELEMETRY.check_names()
+        assert not bad, f"metric names violate the documented schema: {bad}"
+        print(f"metrics: -> {TELEMETRY.export_metrics(args.metrics)}")
 
 
 if __name__ == "__main__":

@@ -68,6 +68,12 @@ def serve_cosim(args) -> None:
     from ..core import apps, ila
     from ..core.compile import compile_program
     from ..core.serving import CosimServer, percentiles_ms
+    from ..core.telemetry import TELEMETRY
+
+    if args.trace:
+        # span recording (Perfetto export at exit); metrics counters are
+        # always on — this only turns on the timed-region ring buffer
+        TELEMETRY.enable()
 
     by_name = {k.lower(): v for k, v in apps.APPLICATIONS.items()}
     if args.cosim.lower() not in by_name:
@@ -176,6 +182,42 @@ def serve_cosim(args) -> None:
               f"/ readback {stages['readback_s']:.3f}s "
               f"(overlap ~{stages['overlap_s']:.3f}s)")
     print("\ncache health:", ex.cache_info())
+
+    # drift probes: how far the CostModel's pricing sits from measured
+    # latency (docs/observability.md, "Drift probes") — request-level
+    # drift is in the serving.drift_ratio histogram of --metrics
+    from ..core.ila import TARGETS
+    drifts = {
+        t.name: t.cost_model.drift_summary()
+        for t in TARGETS.all()
+        if t.cost_model is not None and t.cost_model.drift_summary()
+    }
+    if drifts:
+        print("cost-model drift (actual us / predicted cycles):")
+        for tname, d in sorted(drifts.items()):
+            print(f"  {tname}: geomean {d['ratio_geomean']:.2f} "
+                  f"(spread {d['log_ratio_std']:.2f}, n={d['n']:.0f}, "
+                  f"{'latency-calibrated' if d['calibrated'] else 'analytic'})")
+    else:
+        # pipelined serving: per-group drift needs a synchronous
+        # materialize (and warmup calibration just reset the probes), so
+        # fall back to the request-level ratio admission control ran under
+        dr = server.metrics.find("serving.drift_ratio")
+        if dr and dr[0].snapshot()["count"]:
+            s = dr[0].snapshot()
+            print(f"admission drift (service us / priced cycles): "
+                  f"p50 {s['p50']:.2f} p95 {s['p95']:.2f} "
+                  f"(n={s['count']}, latency-calibrated)")
+
+    if args.trace:
+        path = TELEMETRY.export_trace(args.trace)
+        print(f"trace: {TELEMETRY.spans_recorded} span(s) "
+              f"({TELEMETRY.spans_dropped} dropped) -> {path} "
+              f"(open in https://ui.perfetto.dev or chrome://tracing)")
+    if args.metrics:
+        bad = TELEMETRY.check_names()
+        assert not bad, f"metric names violate the documented schema: {bad}"
+        print(f"metrics: -> {TELEMETRY.export_metrics(args.metrics)}")
     if mesh is not None:
         ila.set_stream_mesh(None)
 
@@ -255,6 +297,12 @@ def main():
     ap.add_argument("--no-overlap", action="store_true",
                     help="drain the pipeline at every request's assemble "
                          "barrier (pre-serving baseline)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record telemetry spans and export a Perfetto/"
+                         "chrome://tracing trace_event JSON at exit")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="export a JSON snapshot of every telemetry metric "
+                         "(counters/gauges/histograms) at exit")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=16)
